@@ -1,0 +1,25 @@
+"""Shared benchmark plumbing: CSV rows `name,us_per_call,derived`."""
+from __future__ import annotations
+
+import os
+import sys
+import time
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+FULL = os.environ.get("REPRO_BENCH_FULL", "0") == "1"
+
+
+def row(name: str, us_per_call: float, derived: str = "") -> str:
+    line = f"{name},{us_per_call:.2f},{derived}"
+    print(line, flush=True)
+    return line
+
+
+def timed(fn, *args, repeat: int = 1, **kw):
+    t0 = time.time()
+    out = None
+    for _ in range(repeat):
+        out = fn(*args, **kw)
+    dt = (time.time() - t0) / repeat
+    return out, dt * 1e6

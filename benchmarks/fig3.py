@@ -1,0 +1,57 @@
+"""Paper Figure 3: the two instability examples.
+
+3a: 1 server, sizes {0.4, 0.6} equal prob, Poisson 0.014, geometric mean 100
+    -> VQS unstable (rate > (2/3)*0.02), BF-J/S & VQS-BF stable.
+3b: capacity 10, sizes {2, 5} probs (2/3, 1/3), rate 0.0306, FIXED 100
+    -> VQS stable, BF-J/S & VQS-BF drift (mixed-packing lock-in).
+
+Derived value: tail-queue ratio unstable/stable (>> 1 reproduces the figure).
+"""
+from __future__ import annotations
+
+from common import FULL, row, timed
+
+from repro.core import (BFJS, Discrete, ServiceModel, VQS, VQSBF, simulate)
+
+
+def fig3a(horizon=None):
+    horizon = horizon or (1_000_000 if FULL else 200_000)
+    dist = Discrete([0.4, 0.6], [0.5, 0.5])
+    svc = ServiceModel("geometric", 100.0)
+    out = {}
+    for name, mk in (("bf-js", BFJS), ("vqs", lambda: VQS(J=2)),
+                     ("vqs-bf", lambda: VQSBF(J=2))):
+        res, us = timed(simulate, mk(), L=1, lam=0.014, dist=dist,
+                        service=svc, horizon=horizon, seed=11)
+        out[name] = res
+        row(f"fig3a/{name}", us / horizon,
+            f"tail_Q={res.mean_queue_tail:.1f}")
+    ratio = out["vqs"].mean_queue_tail / max(out["bf-js"].mean_queue_tail, 1e-9)
+    row("fig3a/instability_ratio", 0.0, f"vqs_over_bfjs={ratio:.1f}")
+    return out
+
+
+def fig3b(horizon=None):
+    horizon = horizon or (2_000_000 if FULL else 400_000)
+    dist = Discrete([0.2, 0.5], [2 / 3, 1 / 3])
+    svc = ServiceModel("fixed", 100.0)
+    out = {}
+    for name, mk in (("bf-js", BFJS), ("vqs", lambda: VQS(J=3)),
+                     ("vqs-bf", lambda: VQSBF(J=3))):
+        res, us = timed(simulate, mk(), L=1, lam=0.0306, dist=dist,
+                        service=svc, horizon=horizon, seed=7)
+        out[name] = res
+        row(f"fig3b/{name}", us / horizon,
+            f"tail_Q={res.mean_queue_tail:.1f}")
+    ratio = out["bf-js"].mean_queue_tail / max(out["vqs"].mean_queue_tail, 1e-9)
+    row("fig3b/instability_ratio", 0.0, f"bfjs_over_vqs={ratio:.1f}")
+    return out
+
+
+def main():
+    fig3a()
+    fig3b()
+
+
+if __name__ == "__main__":
+    main()

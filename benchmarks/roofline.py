@@ -1,0 +1,146 @@
+"""Roofline analysis over the dry-run artifacts (§Roofline of the brief).
+
+For each (arch x shape x mesh) JSON produced by repro.launch.dryrun:
+    compute term    = HLO_FLOPs_per_chip / 197e12
+    memory term     = HLO_bytes_per_chip / 819e9
+    collective term = collective_bytes_per_chip / 50e9
+(cost_analysis reports the per-partition SPMD program, i.e. per-chip.)
+
+Also: MODEL_FLOPS = 6*N*D (dense) or 6*N_active*D (MoE) for train cells,
+2*N_active*tokens for decode/prefill forward-only cells, the useful-compute
+ratio MODEL_FLOPS / (chips * HLO_FLOPs), the dominant term, and a one-line
+"what would move it" note.
+"""
+from __future__ import annotations
+
+import json
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.configs import get_config  # noqa: E402
+from repro.launch.mesh import HBM_BW, ICI_BW, PEAK_FLOPS_BF16  # noqa: E402
+
+RESULTS = os.path.join(os.path.dirname(__file__), "results", "dryrun")
+
+
+def model_flops(arch: str, kind: str, seq_len: int, batch: int) -> float:
+    cfg = get_config(arch)
+    counts = cfg.param_counts()
+    n_active = counts["active"]
+    if kind == "train":
+        return 6.0 * n_active * seq_len * batch
+    if kind == "prefill":
+        return 2.0 * n_active * seq_len * batch
+    # decode: one token per sequence + attention cache read-derived flops
+    flops = 2.0 * n_active * batch
+    # attention over the cache: 2 * 2 * H*hd * S per attn layer per seq
+    H, hd = cfg.num_heads, cfg.resolved_head_dim
+    n_attn = sum(1 for i in range(cfg.num_layers)
+                 if cfg.mixer_kind(i) in ("attn", "mla"))
+    eff_s = min(seq_len, cfg.sliding_window) if cfg.sliding_window else seq_len
+    flops += 4.0 * n_attn * H * hd * eff_s * batch
+    return flops
+
+
+def dominant_note(which: str, rec: dict) -> str:
+    src = rec.get("cost_exact") or rec
+    ag = src["collectives"]["bytes_by_op"].get("all-gather", 0)
+    notes = {
+        "compute": "compute-bound: better MXU utilization (larger fused "
+                   "matmuls, bf16 accum) or fewer remat recomputes",
+        "memory": "HBM-bound: cut activation traffic (fused kernels, "
+                  "smaller remat policy, bf16 master weights)",
+        "collective": f"ICI-bound (all-gather {ag/1e9:.1f} GB): coarser FSDP "
+                      "axis / overlap collectives with compute / 8-bit "
+                      "gradient compression",
+    }
+    return notes[which]
+
+
+def analyze(path: str) -> dict | None:
+    with open(path) as f:
+        rec = json.load(f)
+    # prefer the trip-count-exact cost model (see launch/dryrun.py); the
+    # production compile prices while-loop bodies once.
+    exact = rec.get("cost_exact")
+    if exact and "flops" in exact.get("cost_analysis", {}):
+        ca = exact["cost_analysis"]
+        coll_rec = exact["collectives"]
+        coll = coll_rec["total_bytes"]      # already per-chip (SPMD program)
+    else:
+        ca = rec.get("cost_analysis", {})
+        coll_rec = rec["collectives"]
+        coll = coll_rec["total_bytes"]
+    flops = ca.get("flops", 0.0)
+    bytes_acc = ca.get("bytes accessed", 0.0)
+    if not flops:
+        return None
+    chips = rec["chips"]
+    t_c = flops / PEAK_FLOPS_BF16
+    t_m = bytes_acc / HBM_BW
+    t_x = coll / ICI_BW
+    which = max((("compute", t_c), ("memory", t_m), ("collective", t_x)),
+                key=lambda kv: kv[1])[0]
+    mf = model_flops(rec["arch"], rec["kind"], rec["seq_len"],
+                     rec["global_batch"])
+    useful = mf / (chips * flops) if flops else 0.0
+    bound = max(t_c, t_m, t_x)
+    return {
+        "arch": rec["arch"], "shape": rec["shape"], "mesh": rec["mesh"],
+        "chips": chips,
+        "compute_s": t_c, "memory_s": t_m, "collective_s": t_x,
+        "dominant": which,
+        "model_flops": mf,
+        "useful_ratio": useful,
+        "roofline_frac": (mf / PEAK_FLOPS_BF16 / chips) / bound if bound else 0,
+        "note": dominant_note(which, rec),
+        "collective_count": coll_rec["total_count"],
+    }
+
+
+def run(out_csv: str | None = None, mesh_filter: str = "pod") -> list[dict]:
+    rows = []
+    if not os.path.isdir(RESULTS):
+        print("no dry-run results; run python -m repro.launch.dryrun --all")
+        return rows
+    for name in sorted(os.listdir(RESULTS)):
+        if not name.endswith(".json"):
+            continue
+        if mesh_filter and not name.endswith(f"__{mesh_filter}.json"):
+            continue
+        row = analyze(os.path.join(RESULTS, name))
+        if row:
+            rows.append(row)
+    if out_csv:
+        import csv
+        with open(out_csv, "w", newline="") as f:
+            w = csv.DictWriter(f, fieldnames=list(rows[0].keys()))
+            w.writeheader()
+            w.writerows(rows)
+    return rows
+
+
+def format_table(rows: list[dict]) -> str:
+    hdr = (f"{'arch':<24}{'shape':<13}{'compute_s':>10}{'memory_s':>10}"
+           f"{'coll_s':>9}{'dom':>6}{'useful':>8}{'roof%':>7}")
+    lines = [hdr, "-" * len(hdr)]
+    for r in rows:
+        lines.append(
+            f"{r['arch']:<24}{r['shape']:<13}{r['compute_s']:>10.4f}"
+            f"{r['memory_s']:>10.4f}{r['collective_s']:>9.4f}"
+            f"{r['dominant'][:4]:>6}{r['useful_ratio']:>8.2f}"
+            f"{100*r['roofline_frac']:>6.1f}%")
+    return "\n".join(lines)
+
+
+def main():
+    out = os.path.join(os.path.dirname(__file__), "results", "roofline.csv")
+    rows = run(out)
+    print(format_table(rows))
+    print(f"\n{len(rows)} cells -> {out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,35 @@
+# One function per paper table/figure. Prints ``name,us_per_call,derived``
+# CSV rows.  REPRO_BENCH_FULL=1 runs paper-scale horizons (Fig 5: 10^6 tasks
+# on 1000 servers); the default is a CI-sized slice of every experiment.
+import os
+import sys
+
+sys.path.insert(0, os.path.dirname(__file__))
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main() -> None:
+    print("name,us_per_call,derived")
+    import fig3
+    fig3.main()
+    import fig4
+    fig4.main()
+    import fig5
+    fig5.main()
+    import stability_bench
+    stability_bench.main()
+    import sched_micro
+    sched_micro.main()
+    # roofline table from the dry-run artifacts (if generated)
+    import roofline
+    rows = roofline.run(os.path.join(os.path.dirname(__file__), "results",
+                                     "roofline.csv"))
+    for r in rows:
+        from common import row
+        row(f"roofline/{r['arch']}/{r['shape']}", 0.0,
+            f"dom={r['dominant']};useful={r['useful_ratio']:.2f};"
+            f"roof={100 * r['roofline_frac']:.1f}%")
+
+
+if __name__ == "__main__":
+    main()

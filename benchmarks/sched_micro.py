@@ -1,0 +1,62 @@
+"""Scheduler microbenchmarks: placement throughput of the three engines
+(event-driven numpy, pure-JAX, Pallas interpret) + rho* LP timing."""
+from __future__ import annotations
+
+import numpy as np
+
+from common import row, timed
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import (BFJS, ServiceModel, Uniform, simulate,
+                        rho_star_discrete)
+from repro.core.jax_sched import best_fit_place, run_bfjs
+from repro.kernels.best_fit.best_fit import best_fit_pallas
+
+
+def main():
+    # numpy event-driven engine: jobs/sec at trace-like load
+    dist = Uniform(0.05, 0.5)
+    svc = ServiceModel("geometric", 100.0)
+    horizon = 50_000
+    res, us = timed(simulate, BFJS(), L=100, lam=2.0, dist=dist, service=svc,
+                    horizon=horizon, seed=0)
+    row("micro/numpy_bfjs", us / horizon,
+        f"jobs_per_sec={res.departed / (us / 1e6):.0f}")
+
+    # JAX scan engine (jit, CPU)
+    def sampler(key, n):
+        return jax.random.uniform(key, (n,), minval=0.05, maxval=0.5)
+
+    fn = lambda: run_bfjs(jax.random.PRNGKey(0), lam=1.5, mu=0.01,
+                          sampler=sampler, L=16, K=24, Qcap=512, A_max=8,
+                          horizon=5_000).queue_len.block_until_ready()
+    fn()  # compile
+    _, us = timed(fn)
+    row("micro/jax_bfjs_slot", us / 5_000, "engine=lax.scan")
+
+    # best-fit placement kernels: jnp scan vs Pallas(interpret)
+    resid = jax.random.uniform(jax.random.PRNGKey(1), (1024,))
+    sizes = jax.random.uniform(jax.random.PRNGKey(2), (256,), minval=0.01,
+                               maxval=0.3)
+    jp = jax.jit(best_fit_place)
+    jp(resid, sizes)[0].block_until_ready()
+    _, us = timed(lambda: jp(resid, sizes)[0].block_until_ready(), repeat=5)
+    row("micro/best_fit_jnp", us / 256, "per_job;L=1024")
+    best_fit_pallas(resid, sizes, interpret=True)
+    _, us = timed(lambda: best_fit_pallas(resid, sizes, interpret=True)[0]
+                  .block_until_ready(), repeat=2)
+    row("micro/best_fit_pallas_interp", us / 256,
+        "per_job;interpret-mode(correctness-only)")
+
+    # rho* LP
+    sizes_t = np.array([0.15, 0.23, 0.31, 0.47, 0.62])
+    probs = np.full(5, 0.2)
+    _, us = timed(rho_star_discrete, sizes_t, probs, 4)
+    r = rho_star_discrete(sizes_t, probs, 4)
+    row("micro/rho_star_lp_5types", us, f"rho*={r:.3f}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,54 @@
+"""End-to-end serving driver: a small LM served with batched requests under
+the paper's BF-J/S admission control.
+
+Requests with random prompt/generation lengths are jobs with random KV-memory
+requirements; replicas are the paper's unit-capacity servers.  The engine
+prints queue/occupancy traces — the same observables as the paper's figures.
+
+    PYTHONPATH=src python examples/serve_cluster.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import jax
+import numpy as np
+
+from repro.configs import get_smoke_config
+from repro.models import model as M
+from repro.serving.engine import Request, ServingEngine
+
+cfg = get_smoke_config("llama3-8b")
+params = M.init_params(cfg, jax.random.PRNGKey(0))
+
+engine = ServingEngine(cfg, params, num_replicas=3, b_slots=4, c_max=96)
+rng = np.random.default_rng(0)
+
+# Three arrival waves with heavy-tailed lengths (the paper's point: the
+# size distribution is unknown and effectively continuous).
+rid = 0
+for wave in range(3):
+    n = int(rng.integers(6, 14))
+    reqs = []
+    for _ in range(n):
+        plen = int(np.clip(rng.lognormal(2.5, 0.8), 4, 64))
+        gen = int(np.clip(rng.lognormal(2.0, 0.7), 2, 24))
+        reqs.append(Request(rid=rid,
+                            prompt=rng.integers(1, cfg.vocab_size,
+                                                size=plen).astype(np.int32),
+                            max_new=gen))
+        rid += 1
+    engine.submit(reqs)
+    print(f"wave {wave}: submitted {n} requests "
+          f"(queued {engine.admission.queue_len()})")
+    for _ in range(40):
+        engine.step()
+
+done = engine.run(max_steps=2000)
+q = engine.stats["queue_len"]
+print(f"\ncompleted {len(done)}/{rid} requests")
+print(f"admission queue: max {max(q)}, final {q[-1]}")
+print(f"batch-slot rejections (memory ok, no slot): "
+      f"{engine.stats['rejected_slots']}")
+print("sample output:", done[0].out[:8])

@@ -1,0 +1,151 @@
+"""Checkpointing: atomic, async-capable, elastic.
+
+Layout:  <dir>/step_<N>/arrays.npz  + manifest.json
+  * arrays are stored with LOGICAL (unsharded) shapes keyed by pytree path,
+    so restore onto a different mesh / device count just re-applies the
+    sharding rules — that is the elastic-rescale path (lose a pod, restore
+    onto the survivors);
+  * writes go to step_<N>.tmp then rename (atomic on POSIX);
+  * ``save_async`` runs the host-side write in a thread so the training
+    loop only blocks for the device->host copy.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import threading
+import time
+from typing import Any
+
+import jax
+import numpy as np
+
+SEP = "/"
+
+
+def _flatten(tree) -> dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        keys = []
+        for p in path:
+            if hasattr(p, "key"):
+                keys.append(str(p.key))
+            elif hasattr(p, "name"):
+                keys.append(str(p.name))
+            elif hasattr(p, "idx"):
+                keys.append(str(p.idx))
+        flat[SEP.join(keys)] = np.asarray(leaf)
+    return flat
+
+
+def _tree_def(tree):
+    return jax.tree_util.tree_structure(tree)
+
+
+def save(directory: str, step: int, state: Any, extra: dict | None = None
+         ) -> str:
+    """Blocking save. `state` is any pytree of arrays."""
+    final = os.path.join(directory, f"step_{step:08d}")
+    tmp = final + ".tmp"
+    os.makedirs(tmp, exist_ok=True)
+    flat = _flatten(state)
+    np.savez(os.path.join(tmp, "arrays.npz"), **flat)
+    manifest = {
+        "step": step,
+        "time": time.time(),
+        "num_arrays": len(flat),
+        "total_bytes": int(sum(a.nbytes for a in flat.values())),
+        "extra": extra or {},
+    }
+    with open(os.path.join(tmp, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    return final
+
+
+class AsyncCheckpointer:
+    """Device->host copy on the caller thread; disk write in background."""
+
+    def __init__(self, directory: str, keep: int = 3):
+        self.directory = directory
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+        self._error: BaseException | None = None
+
+    def save(self, step: int, state: Any, extra: dict | None = None) -> None:
+        self.wait()
+        host_state = jax.tree.map(np.asarray, state)  # sync copy out
+
+        def work():
+            try:
+                save(self.directory, step, host_state, extra)
+                self._gc()
+            except BaseException as e:  # surfaced on next wait()
+                self._error = e
+
+        self._thread = threading.Thread(target=work, daemon=True)
+        self._thread.start()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise err
+
+    def _gc(self) -> None:
+        steps = sorted(list_steps(self.directory))
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.directory, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+
+def list_steps(directory: str) -> list[int]:
+    if not os.path.isdir(directory):
+        return []
+    out = []
+    for name in os.listdir(directory):
+        if name.startswith("step_") and not name.endswith(".tmp"):
+            try:
+                out.append(int(name[5:]))
+            except ValueError:
+                pass
+    return sorted(out)
+
+
+def latest_step(directory: str) -> int | None:
+    steps = list_steps(directory)
+    return steps[-1] if steps else None
+
+
+def restore(directory: str, step: int, like: Any, shardings: Any | None = None
+            ) -> Any:
+    """Restore into the structure of `like` (a pytree of arrays or
+    ShapeDtypeStructs).  If `shardings` is given (pytree of NamedSharding),
+    arrays are device_put with them — restoring onto a different mesh than
+    the one that saved is supported because stored shapes are logical."""
+    path = os.path.join(directory, f"step_{step:08d}", "arrays.npz")
+    data = np.load(path)
+    flat_like = _flatten(like)
+    missing = set(flat_like) - set(data.files)
+    if missing:
+        raise KeyError(f"checkpoint missing arrays: {sorted(missing)[:5]}...")
+    leaves_like, treedef = jax.tree_util.tree_flatten(like)
+    keys = list(_flatten(like).keys())
+    arrays = [data[k] for k in keys]
+    restored = jax.tree_util.tree_unflatten(treedef, arrays)
+    if shardings is not None:
+        restored = jax.tree.map(
+            lambda a, s: jax.device_put(a, s), restored, shardings)
+    else:
+        restored = jax.tree.map(jax.numpy.asarray, restored)
+    return restored
+
+
+def read_manifest(directory: str, step: int) -> dict:
+    with open(os.path.join(directory, f"step_{step:08d}", "manifest.json")) as f:
+        return json.load(f)

@@ -1,0 +1,101 @@
+"""Admission control = the paper's scheduling problem, verbatim.
+
+A serving fleet of L replicas is the paper's cluster of L unit-capacity
+servers; an inference request with (prompt + budgeted generation) tokens
+occupies a FRACTION of a replica's KV-cache memory — a job with random
+resource requirement R in (0, 1] drawn from an unknown distribution (users
+decide prompt lengths).  Service time = generation length (geometric-ish).
+The controller therefore runs BF-J/S (Theorem 2) or VQS-BF (Theorem 4)
+UNCHANGED on the replica residuals.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+import numpy as np
+
+from repro.core.partition import PartitionI, k_red
+from repro.core.quantize import RES, to_grid
+
+
+@dataclass
+class PendingJob:
+    rid: int
+    frac: float              # KV fraction of one replica (paper's R_j)
+    size: int = 0            # grid units
+
+    def __post_init__(self):
+        self.size = int(to_grid([self.frac])[0])
+
+
+@dataclass
+class AdmissionController:
+    """Best-Fit (BF-J/S-style) admission over replica residual capacity.
+
+    replicas' residuals are tracked in paper grid units; `admit` is the
+    BF-J pass over new requests, `refill(replica)` is the BF-S pass run
+    when a replica frees memory (request completes).
+    """
+
+    num_replicas: int
+    policy: str = "bf"          # bf | vqs-bf | fifo
+    J: int = 6
+    queue: list[PendingJob] = field(default_factory=list)
+    residual: np.ndarray = None
+    _vq_sizes: np.ndarray = None
+    _active_cfg: list = None
+
+    def __post_init__(self):
+        self.residual = np.full(self.num_replicas, RES, dtype=np.int64)
+        self.part = PartitionI(self.J)
+        self._kred = k_red(self.J)
+        self._vq_sizes = np.zeros(2 * self.J, dtype=np.int64)
+        self._active_cfg = [None] * self.num_replicas
+
+    # -- paper scheduling -------------------------------------------------
+    def _best_fit_server(self, size: int) -> int:
+        feas = self.residual >= size
+        if not feas.any():
+            return -1
+        masked = np.where(feas, self.residual, np.iinfo(np.int64).max)
+        return int(np.argmin(masked))
+
+    def admit(self, jobs: list[PendingJob]) -> list[tuple[int, int]]:
+        """BF-J over new requests; returns [(rid, replica)] placements."""
+        placed = []
+        for job in jobs:
+            r = self._best_fit_server(job.size)
+            if r >= 0:
+                self.residual[r] -= job.size
+                placed.append((job.rid, r))
+            else:
+                self.queue.append(job)
+                self._vq_sizes[self.part.type_of_scalar(job.size)] += 1
+        return placed
+
+    def refill(self, replica: int) -> list[tuple[int, int]]:
+        """BF-S over the queue after memory was released on `replica`."""
+        placed = []
+        while self.queue:
+            fits = [j for j in self.queue if j.size <= self.residual[replica]]
+            if not fits:
+                break
+            job = max(fits, key=lambda j: j.size)   # largest fitting first
+            self.queue.remove(job)
+            self._vq_sizes[self.part.type_of_scalar(job.size)] -= 1
+            self.residual[replica] -= job.size
+            placed.append((job.rid, replica))
+        return placed
+
+    def release(self, replica: int, size: int) -> None:
+        self.residual[replica] += size
+        assert self.residual[replica] <= RES
+
+    def queue_len(self) -> int:
+        return len(self.queue)
+
+    def max_weight_config(self):
+        """Paper Eq. (8) over the controller's virtual queues (VQS-BF mode
+        renews replica configurations with this at empty epochs)."""
+        w = self._kred @ self._vq_sizes
+        return self._kred[int(np.argmax(w))]

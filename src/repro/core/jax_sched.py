@@ -1,0 +1,239 @@
+"""Accelerator-resident scheduling engine (pure JAX).
+
+The event-driven numpy engine (simulator.py) is exact and fast on hosts; this
+module re-expresses the paper's BF-J/S scheduler as a fixed-shape, branch-free
+``lax.scan`` program so it can run ON the accelerator:
+
+  * Monte-Carlo stability studies: ``vmap`` over seeds/workloads gives
+    thousands of independent cluster simulations per device;
+  * on-device admission control: the serving engine calls
+    ``best_fit_place`` / ``max_weight_config_jax`` inside jitted control
+    loops (optionally via the Pallas kernel in kernels/best_fit).
+
+Fixed-capacity redesign (documented deviation from the unbounded queueing
+model): the queue is a ``Qcap``-slot buffer and arrivals beyond ``A_max`` per
+slot are dropped AND COUNTED (``dropped`` in the result) — runs whose drop
+count is nonzero must be treated as saturated, not stable.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .partition import k_red
+
+INF_SLOT = jnp.iinfo(jnp.int32).max
+
+
+# ---------------------------------------------------------------------------
+# primitive scheduling ops (shared with the serving engine)
+# ---------------------------------------------------------------------------
+def best_fit_server(residuals: jax.Array, size: jax.Array) -> jax.Array:
+    """Tightest feasible server for one job: argmin residual among residuals
+    >= size; returns -1 if none fits. O(L) vectorized."""
+    feasible = residuals >= size
+    masked = jnp.where(feasible, residuals, jnp.inf)
+    idx = jnp.argmin(masked)
+    return jnp.where(feasible.any(), idx, -1)
+
+
+def best_fit_place(residuals: jax.Array, sizes: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Sequentially Best-Fit place a batch of jobs (pure-jnp reference used by
+    the serving engine; kernels/best_fit provides the Pallas TPU version).
+
+    Returns (assignment (N,) int32 with -1 = rejected, new residuals)."""
+
+    def body(resid, size):
+        srv = best_fit_server(resid, size)
+        ok = srv >= 0
+        resid = jnp.where(ok, resid.at[srv].add(-size), resid)
+        return resid, jnp.where(ok, srv, -1)
+
+    new_resid, assign = jax.lax.scan(body, residuals, sizes)
+    return assign.astype(jnp.int32), new_resid
+
+
+def largest_fitting_job(queue: jax.Array, cap: jax.Array) -> jax.Array:
+    """Index of the largest queued job with size <= cap (BF-S step);
+    -1 if none. Zero entries mean empty queue slots."""
+    fits = (queue > 0) & (queue <= cap)
+    masked = jnp.where(fits, queue, -jnp.inf)
+    idx = jnp.argmax(masked)
+    return jnp.where(fits.any(), idx, -1)
+
+
+def max_weight_config_jax(J: int, vq_sizes: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """argmax_{k in K_RED^{(J)}} <k, Q>  (paper Eq. 8), jit/vmap-friendly."""
+    confs = jnp.asarray(k_red(J))
+    w = confs @ vq_sizes.astype(jnp.int32)
+    i = jnp.argmax(w)
+    return i, confs[i]
+
+
+def vq_type_of(sizes: jax.Array, J: int) -> jax.Array:
+    """Partition-I type of float sizes in (0,1] (vectorized, jittable)."""
+    m = jnp.clip(jnp.floor(-jnp.log2(jnp.maximum(sizes, 1e-9))), 0, J - 1)
+    # size in (2^-(m+1), 2^-m]: fix boundary where size == 2^-m exactly
+    upper = jnp.exp2(-m)
+    m = jnp.where(sizes > upper, m - 1, m).astype(jnp.int32)
+    upper = jnp.exp2(-m.astype(sizes.dtype))
+    even = 3.0 * sizes > 2.0 * upper
+    t = jnp.where(even, 2 * m, 2 * m + 1)
+    return jnp.where(sizes <= 2.0 ** (-J), 2 * J - 1, t).astype(jnp.int32)
+
+
+# ---------------------------------------------------------------------------
+# BF-J/S cluster simulation as a lax.scan
+# ---------------------------------------------------------------------------
+class BFJSState(NamedTuple):
+    srv: jax.Array       # (L, K) float32 job sizes in servers (0 = empty slot)
+    dep: jax.Array       # (L, K) int32 departure slot (INF_SLOT when empty)
+    queue: jax.Array     # (Qcap,) float32 queued sizes (0 = empty)
+    dropped: jax.Array   # () int32 arrivals dropped by the fixed-size buffer
+    key: jax.Array
+
+
+class BFJSResult(NamedTuple):
+    queue_len: jax.Array   # (T,) int32
+    occupancy: jax.Array   # (T,) float32 total occupied capacity
+    departed: jax.Array    # (T,) int32 cumulative departures
+    dropped: jax.Array     # () int32
+
+
+def _geometric(key: jax.Array, mu: float, shape=()) -> jax.Array:
+    u = jax.random.uniform(key, shape, minval=1e-7, maxval=1.0)
+    return jnp.maximum(jnp.ceil(jnp.log(u) / jnp.log1p(-mu)), 1.0).astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("sampler", "L", "K", "Qcap", "A_max", "horizon"),
+)
+def run_bfjs(key: jax.Array,
+             lam: float,
+             mu: float,
+             sampler: Callable[[jax.Array, int], jax.Array],
+             L: int = 8,
+             K: int = 16,
+             Qcap: int = 512,
+             A_max: int = 8,
+             horizon: int = 10_000) -> BFJSResult:
+    """Simulate BF-J/S on L unit-capacity servers for `horizon` slots.
+
+    sampler(key, n) -> (n,) float sizes in (0,1].  vmap over `key` for
+    Monte-Carlo ensembles.
+    """
+
+    def place_in_server(srv_i, dep_i, size, dslot):
+        slot = jnp.argmax(srv_i == 0.0)
+        return srv_i.at[slot].set(size), dep_i.at[slot].set(dslot)
+
+    def slot_step(state: BFJSState, t: jax.Array):
+        srv, dep, queue, dropped, key = state
+        key, k_arr, k_n, k_sizes, k_dur = jax.random.split(key, 5)
+
+        # 1. departures
+        leaving = dep == t
+        freed = leaving.any(axis=1)
+        n_dep = leaving.sum()
+        srv = jnp.where(leaving, 0.0, srv)
+        dep = jnp.where(leaving, INF_SLOT, dep)
+
+        # 2. arrivals -> queue (record the slots they landed in)
+        n = jnp.minimum(jax.random.poisson(k_n, lam), A_max)
+        sizes = sampler(k_sizes, A_max)
+        valid = jnp.arange(A_max) < n
+        empty_slots = jnp.nonzero(queue == 0.0, size=A_max, fill_value=Qcap)[0]
+        landed = valid & (empty_slots < Qcap)
+        dropped = dropped + (valid & ~landed).sum()
+        queue = queue.at[jnp.where(landed, empty_slots, Qcap)].set(
+            jnp.where(landed, sizes, 0.0), mode="drop")
+        new_pos = jnp.where(landed, empty_slots, -1)
+
+        durs = _geometric(k_dur, mu, (L * K + A_max,))
+        dcounter = 0
+
+        # 3. BF-S over freed servers: fill each with the largest fitting job.
+        def bfs_server(i, carry):
+            srv, dep, queue, dc = carry
+
+            def try_place(carry):
+                srv, dep, queue, dc, go = carry
+                resid = 1.0 - srv[i].sum()
+                j = largest_fitting_job(queue, resid)
+                ok = j >= 0
+
+                def do(args):
+                    srv, dep, queue, dc = args
+                    size = queue[j]
+                    s_i, d_i = place_in_server(srv[i], dep[i], size,
+                                               t + durs[dc])
+                    return (srv.at[i].set(s_i), dep.at[i].set(d_i),
+                            queue.at[j].set(0.0), dc + 1)
+
+                srv, dep, queue, dc = jax.lax.cond(
+                    ok, do, lambda a: a, (srv, dep, queue, dc))
+                return srv, dep, queue, dc, ok
+
+            def fill(carry):
+                srv, dep, queue, dc = carry
+                out = jax.lax.while_loop(
+                    lambda c: c[4],
+                    try_place,
+                    (srv, dep, queue, dc, True))
+                return out[:4]
+
+            return jax.lax.cond(freed[i], fill, lambda c: c,
+                                (srv, dep, queue, dc))
+
+        srv, dep, queue, dcounter = jax.lax.fori_loop(
+            0, L, bfs_server, (srv, dep, queue, dcounter))
+
+        # 4. BF-J over the new arrivals still in queue.
+        def bfj_job(a, carry):
+            srv, dep, queue, dc = carry
+            pos = new_pos[a]
+            size = jnp.where(pos >= 0, queue[jnp.maximum(pos, 0)], 0.0)
+            resid = 1.0 - srv.sum(axis=1)
+            s_idx = best_fit_server(resid, jnp.where(size > 0, size, jnp.inf))
+            ok = (size > 0) & (s_idx >= 0)
+
+            def do(args):
+                srv, dep, queue, dc = args
+                s_i, d_i = place_in_server(srv[s_idx], dep[s_idx], size,
+                                           t + durs[L * K + a])
+                return (srv.at[s_idx].set(s_i), dep.at[s_idx].set(d_i),
+                        queue.at[pos].set(0.0), dc)
+
+            return jax.lax.cond(ok, do, lambda x: x, (srv, dep, queue, dc))
+
+        srv, dep, queue, dcounter = jax.lax.fori_loop(
+            0, A_max, bfj_job, (srv, dep, queue, dcounter))
+
+        out = (
+            (queue > 0).sum().astype(jnp.int32),
+            srv.sum(),
+            n_dep.astype(jnp.int32),
+        )
+        return BFJSState(srv, dep, queue, dropped, key), out
+
+    state0 = BFJSState(
+        srv=jnp.zeros((L, K), jnp.float32),
+        dep=jnp.full((L, K), INF_SLOT, jnp.int32),
+        queue=jnp.zeros(Qcap, jnp.float32),
+        dropped=jnp.zeros((), jnp.int32),
+        key=key,
+    )
+    state, (qlen, occ, ndep) = jax.lax.scan(
+        slot_step, state0, jnp.arange(horizon, dtype=jnp.int32))
+    return BFJSResult(qlen, occ, jnp.cumsum(ndep), state.dropped)
+
+
+def monte_carlo_bfjs(keys: jax.Array, lam: float, mu: float, sampler,
+                     **kw) -> BFJSResult:
+    """vmap over seeds: one simulated cluster per key."""
+    fn = functools.partial(run_bfjs, lam=lam, mu=mu, sampler=sampler, **kw)
+    return jax.vmap(fn)(keys)

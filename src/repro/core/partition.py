@@ -1,0 +1,141 @@
+"""Universal partition I (paper Eq. 6) and the reduced configuration set
+K_RED^(J) (paper Eq. 7, Definition 5).
+
+Partition I of (1/2^J, 1] into 2J subintervals (m = 0..J-1):
+    I_{2m}   = (2/3 * 2^-m , 2^-m]          "even" types
+    I_{2m+1} = (1/2 * 2^-m , 2/3 * 2^-m]    "odd"  types
+Jobs with size <= 2^-J map to the last type (2J-1) with size rounded UP to
+2^-J (paper Section V.A).
+
+All boundaries are evaluated in exact integer arithmetic on the quantize.RES
+grid:  size in I_{2m}  <=>  3*s > 2*(RES >> m)  and  s <= (RES >> m).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import lru_cache
+
+import numpy as np
+
+from .quantize import RES, TWO_THIRDS
+
+
+@dataclass(frozen=True)
+class PartitionI:
+    """The paper's universal partition with parameter J > 1."""
+
+    J: int
+
+    def __post_init__(self):
+        if self.J < 2:
+            raise ValueError("J must be >= 2 (paper requires J > 1)")
+        if (1 << self.J) > RES:
+            raise ValueError("J too large for the integer grid")
+
+    @property
+    def num_types(self) -> int:
+        return 2 * self.J
+
+    @property
+    def min_grid_size(self) -> int:
+        """1/2^J on the grid — sizes at/below this join the last VQ."""
+        return RES >> self.J
+
+    def type_of(self, sizes_int: np.ndarray) -> np.ndarray:
+        """Vectorized type index for grid sizes. Sizes must be in [1, RES]."""
+        s = np.asarray(sizes_int, dtype=np.int64)
+        # m = number of halvings: size in (RES>>(m+1), RES>>m]  =>  m
+        # equivalently m = floor(log2(RES / s)) with the right-closed edges.
+        # Use bit tricks: m = bit_length(RES-1) - bit_length(s-1) adjusted; do
+        # it with a searchsorted over the J dyadic boundaries (J <= 16: cheap).
+        bounds = RES >> np.arange(1, self.J + 1)  # RES/2, RES/4, ..., RES/2^J
+        # m[i] = index of first bound < s  (s > RES>>(m+1))
+        m = np.searchsorted(-bounds, -s, side="right")  # descending search
+        m = np.minimum(m, self.J - 1)
+        upper = RES >> m
+        even = 3 * s > 2 * upper  # s > (2/3) * 2^-m
+        t = np.where(even, 2 * m, 2 * m + 1)
+        small = s <= self.min_grid_size
+        return np.where(small, 2 * self.J - 1, t).astype(np.int64)
+
+    def type_of_scalar(self, size_int: int) -> int:
+        return int(self.type_of(np.array([size_int]))[0])
+
+    def effective_size(self, sizes_int: np.ndarray) -> np.ndarray:
+        """Size used for occupancy: actual size, except the last VQ rounds UP
+        to 1/2^J (paper Section V.A)."""
+        s = np.asarray(sizes_int, dtype=np.int64)
+        return np.where(s <= self.min_grid_size, self.min_grid_size, s)
+
+    def upper_bound_int(self, type_idx: int) -> int:
+        """sup I_j on the grid (upper-rounded VQ size)."""
+        j = int(type_idx)
+        m, even = divmod(j, 2)
+        if even == 0:
+            return RES >> m
+        # odd type: sup = 2/3 * 2^-m; the largest grid value classified into
+        # I_{2m+1} satisfies 3*s <= 2*(RES>>m), i.e. floor division.
+        return (2 * (RES >> m)) // 3
+
+    def interval(self, type_idx: int) -> tuple[float, float]:
+        """(inf, sup] of I_j in floats, for reporting."""
+        j = int(type_idx)
+        m, odd = divmod(j, 2)
+        if odd == 0:
+            return (2.0 / 3.0 * 0.5**m, 0.5**m)
+        return (0.5 ** (m + 1), 2.0 / 3.0 * 0.5**m)
+
+
+@lru_cache(maxsize=32)
+def k_red(J: int) -> np.ndarray:
+    """The reduced configuration set K_RED^(J): array (4J-4, 2J) of ints.
+
+    Rows (paper Eq. 7):
+        2^m e_{2m},                      m = 0..J-1
+        3*2^{m-1} e_{2m+1},              m = 1..J-1
+        e_1 + floor(2^m / 3) e_{2m},     m = 2..J-1
+        e_1 + 2^{m-1} e_{2m+1},          m = 1..J-1
+    """
+    if J < 2:
+        raise ValueError("J >= 2")
+    rows = []
+    n = 2 * J
+    for m in range(J):
+        v = np.zeros(n, dtype=np.int64)
+        v[2 * m] = 1 << m
+        rows.append(v)
+    for m in range(1, J):
+        v = np.zeros(n, dtype=np.int64)
+        v[2 * m + 1] = 3 * (1 << (m - 1))
+        rows.append(v)
+    for m in range(2, J):
+        v = np.zeros(n, dtype=np.int64)
+        v[1] = 1
+        v[2 * m] = (1 << m) // 3
+        rows.append(v)
+    for m in range(1, J):
+        v = np.zeros(n, dtype=np.int64)
+        v[1] = 1
+        v[2 * m + 1] = 1 << (m - 1)
+        rows.append(v)
+    out = np.stack(rows)
+    assert out.shape == (4 * J - 4, 2 * J)
+    return out
+
+
+def k_red_is_feasible(J: int) -> bool:
+    """Sanity check: every configuration packs within capacity when each
+    type-j job takes its upper-rounded size sup I_j."""
+    part = PartitionI(J)
+    confs = k_red(J)
+    uppers = np.array([part.upper_bound_int(j) for j in range(2 * J)])
+    tot = confs @ uppers
+    return bool(np.all(tot <= RES + J))  # +J: integer rounding slack of the 2/3 bounds
+
+
+def max_weight_config(J: int, vq_sizes: np.ndarray) -> tuple[int, np.ndarray]:
+    """argmax_{k in K_RED} <k, Q> (paper Eq. 8). Returns (row index, config)."""
+    confs = k_red(J)
+    w = confs @ np.asarray(vq_sizes, dtype=np.int64)
+    i = int(np.argmax(w))
+    return i, confs[i]

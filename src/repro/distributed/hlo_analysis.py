@@ -1,0 +1,123 @@
+"""Post-compile HLO analysis: collective-communication byte accounting.
+
+``compiled.cost_analysis()`` reports FLOPs and memory bytes but NOT
+collective traffic, so we parse the optimized HLO module text and sum the
+operand sizes of every all-gather / all-reduce / reduce-scatter / all-to-all
+/ collective-permute (and their -start async forms).  Also reports
+per-opcode counts — duplicate all-gathers of the same operand are the
+classic SPMD perf smell the §Perf loop hunts for.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+
+_DTYPE_BYTES = {
+    "pred": 1, "s4": 1, "u4": 1, "s8": 1, "u8": 1, "s16": 2, "u16": 2,
+    "s32": 4, "u32": 4, "s64": 8, "u64": 8,
+    "f8e4m3fn": 1, "f8e5m2": 1, "bf16": 2, "f16": 2, "f32": 4, "f64": 8,
+    "c64": 8, "c128": 16, "token": 0, "opaque": 0,
+}
+
+COLLECTIVE_OPS = (
+    "all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+    "collective-permute", "ragged-all-to-all", "collective-broadcast",
+)
+
+_SHAPE_RE = re.compile(r"([a-z0-9]+)\[([0-9,]*)\]")
+_INSTR_RE = re.compile(
+    r"^\s*(?:ROOT\s+)?(%?[\w.\-]+)\s*=\s*(\([^=]*?\)|\S+)\s+([\w\-]+)(?:\.\d+)?\(")
+_OPERAND_RE = re.compile(r"%?([\w.\-]+)")
+
+
+def shape_bytes(shape_str: str) -> int:
+    """Bytes of an HLO shape string (sums tuple components)."""
+    total = 0
+    for dtype, dims in _SHAPE_RE.findall(shape_str):
+        if dtype not in _DTYPE_BYTES:
+            continue
+        n = 1
+        if dims:
+            for d in dims.split(","):
+                if d:
+                    n *= int(d)
+        total += n * _DTYPE_BYTES[dtype]
+    return total
+
+
+@dataclass
+class CollectiveStats:
+    bytes_by_op: dict = field(default_factory=lambda: defaultdict(int))
+    count_by_op: dict = field(default_factory=lambda: defaultdict(int))
+    largest: list = field(default_factory=list)  # (bytes, opcode, shape)
+
+    @property
+    def total_bytes(self) -> int:
+        return sum(self.bytes_by_op.values())
+
+    @property
+    def total_count(self) -> int:
+        return sum(self.count_by_op.values())
+
+    def summary(self, top: int = 8) -> dict:
+        return {
+            "total_bytes": self.total_bytes,
+            "total_count": self.total_count,
+            "bytes_by_op": dict(self.bytes_by_op),
+            "count_by_op": dict(self.count_by_op),
+            "largest": [
+                {"bytes": b, "op": o, "shape": s}
+                for b, o, s in sorted(self.largest, reverse=True)[:top]
+            ],
+        }
+
+
+def collective_stats(hlo_text: str) -> CollectiveStats:
+    """Parse optimized HLO text; sum operand bytes per collective opcode.
+
+    Operand shapes are resolved from each instruction's declared result
+    shape (first pass builds the name->shape map).  Async '-start' ops are
+    counted once; their '-done' halves are skipped.
+    """
+    shapes: dict[str, str] = {}
+    pending: list[tuple[str, str, str]] = []  # (opcode, result_shape, operands)
+
+    for line in hlo_text.splitlines():
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, result_shape, opcode = m.group(1).lstrip("%"), m.group(2), m.group(3)
+        shapes[name] = result_shape
+        base = opcode[:-6] if opcode.endswith("-start") else opcode
+        if opcode.endswith("-done") or opcode == "async-done":
+            continue
+        if base in COLLECTIVE_OPS:
+            # operand list = text between the first '(' and its matching ')'
+            rest = line[m.end():]
+            depth, idx = 1, 0
+            for idx, ch in enumerate(rest):
+                if ch == "(":
+                    depth += 1
+                elif ch == ")":
+                    depth -= 1
+                    if depth == 0:
+                        break
+            pending.append((base, result_shape, rest[:idx]))
+
+    stats = CollectiveStats()
+    for opcode, result_shape, operands in pending:
+        total = 0
+        for op in operands.split(","):
+            op = op.strip()
+            om = _OPERAND_RE.match(op)
+            if om and om.group(1) in shapes:
+                total += shape_bytes(shapes[om.group(1)])
+            elif _SHAPE_RE.search(op):
+                total += shape_bytes(op)
+        if total == 0:
+            total = shape_bytes(result_shape)
+        stats.bytes_by_op[opcode] += total
+        stats.count_by_op[opcode] += 1
+        stats.largest.append((total, opcode, result_shape[:96]))
+    return stats

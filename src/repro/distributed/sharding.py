@@ -1,0 +1,210 @@
+"""Sharding rules: parameter / input / cache PartitionSpecs for the
+production mesh.
+
+Layout (MaxText-style FSDP x TP):
+  * batch shards over the data-parallel axes ("pod","data") / ("data",);
+  * every weight matrix shards one dim over "data" (ZeRO-3 / FSDP — XLA
+    inserts the all-gathers) and one over "model" (TP);
+  * routed experts shard their expert dim over "model" (EP);
+  * any dim that does not divide its mesh axis falls back to replication
+    (e.g. kv_heads=8 on a 16-way model axis, musicgen's 24 heads) — the
+    fallback is *per-leaf-dim*, so everything always lowers.
+
+The same rule table serves real arrays and ShapeDtypeStructs (dry-run).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from repro.models.config import ModelConfig
+
+
+def dp_axes(mesh: Mesh) -> tuple[str, ...]:
+    return tuple(a for a in mesh.axis_names if a in ("pod", "data"))
+
+
+def _axis_size(mesh: Mesh, axis) -> int:
+    if axis is None:
+        return 1
+    if isinstance(axis, tuple):
+        return int(np.prod([mesh.shape[a] for a in axis]))
+    return mesh.shape[axis]
+
+
+def _fit(mesh: Mesh, dim_size: int, axis):
+    """axis if dim divides its mesh size, else None (replicate)."""
+    return axis if axis is not None and dim_size % _axis_size(mesh, axis) == 0 \
+        else None
+
+
+def _spec(mesh: Mesh, shape: tuple[int, ...], axes: tuple) -> P:
+    return P(*[_fit(mesh, d, a) for d, a in zip(shape, axes)])
+
+
+# -- rule table -----------------------------------------------------------
+# leaf name -> per-dim logical axes, where 'F' = fsdp (data), 'T' = tensor
+# (model), 'E' = expert (model), None = replicated.  Dims are the TRAILING
+# dims of the leaf (a leading stacked-periods dim is always replicated).
+_RULES: dict[str, tuple] = {
+    # embeddings
+    "embed.w": ("T", "F"),
+    "head.w": ("F", "T"),
+    # attention / MLA
+    "wq": ("F", "T"),
+    # KV projections replicate over `model`: kv_heads (8) rarely divide the
+    # 16-way TP axis, and a model-sharded (D, KV*hd) matrix forces an
+    # all-to-all when reshaped to heads (§Perf iteration 1).
+    "wk": ("F", None),
+    "wv": ("F", None),
+    "wo": ("T", "F"),
+    "bq": ("T",),
+    "bk": ("T",),
+    "bv": ("T",),
+    "w_dkv": ("F", None),
+    "w_kr": ("F", None),
+    "w_uk": ("F", "T"),
+    "w_uv": ("F", "T"),
+    # dense MLP
+    "w_gate": ("F", "T"),
+    "w_in": ("F", "T"),
+    "w_out": ("T", "F"),
+    # MoE (expert-stacked weights detected by ndim==3)
+    "router": ("F", None),
+    # mamba
+    "conv_w": (None, "T"),
+    "conv_b": ("T",),
+    "A_log": (None,),
+    "D_skip": (None,),
+    "dt_bias": (None,),
+    "norm_scale": (None,),
+    "scale": (None,),
+}
+
+_MOE_RULES = {
+    "w_gate": ("E", "F", None),
+    "w_in": ("E", "F", None),
+    "w_out": ("E", None, "F"),
+}
+
+
+def _path_names(path) -> list[str]:
+    """Key names along a pytree path (dicts -> .key, NamedTuples -> .name)."""
+    names = []
+    for p in path:
+        if hasattr(p, "key"):
+            names.append(str(p.key))
+        elif hasattr(p, "name"):
+            names.append(str(p.name))
+    return names
+
+
+def _logical_to_mesh(mesh: Mesh, logical):
+    has_model = "model" in mesh.axis_names
+    table = {"F": "data" if "data" in mesh.axis_names else None,
+             "T": "model" if has_model else None,
+             "E": "model" if has_model else None,
+             None: None}
+    return tuple(table[x] for x in logical)
+
+
+def param_specs(abstract_params: Any, cfg: ModelConfig, mesh: Mesh):
+    """PartitionSpec pytree matching the parameter tree."""
+
+    def rule(path, leaf) -> P:
+        names = _path_names(path)
+        name = names[-1] if names else ""
+        qual = ".".join(names[-2:])
+        shape = leaf.shape
+        logical = _RULES.get(qual) or _RULES.get(name)
+        if logical is None:
+            logical = (None,) * len(shape)
+        if name in _MOE_RULES and len(shape) - len(logical) >= 2:
+            # stacked (periods, E, d, f) or unstacked (E, d, f) expert weights
+            logical = _MOE_RULES[name]
+        axes = _logical_to_mesh(mesh, logical)
+        # left-pad replication for leading stacked dims (periods / vmap)
+        pad = len(shape) - len(axes)
+        axes = (None,) * pad + axes
+        return _spec(mesh, shape, axes)
+
+    return jax.tree_util.tree_map_with_path(rule, abstract_params)
+
+
+def batch_specs(cfg: ModelConfig, mesh: Mesh, kind: str):
+    dp = dp_axes(mesh)
+    if kind in ("train", "prefill"):
+        spec = {"labels": P(dp, None)}
+        if cfg.input_mode == "tokens":
+            spec["tokens"] = P(dp, None)
+        else:
+            spec["embeds"] = P(dp, None, None)
+        if kind == "prefill":
+            spec.pop("labels")
+        return spec
+    raise ValueError(kind)
+
+
+def cache_specs(abstract_caches: Any, cfg: ModelConfig, mesh: Mesh):
+    """Decode caches: batch over DP; the cache SEQUENCE dim over `model`
+    (context-parallel decode).  Sequence sharding works for any kv-head
+    count (8 kv heads never divide the 16-way model axis) and turns decode
+    attention into local partial softmax + tiny all-reduces.
+    Cache leaves: (periods, B, ...)."""
+    dp = dp_axes(mesh)
+
+    def rule(path, leaf):
+        names = _path_names(path)
+        name = names[-1] if names else ""
+        shape = leaf.shape
+        if name in ("k", "v"):          # (periods, B, C, KV, hd)
+            return _spec(mesh, shape, (None, dp, "model", None, None))
+        if name == "c_kv" or name == "k_rope":  # (periods, B, C, r)
+            return _spec(mesh, shape, (None, dp, "model", None))
+        if name == "conv":              # (periods, B, k-1, conv_dim)
+            return _spec(mesh, shape, (None, dp, None, "model"))
+        if name == "ssm":               # (periods, B, nh, hd, N)
+            return _spec(mesh, shape, (None, dp, "model", None, None))
+        if name == "length":
+            return P()
+        return P(*([None] * len(shape)))
+
+    return jax.tree_util.tree_map_with_path(rule, abstract_caches)
+
+
+def fit_spec_tree(mesh: Mesh, spec_tree, abstract_tree):
+    """Drop any spec axis that does not divide the actual dim (e.g. batch=1
+    on the 16-way data axis for long_500k)."""
+
+    def fit(spec, leaf):
+        return P(*[_fit(mesh, d, a) for d, a in zip(leaf.shape, spec)])
+
+    return jax.tree.map(fit, spec_tree, abstract_tree,
+                        is_leaf=lambda x: isinstance(x, P))
+
+
+def to_named(mesh: Mesh, spec_tree):
+    return jax.tree.map(
+        lambda s: NamedSharding(mesh, s),
+        spec_tree,
+        is_leaf=lambda x: isinstance(x, P),
+    )
+
+
+def bytes_per_device(abstract_tree, spec_tree, mesh: Mesh) -> int:
+    """Analytic per-device bytes for a sharded pytree (dry-run memory
+    audit, independent of backend memory_analysis support)."""
+    total = 0
+    for leaf, spec in zip(jax.tree.leaves(abstract_tree),
+                          jax.tree.leaves(spec_tree,
+                                          is_leaf=lambda x: isinstance(x, P))):
+        n = int(np.prod(leaf.shape)) if leaf.shape else 1
+        shards = 1
+        for ax in spec:
+            if ax is not None:
+                shards *= _axis_size(mesh, ax)
+        total += n * leaf.dtype.itemsize // max(shards, 1)
+    return total

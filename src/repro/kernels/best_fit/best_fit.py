@@ -1,0 +1,87 @@
+"""Pallas TPU kernel: sequential Best-Fit placement (the paper's BF inner loop).
+
+Jobs are placed one at a time into the feasible server with least residual
+capacity (BF-J, Section IV).  The sequential dependence across jobs lives in
+a ``fori_loop`` INSIDE the kernel while the per-job candidate search is a
+masked min-reduction over the residual vector held in VMEM — residuals never
+round-trip to HBM between placements.  (On GPU this would be a warp-shuffle
+argmin; the VMEM-resident loop is the TPU-idiomatic equivalent —
+see DESIGN.md §3.)
+
+Shapes: residuals (L,), sizes (N,) -> assignment (N,) int32 (-1 = rejected),
+updated residuals (L,).  The batched entry point grids over independent
+(queue, cluster) pairs — one serving cell per program instance.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+BIG = 3.4e38  # ~f32 max; sentinel for infeasible servers
+
+
+def _best_fit_kernel(resid_ref, sizes_ref, assign_ref, out_resid_ref):
+    out_resid_ref[...] = resid_ref[...]
+    L = out_resid_ref.shape[-1]
+    n = sizes_ref.shape[-1]
+    lane = jax.lax.broadcasted_iota(jnp.int32, (1, L), 1)
+
+    def body(i, _):
+        size = sizes_ref[0, i]
+        r = out_resid_ref[...]                                # (1, L)
+        feasible = r >= size
+        masked = jnp.where(feasible, r, BIG)
+        best = jnp.min(masked)
+        # tightest server, lowest index tie-break
+        is_best = (masked == best) & feasible
+        srv = jnp.min(jnp.where(is_best, lane, L))
+        ok = (srv < L) & (size > 0)
+        take = ok & (lane == srv)
+        out_resid_ref[...] = jnp.where(take, r - size, r)
+        assign_ref[0, i] = jnp.where(ok, srv, -1)
+        return 0
+
+    jax.lax.fori_loop(0, n, body, 0)
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def best_fit_pallas(residuals: jax.Array, sizes: jax.Array,
+                    interpret: bool = False):
+    """Single-cluster Best-Fit. residuals (L,) f32, sizes (N,) f32."""
+    L, = residuals.shape
+    N, = sizes.shape
+    assign, new_resid = pl.pallas_call(
+        _best_fit_kernel,
+        out_shape=(jax.ShapeDtypeStruct((1, N), jnp.int32),
+                   jax.ShapeDtypeStruct((1, L), residuals.dtype)),
+        in_specs=[pl.BlockSpec((1, L), lambda: (0, 0)),
+                  pl.BlockSpec((1, N), lambda: (0, 0))],
+        out_specs=(pl.BlockSpec((1, N), lambda: (0, 0)),
+                   pl.BlockSpec((1, L), lambda: (0, 0))),
+        interpret=interpret,
+    )(residuals[None], sizes[None])
+    return assign[0], new_resid[0]
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def best_fit_pallas_batched(residuals: jax.Array, sizes: jax.Array,
+                            interpret: bool = False):
+    """Batched Best-Fit: residuals (G, L), sizes (G, N) — one grid cell per
+    independent scheduling problem (e.g. per serving replica group)."""
+    G, L = residuals.shape
+    _, N = sizes.shape
+    assign, new_resid = pl.pallas_call(
+        _best_fit_kernel,
+        grid=(G,),
+        out_shape=(jax.ShapeDtypeStruct((G, N), jnp.int32),
+                   jax.ShapeDtypeStruct((G, L), residuals.dtype)),
+        in_specs=[pl.BlockSpec((1, L), lambda g: (g, 0)),
+                  pl.BlockSpec((1, N), lambda g: (g, 0))],
+        out_specs=(pl.BlockSpec((1, N), lambda g: (g, 0)),
+                   pl.BlockSpec((1, L), lambda g: (g, 0))),
+        interpret=interpret,
+    )(residuals, sizes)
+    return assign, new_resid

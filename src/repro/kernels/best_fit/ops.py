@@ -1,0 +1,24 @@
+"""Public entry point: Pallas on TPU, interpret-mode elsewhere."""
+from __future__ import annotations
+
+import jax
+
+from .best_fit import best_fit_pallas, best_fit_pallas_batched
+from .ref import best_fit_ref, best_fit_ref_batched
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def best_fit(residuals, sizes, use_pallas: bool = True):
+    if use_pallas:
+        return best_fit_pallas(residuals, sizes, interpret=_interpret())
+    return best_fit_ref(residuals, sizes)
+
+
+def best_fit_batched(residuals, sizes, use_pallas: bool = True):
+    if use_pallas:
+        return best_fit_pallas_batched(residuals, sizes,
+                                       interpret=_interpret())
+    return best_fit_ref_batched(residuals, sizes)

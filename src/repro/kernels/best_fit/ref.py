@@ -1,0 +1,28 @@
+"""Pure-jnp oracle for the Best-Fit placement kernel."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def best_fit_ref(residuals: jax.Array, sizes: jax.Array):
+    """Sequential Best-Fit: each job -> feasible server with least residual
+    (lowest index tie-break). Returns (assignment (N,), new residuals (L,))."""
+    L, = residuals.shape
+
+    def body(resid, size):
+        feasible = resid >= size
+        masked = jnp.where(feasible, resid, jnp.inf)
+        best = jnp.min(masked)
+        is_best = (masked == best) & feasible
+        srv = jnp.argmax(is_best)  # lowest index among ties
+        ok = feasible.any() & (size > 0)
+        resid = jnp.where(ok, resid.at[srv].add(-size), resid)
+        return resid, jnp.where(ok, srv, -1).astype(jnp.int32)
+
+    new_resid, assign = jax.lax.scan(body, residuals, sizes)
+    return assign, new_resid
+
+
+def best_fit_ref_batched(residuals: jax.Array, sizes: jax.Array):
+    return jax.vmap(best_fit_ref)(residuals, sizes)

@@ -1,0 +1,95 @@
+"""Pallas TPU kernel: single-token GQA decode attention over a KV cache.
+
+Decode attention is memory-bound (one pass over the cache per token), so the
+kernel streams the cache through VMEM in (bc, hd) blocks: grid (B, KV, C/bc)
+with the cache-block axis innermost, all G = H/KV query heads of one kv head
+processed together (the (G, bc) score tile keeps the MXU busy despite the
+single query position).  Invalid (unwritten / out-of-window) cache slots are
+masked by position.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _decode_kernel(pos_ref, q_ref, k_ref, v_ref, o_ref,
+                   acc_ref, m_ref, l_ref, *,
+                   bc: int, window: int, scale: float, c_blocks: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    pos = pos_ref[0]
+    q = q_ref[0, 0].astype(jnp.float32)                     # (G, hd)
+    k = k_ref[0, 0].astype(jnp.float32)                     # (bc, hd)
+    v = v_ref[0, 0].astype(jnp.float32)                     # (bc, hd)
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+    c_pos = ci * bc + jax.lax.broadcasted_iota(jnp.int32, (1, bc), 1)
+    valid = c_pos <= pos
+    if window:
+        valid &= c_pos > pos - window
+    s = jnp.where(valid, s, NEG_INF)                         # (G, bc)
+
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ci == c_blocks - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "bc", "interpret"))
+def decode_attention(q: jax.Array, k: jax.Array, v: jax.Array,
+                     pos: jax.Array, *, window: int = 0, bc: int = 512,
+                     interpret: bool = False) -> jax.Array:
+    """q: (B, H, hd) one token; k, v: (B, KV, C, hd) cache; pos: () int32 —
+    index of the LAST valid cache slot.  Returns (B, H, hd)."""
+    B, H, hd = q.shape
+    _, KV, C, _ = k.shape
+    G = H // KV
+    bc = min(bc, C)
+    assert C % bc == 0
+    c_blocks = C // bc
+    qg = q.reshape(B, KV, G, hd)
+
+    kernel = functools.partial(_decode_kernel, bc=bc, window=window,
+                               scale=hd**-0.5, c_blocks=c_blocks)
+    out = pl.pallas_call(
+        kernel,
+        grid=(B, KV, c_blocks),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, G, hd), lambda b, g, ci: (b, g, 0, 0)),
+            pl.BlockSpec((1, 1, bc, hd), lambda b, g, ci: (b, g, ci, 0)),
+            pl.BlockSpec((1, 1, bc, hd), lambda b, g, ci: (b, g, ci, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, G, hd), lambda b, g, ci: (b, g, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, KV, G, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((G, hd), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+            pltpu.VMEM((G, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(pos[None].astype(jnp.int32), qg, k, v)
+    return out.reshape(B, H, hd)

@@ -1,0 +1,19 @@
+"""Entry point: Pallas on TPU, interpret-mode validation elsewhere."""
+from __future__ import annotations
+
+import jax
+
+from .decode_attention import decode_attention
+from .ref import decode_attention_ref
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def decode_attn(q, k, v, pos, *, window: int = 0, use_pallas: bool = True,
+                bc: int = 512):
+    if use_pallas:
+        return decode_attention(q, k, v, pos, window=window, bc=bc,
+                                interpret=_interpret())
+    return decode_attention_ref(q, k, v, pos, window=window)

@@ -1,0 +1,22 @@
+"""Oracle for single-token decode attention."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k, v, pos, *, window: int = 0):
+    """q: (B,H,hd); k,v: (B,KV,C,hd); pos: () last valid slot index."""
+    B, H, hd = q.shape
+    KV, C = k.shape[1], k.shape[2]
+    G = H // KV
+    qg = q.reshape(B, KV, G, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgd,bkcd->bkgc", qg, k.astype(jnp.float32)) * hd**-0.5
+    c_pos = jnp.arange(C)
+    valid = c_pos <= pos
+    if window:
+        valid &= c_pos > pos - window
+    s = jnp.where(valid[None, None, None, :], s, -1e30)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
+    o = jnp.einsum("bkgc,bkcd->bkgd", p, v.astype(jnp.float32))
+    return o.reshape(B, H, hd).astype(q.dtype)

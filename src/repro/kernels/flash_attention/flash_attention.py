@@ -1,0 +1,113 @@
+"""Pallas TPU flash attention (forward): causal / sliding-window GQA.
+
+Grid (B, H, Sq/bq, Sk/bk) with the KV-block axis innermost (sequential on
+TPU), online-softmax state in VMEM scratch.  Block shapes default to
+(128, 128) — MXU-aligned — and K/V blocks index kv-head h // group so GQA
+needs no K/V replication.  Fully-masked KV blocks early-out, halving causal
+FLOPs.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _flash_kernel(q_ref, k_ref, v_ref, o_ref, acc_ref, m_ref, l_ref, *,
+                  bq: int, bk: int, causal: bool, window: int, scale: float,
+                  kv_blocks: int):
+    qi = pl.program_id(2)
+    ki = pl.program_id(3)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+
+    q_start = qi * bq
+    k_start = ki * bk
+    run = jnp.asarray(True)
+    if causal:  # whole KV block strictly above the diagonal -> skip
+        run = run & (k_start <= q_start + bq - 1)
+    if window:  # whole KV block left of every query's window -> skip
+        run = run & (k_start + bk - 1 > q_start - window)
+
+    @pl.when(run)
+    def _compute():
+        q = q_ref[0, 0].astype(jnp.float32)                 # (bq, hd)
+        k = k_ref[0, 0].astype(jnp.float32)                 # (bk, hd)
+        v = v_ref[0, 0].astype(jnp.float32)                 # (bk, hd)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        q_pos = q_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 0)
+        k_pos = k_start + jax.lax.broadcasted_iota(jnp.int32, (bq, bk), 1)
+        mask = jnp.ones((bq, bk), jnp.bool_)
+        if causal:
+            mask &= q_pos >= k_pos
+        if window:
+            mask &= k_pos > q_pos - window
+        s = jnp.where(mask, s, NEG_INF)
+
+        m_prev = m_ref[...]                                  # (bq, 1)
+        m_new = jnp.maximum(m_prev, s.max(axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_ref[...] * corr + p.sum(axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(ki == kv_blocks - 1)
+    def _finalize():
+        o_ref[0, 0] = (acc_ref[...] /
+                       jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("causal", "window", "bq", "bk", "interpret"))
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, window: int = 0,
+                    bq: int = 128, bk: int = 128,
+                    interpret: bool = False) -> jax.Array:
+    """q: (B, H, Sq, hd); k, v: (B, KV, Sk, hd); H % KV == 0."""
+    B, H, Sq, hd = q.shape
+    _, KV, Sk, _ = k.shape
+    groups = H // KV
+    bq = min(bq, Sq)
+    bk = min(bk, Sk)
+    assert Sq % bq == 0 and Sk % bk == 0, (Sq, bq, Sk, bk)
+    kv_blocks = Sk // bk
+    grid = (B, H, Sq // bq, kv_blocks)
+
+    kernel = functools.partial(
+        _flash_kernel, bq=bq, bk=bk, causal=causal, window=window,
+        scale=hd**-0.5, kv_blocks=kv_blocks)
+
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, 1, bq, hd), lambda b, h, qi, ki: (b, h, qi, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, qi, ki, g=groups: (b, h // g, ki, 0)),
+            pl.BlockSpec((1, 1, bk, hd),
+                         lambda b, h, qi, ki, g=groups: (b, h // g, ki, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, bq, hd),
+                               lambda b, h, qi, ki: (b, h, qi, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, Sq, hd), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((bq, hd), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+            pltpu.VMEM((bq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q, k, v)

@@ -1,0 +1,19 @@
+"""Entry point: Pallas on TPU, interpret-mode validation elsewhere."""
+from __future__ import annotations
+
+import jax
+
+from .flash_attention import flash_attention
+from .ref import attention_ref
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def attention(q, k, v, *, causal: bool = True, window: int = 0,
+              use_pallas: bool = True, bq: int = 128, bk: int = 128):
+    if use_pallas:
+        return flash_attention(q, k, v, causal=causal, window=window,
+                               bq=bq, bk=bk, interpret=_interpret())
+    return attention_ref(q, k, v, causal=causal, window=window)

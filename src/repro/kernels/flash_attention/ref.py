@@ -1,0 +1,27 @@
+"""Naive full-materialization attention oracle."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True, window: int = 0):
+    """q: (B,H,Sq,hd); k,v: (B,KV,Sk,hd). Full S x S softmax in fp32."""
+    B, H, Sq, hd = q.shape
+    KV, Sk = k.shape[1], k.shape[2]
+    groups = H // KV
+    k = jnp.repeat(k, groups, axis=1)
+    v = jnp.repeat(v, groups, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * hd**-0.5
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Sk)[None, :]
+    mask = jnp.ones((Sq, Sk), bool)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window:
+        mask &= k_pos > q_pos - window
+    s = jnp.where(mask[None, None], s, -1e30)
+    p = jnp.exp(s - s.max(axis=-1, keepdims=True))
+    p = p / jnp.maximum(p.sum(axis=-1, keepdims=True), 1e-30)
+    return jnp.einsum("bhqk,bhkd->bhqd", p,
+                      v.astype(jnp.float32)).astype(q.dtype)

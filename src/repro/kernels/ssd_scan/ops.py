@@ -1,0 +1,17 @@
+"""Entry point: Pallas on TPU, interpret-mode validation elsewhere."""
+from __future__ import annotations
+
+import jax
+
+from .ref import ssd_ref
+from .ssd_scan import ssd_scan
+
+
+def _interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def ssd(xdt, Bm, Cm, a, use_pallas: bool = True):
+    if use_pallas:
+        return ssd_scan(xdt, Bm, Cm, a, interpret=_interpret())
+    return ssd_ref(xdt, Bm, Cm, a)

@@ -1,0 +1,33 @@
+"""Oracle: naive sequential state-space recurrence (no chunking).
+
+h_t = exp(a_t) * h_{t-1} + B_t (dt*x)_t^T ;  y_t = C_t h_t
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_ref(xdt, Bm, Cm, a):
+    """xdt: (B,H,nc,Lc,hd); Bm/Cm: (B,H,nc,Lc,N); a: (B,H,nc,Lc)."""
+    B, H, nc, Lc, hd = xdt.shape
+    N = Bm.shape[-1]
+    S = nc * Lc
+    x = xdt.reshape(B, H, S, hd).astype(jnp.float32)
+    Bf = Bm.reshape(B, H, S, N).astype(jnp.float32)
+    Cf = Cm.reshape(B, H, S, N).astype(jnp.float32)
+    af = a.reshape(B, H, S).astype(jnp.float32)
+
+    def step(h, inp):
+        x_t, b_t, c_t, a_t = inp
+        h = h * jnp.exp(a_t)[..., None, None] + jnp.einsum(
+            "bhp,bhn->bhpn", x_t, b_t)
+        y_t = jnp.einsum("bhpn,bhn->bhp", h, c_t)
+        return h, y_t
+
+    h0 = jnp.zeros((B, H, hd, N), jnp.float32)
+    xs = (x.transpose(2, 0, 1, 3), Bf.transpose(2, 0, 1, 3),
+          Cf.transpose(2, 0, 1, 3), af.transpose(2, 0, 1))
+    _, ys = jax.lax.scan(step, h0, xs)
+    y = ys.transpose(1, 2, 0, 3).reshape(B, H, nc, Lc, hd)
+    return y.astype(xdt.dtype)

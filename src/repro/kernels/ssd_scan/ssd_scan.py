@@ -1,0 +1,88 @@
+"""Pallas TPU kernel: Mamba2 SSD chunk scan (state-space duality core).
+
+Grid (B, nh, nc) with the chunk axis innermost: the inter-chunk state
+(hd, N) lives in VMEM scratch and is carried across sequential chunk steps,
+so the recurrence never leaves the chip.  Within a chunk the dual quadratic
+form runs on the MXU: (Lc x N)@(N x Lc) score-like matrix, masked by the
+cumulative-decay lower triangle, then (Lc x Lc)@(Lc x hd).
+
+Inputs are pre-chunked per head: xdt (B,nh,nc,Lc,hd) = dt*x, B/C
+(B,nh,nc,Lc,N) broadcast to heads, a (B,nh,nc,Lc) = dt*A.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(xdt_ref, b_ref, c_ref, a_ref, y_ref, state_ref, *,
+                Lc: int, hd: int, N: int):
+    ci = pl.program_id(2)
+
+    @pl.when(ci == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = xdt_ref[0, 0, 0].astype(jnp.float32)               # (Lc, hd)
+    Bm = b_ref[0, 0, 0].astype(jnp.float32)                # (Lc, N)
+    Cm = c_ref[0, 0, 0].astype(jnp.float32)                # (Lc, N)
+    a = a_ref[0, 0, 0].astype(jnp.float32)[None, :]        # (1, Lc) row
+
+    cs = jnp.cumsum(a, axis=-1)                            # (1, Lc)
+    # pairwise decay L[i, j] = exp(cs_i - cs_j) for i >= j
+    di = jnp.transpose(cs)                                  # (Lc, 1)
+    seg = di - cs                                           # (Lc, Lc): cs_i - cs_j
+    tri = jax.lax.broadcasted_iota(jnp.int32, (Lc, Lc), 0) >= \
+        jax.lax.broadcasted_iota(jnp.int32, (Lc, Lc), 1)
+    Lmat = jnp.where(tri, jnp.exp(seg), 0.0)
+
+    # intra-chunk: y_diag = ((C @ B^T) * L) @ x
+    cb = jax.lax.dot_general(Cm, Bm, (((1,), (1,)), ((), ())),
+                             preferred_element_type=jnp.float32)
+    y_diag = jax.lax.dot_general(cb * Lmat, x, (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)
+
+    # inter-chunk: y_off = (C @ S^T) * exp(cs)^T     with S: (hd, N)
+    S = state_ref[...]
+    y_off = jax.lax.dot_general(Cm, S, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32)
+    y_off = y_off * jnp.transpose(jnp.exp(cs))             # (Lc, hd)
+
+    y_ref[0, 0, 0] = (y_diag + y_off).astype(y_ref.dtype)
+
+    # state update: S' = S * exp(cs_last) + x^T @ (B * exp(cs_last - cs)^T)
+    last = cs[0, Lc - 1]
+    decay_state = jnp.exp(last - jnp.transpose(cs))        # (Lc, 1)
+    new_contrib = jax.lax.dot_general(
+        x, Bm * decay_state, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)                # (hd, N)
+    state_ref[...] = S * jnp.exp(last) + new_contrib
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def ssd_scan(xdt: jax.Array, Bm: jax.Array, Cm: jax.Array, a: jax.Array,
+             interpret: bool = False) -> jax.Array:
+    """xdt: (B,H,nc,Lc,hd); Bm/Cm: (B,H,nc,Lc,N); a: (B,H,nc,Lc).
+    Returns y: (B,H,nc,Lc,hd) (no D-skip / gating — those stay in jnp)."""
+    B, H, nc, Lc, hd = xdt.shape
+    N = Bm.shape[-1]
+    kernel = functools.partial(_ssd_kernel, Lc=Lc, hd=hd, N=N)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, H, nc),
+        in_specs=[
+            pl.BlockSpec((1, 1, 1, Lc, hd), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, Lc, N), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, Lc, N), lambda b, h, c: (b, h, c, 0, 0)),
+            pl.BlockSpec((1, 1, 1, Lc), lambda b, h, c: (b, h, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, 1, Lc, hd),
+                               lambda b, h, c: (b, h, c, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, H, nc, Lc, hd), xdt.dtype),
+        scratch_shapes=[pltpu.VMEM((hd, N), jnp.float32)],
+        interpret=interpret,
+    )(xdt, Bm, Cm, a)

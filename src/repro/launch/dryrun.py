@@ -1,0 +1,368 @@
+"""Multi-pod dry-run: lower + compile every (architecture x input-shape x
+mesh) cell and extract memory / cost / collective statistics.
+
+MUST be run as its own process (python -m repro.launch.dryrun ...): the
+XLA_FLAGS below create 512 host platform devices and jax locks the device
+count at first init.  ``--all`` orchestrates one subprocess per cell so
+compile memory is reclaimed between cells.
+"""
+import os
+
+os.environ["XLA_FLAGS"] = (
+    "--xla_force_host_platform_device_count=512 "
+    + os.environ.get("XLA_FLAGS", ""))
+
+# ruff: noqa: E402
+import argparse
+import json
+import subprocess
+import sys
+import time
+import traceback
+
+import jax
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import ARCH_IDS, get_config
+from repro.configs.registry import applicable_shapes, get_shape
+from repro.distributed.hlo_analysis import collective_stats
+from repro.distributed.sharding import (batch_specs, bytes_per_device,
+                                        cache_specs, dp_axes, fit_spec_tree,
+                                        param_specs, to_named)
+from repro.launch.mesh import make_production_mesh
+from repro.launch.steps import (input_specs, make_optimizer,
+                                make_prefill_step, make_serve_step,
+                                make_train_step)
+
+RESULTS_DIR = os.path.join(os.path.dirname(__file__),
+                           "../../../benchmarks/results/dryrun")
+
+
+def _mem_info(compiled) -> dict:
+    out = {}
+    try:
+        ma = compiled.memory_analysis()
+        for attr in ("argument_size_in_bytes", "output_size_in_bytes",
+                     "temp_size_in_bytes", "alias_size_in_bytes",
+                     "generated_code_size_in_bytes",
+                     "host_argument_size_in_bytes",
+                     "peak_memory_in_bytes"):
+            v = getattr(ma, attr, None)
+            if v is not None:
+                out[attr] = int(v)
+    except Exception as e:  # CPU backend may not implement everything
+        out["error"] = f"{type(e).__name__}: {e}"
+    return out
+
+
+def _cost_info(compiled) -> dict:
+    out = {}
+    try:
+        ca = compiled.cost_analysis()
+        if isinstance(ca, (list, tuple)):
+            ca = ca[0]
+        for k, v in ca.items():
+            if isinstance(v, (int, float)):
+                out[k] = float(v)
+    except Exception as e:
+        out["error"] = f"{type(e).__name__}: {e}"
+    return out
+
+
+def _lower_cell(cfg, shape, mesh, specs, pure_dp: bool = False):
+    """Build the jit'd step for one cell and lower it (shared by the
+    production and cost-exact compiles).
+
+    pure_dp: no tensor parallelism — params replicated over `model`, batch
+    spread over every mesh axis (the §Perf lever for small models)."""
+    from jax.sharding import PartitionSpec
+    dp = tuple(mesh.axis_names) if pure_dp else dp_axes(mesh)
+
+    def pspecs(abstract):
+        if pure_dp:
+            return jax.tree.map(
+                lambda l: PartitionSpec(*([None] * len(l.shape))), abstract)
+        return param_specs(abstract, cfg, mesh)
+
+    def bspecs(kind):
+        spec = batch_specs(cfg, mesh, kind)
+        if pure_dp:
+            spec = jax.tree.map(
+                lambda s: PartitionSpec(dp, *list(s)[1:]), spec,
+                is_leaf=lambda x: isinstance(x, PartitionSpec))
+        return spec
+    with mesh:
+        p_sh = to_named(mesh, pspecs(specs["params"]))
+        if shape.kind == "train":
+            o_sh = to_named(mesh, pspecs(specs["opt_state"].mu))
+            opt_sh = type(specs["opt_state"])(
+                step=NamedSharding(mesh, P()), mu=o_sh, nu=o_sh)
+            b_sh = to_named(mesh, fit_spec_tree(
+                mesh, bspecs("train"), specs["batch"]))
+            step = make_train_step(cfg, make_optimizer(cfg))
+            jitted = jax.jit(step,
+                             in_shardings=(p_sh, opt_sh, b_sh),
+                             out_shardings=(p_sh, opt_sh, None),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(specs["params"], specs["opt_state"],
+                                   specs["batch"])
+        elif shape.kind == "prefill":
+            b_sh = to_named(mesh, fit_spec_tree(
+                mesh, bspecs("prefill"), specs["batch"]))
+            step = make_prefill_step(cfg)
+            jitted = jax.jit(step, in_shardings=(p_sh, b_sh))
+            lowered = jitted.lower(specs["params"], specs["batch"])
+        else:  # decode
+            c_sh = to_named(mesh, cache_specs(specs["caches"], cfg, mesh))
+            tok_spec = P(dp, None) if cfg.input_mode == "tokens" \
+                else P(dp, None, None)
+            tok_spec = fit_spec_tree(mesh, tok_spec, specs["tokens"])
+            tok_sh = NamedSharding(mesh, tok_spec)
+            out_tok = fit_spec_tree(
+                mesh, P(dp, None),
+                jax.ShapeDtypeStruct((shape.global_batch, 1), "int32"))
+            step = make_serve_step(cfg) if cfg.input_mode == "tokens" \
+                else _make_embeds_serve_step(cfg)
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_sh, c_sh, tok_sh, NamedSharding(mesh, P())),
+                out_shardings=(NamedSharding(mesh, out_tok), c_sh),
+                donate_argnums=(1,))
+            lowered = jitted.lower(specs["params"], specs["caches"],
+                                   specs["tokens"], specs["pos"])
+    return lowered
+
+
+def run_cell(arch: str, shape_name: str, mesh_kind: str,
+             out_dir: str | None = None, save_hlo: bool = False,
+             cost_exact: bool = True, overrides: dict | None = None,
+             tag: str = "") -> dict:
+    cfg = get_config(arch)
+    shape = get_shape(shape_name)
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multipod"))
+    overrides = dict(overrides or {})
+    pure_dp = bool(overrides.pop("pure_dp", False))
+    if pure_dp:
+        # §Perf lever for small models: no TP — replicate params over the
+        # model axis and spread the batch over BOTH axes (256-way DP).
+        cfg = cfg.with_(tp_size=1)
+    else:
+        cfg = cfg.with_(act_shard=(dp_axes(mesh), "model"),
+                        tp_size=int(mesh.shape["model"]))
+    if overrides:
+        cfg = cfg.with_(**overrides)
+    specs = input_specs(cfg, shape)
+
+    t0 = time.time()
+    lowered = _lower_cell(cfg, shape, mesh, specs, pure_dp=pure_dp)
+    lower_s = time.time() - t0
+    t1 = time.time()
+    with mesh:
+        compiled = lowered.compile()
+    compile_s = time.time() - t1
+
+    mem = _mem_info(compiled)
+    cost = _cost_info(compiled)
+    hlo = compiled.as_text()
+    coll = collective_stats(hlo)
+
+    # Second, trip-count-exact cost model for the roofline terms (single-pod
+    # only — the roofline table is single-pod per the brief).  XLA prices a
+    # while-loop body once, so the production compile undercounts FLOPs /
+    # collective bytes by each scan's trip count.  Rather than unrolling the
+    # FULL stack (10-minute compiles for SSD models), compile the unrolled
+    # variant at `period` and `2*period` layers and extrapolate linearly —
+    # exact for uniform stacks since everything outside the layer loop
+    # (embed/head/loss/optimizer-global) is depth-independent.
+    exact = None
+    if cost_exact and mesh_kind == "pod":
+        t2 = time.time()
+        exact = _cost_exact_extrapolated(cfg, shape, mesh, pure_dp)
+        exact["compile_s"] = round(time.time() - t2, 2)
+
+    record = {
+        "arch": arch, "shape": shape_name, "mesh": mesh_kind,
+        "mesh_shape": list(mesh.devices.shape), "chips": mesh.devices.size,
+        "kind": shape.kind, "seq_len": shape.seq_len,
+        "global_batch": shape.global_batch,
+        "lower_s": round(lower_s, 2), "compile_s": round(compile_s, 2),
+        "memory_analysis": mem, "cost_analysis": cost,
+        "collectives": coll.summary(),
+        "param_bytes_per_device": bytes_per_device(
+            specs["params"], param_specs(specs["params"], cfg, mesh), mesh),
+        "hlo_bytes": len(hlo),
+    }
+    if exact is not None:
+        record["cost_exact"] = exact
+    if shape.kind == "decode":
+        record["cache_bytes_per_device"] = bytes_per_device(
+            specs["caches"], cache_specs(specs["caches"], cfg, mesh), mesh)
+    if shape.kind == "train":
+        record["opt_bytes_per_device"] = 2 * record["param_bytes_per_device"]
+
+    if tag:
+        record["tag"] = tag
+        record["overrides"] = {**overrides, "pure_dp": pure_dp}
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        suffix = f"__{tag}" if tag else ""
+        name = f"{arch}__{shape_name}__{mesh_kind}{suffix}.json"
+        with open(os.path.join(out_dir, name), "w") as f:
+            json.dump(record, f, indent=1)
+        if save_hlo:
+            with open(os.path.join(out_dir, name[:-5] + ".hlo.txt"), "w") as f:
+                f.write(hlo)
+    return record
+
+
+def _cost_exact_extrapolated(cfg, shape, mesh, pure_dp: bool) -> dict:
+    """Exact-cost model via depth extrapolation (see run_cell comment)."""
+    p = cfg.period
+    subs = []
+    for L in (p, 2 * p):
+        cfgL = cfg.cost_exact_variant(shape.seq_len).with_(num_layers=L)
+        specsL = input_specs(cfgL, shape)
+        lowered = _lower_cell(cfgL, shape, mesh, specsL, pure_dp=pure_dp)
+        with mesh:
+            compiled = lowered.compile()
+        ca = _cost_info(compiled)
+        coll = collective_stats(compiled.as_text())
+        subs.append({"layers": L, "cost_analysis": ca,
+                     "coll_bytes": coll.total_bytes,
+                     "coll_count": coll.total_count,
+                     "coll_by_op": dict(coll.bytes_by_op),
+                     "largest": coll.summary()["largest"]})
+        del compiled, lowered
+
+    L_full = cfg.num_layers
+    c1, c2 = subs[0], subs[1]
+
+    def extrap(v1: float, v2: float) -> float:
+        per_layer = (v2 - v1) / p
+        return max(v1 + per_layer * (L_full - p), 0.0)
+
+    cost: dict = {}
+    keys = set(c1["cost_analysis"]) | set(c2["cost_analysis"])
+    for k in keys:
+        a, b = c1["cost_analysis"].get(k), c2["cost_analysis"].get(k)
+        if isinstance(a, (int, float)) and isinstance(b, (int, float)):
+            cost[k] = extrap(a, b)
+    coll_by_op = {
+        k: extrap(c1["coll_by_op"].get(k, 0), c2["coll_by_op"].get(k, 0))
+        for k in set(c1["coll_by_op"]) | set(c2["coll_by_op"])}
+    return {
+        "method": f"depth-extrapolated ({p} and {2*p} unrolled layers -> "
+                  f"{L_full})",
+        "cost_analysis": cost,
+        "collectives": {
+            "total_bytes": sum(coll_by_op.values()),
+            "total_count": int(extrap(c1["coll_count"], c2["coll_count"])),
+            "bytes_by_op": coll_by_op,
+            "largest": c2["largest"],
+        },
+        "sub_compiles": subs,
+    }
+
+
+def _make_embeds_serve_step(cfg):
+    """Decode step for embeds-mode archs: greedy token out, embeds in."""
+    from repro.models import model as M
+    import jax.numpy as jnp
+
+    def serve_step(params, caches, embeds, pos):
+        logits, caches = M.decode_step(params, cfg, embeds, pos, caches)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok[:, None], caches
+
+    return serve_step
+
+
+def iter_cells(meshes=("pod", "multipod")):
+    for arch in ARCH_IDS:
+        cfg = get_config(arch)
+        for shape in applicable_shapes(cfg):
+            for mesh_kind in meshes:
+                yield arch, shape.name, mesh_kind
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--arch", choices=ARCH_IDS)
+    ap.add_argument("--shape",
+                    choices=["train_4k", "prefill_32k", "decode_32k",
+                             "long_500k"])
+    ap.add_argument("--mesh", choices=["pod", "multipod"], default="pod")
+    ap.add_argument("--all", action="store_true",
+                    help="run every applicable cell in subprocesses")
+    ap.add_argument("--out", default=RESULTS_DIR)
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--skip-existing", action="store_true")
+    ap.add_argument("--tag", default="", help="suffix for perf-iteration runs")
+    ap.add_argument("--override", action="append", default=[],
+                    metavar="KEY=VALUE",
+                    help="ModelConfig override (or pure_dp=1), repeatable")
+    args = ap.parse_args()
+
+    overrides = {}
+    for kv in args.override:
+        k, v = kv.split("=", 1)
+        if v in ("0", "1"):
+            overrides[k] = bool(int(v))
+        else:
+            try:
+                overrides[k] = int(v)
+            except ValueError:
+                overrides[k] = v
+
+    if args.all:
+        failures, done = [], 0
+        for arch, shape, mesh_kind in iter_cells():
+            tag = f"{arch} x {shape} x {mesh_kind}"
+            path = os.path.join(args.out, f"{arch}__{shape}__{mesh_kind}.json")
+            if args.skip_existing and os.path.exists(path):
+                print(f"[skip] {tag}", flush=True)
+                done += 1
+                continue
+            cmd = [sys.executable, "-m", "repro.launch.dryrun",
+                   "--arch", arch, "--shape", shape, "--mesh", mesh_kind,
+                   "--out", args.out]
+            if args.save_hlo:
+                cmd.append("--save-hlo")
+            t0 = time.time()
+            r = subprocess.run(cmd, capture_output=True, text=True)
+            if r.returncode == 0:
+                done += 1
+                print(f"[ok]   {tag} ({time.time()-t0:.0f}s)", flush=True)
+            else:
+                failures.append(tag)
+                print(f"[FAIL] {tag}\n{r.stdout[-2000:]}\n{r.stderr[-4000:]}",
+                      flush=True)
+        print(f"\n{done} cells ok, {len(failures)} failed")
+        for f in failures:
+            print("  FAIL:", f)
+        return 1 if failures else 0
+
+    if not args.arch or not args.shape:
+        ap.error("--arch and --shape required (or --all)")
+    try:
+        rec = run_cell(args.arch, args.shape, args.mesh, args.out,
+                       args.save_hlo, overrides=overrides, tag=args.tag)
+    except Exception:
+        traceback.print_exc()
+        return 1
+    ca, coll = rec["cost_analysis"], rec["collectives"]
+    print(json.dumps({
+        "cell": f'{rec["arch"]} x {rec["shape"]} x {rec["mesh"]}',
+        "compile_s": rec["compile_s"],
+        "flops": ca.get("flops"),
+        "bytes": ca.get("bytes accessed"),
+        "collective_bytes": coll["total_bytes"],
+        "collective_count": coll["total_count"],
+        "param_bytes_per_device": rec["param_bytes_per_device"],
+        "memory": rec["memory_analysis"],
+    }, indent=1))
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,116 @@
+"""Step functions + abstract input specs for every (arch x shape) cell.
+
+``input_specs`` returns weak-type-correct ShapeDtypeStructs so the dry-run
+lowers without allocating anything; train/serve use the same builders with
+real arrays.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from repro.models import model as M
+from repro.models.config import ModelConfig, ShapeConfig
+from repro.train.optimizer import AdamW, cosine_schedule
+
+
+def make_optimizer(cfg: ModelConfig, total_steps: int = 100_000) -> AdamW:
+    return AdamW(schedule=cosine_schedule(3e-4, 2000, total_steps))
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+def make_train_step(cfg: ModelConfig, optimizer: AdamW | None = None):
+    optimizer = optimizer or make_optimizer(cfg)
+
+    def train_step(params, opt_state, batch):
+        (loss, aux), grads = jax.value_and_grad(
+            M.loss_fn, has_aux=True)(params, cfg, batch)
+        params, opt_state, opt_metrics = optimizer.update(
+            grads, opt_state, params)
+        metrics = {"loss": loss, **aux, **opt_metrics}
+        return params, opt_state, metrics
+
+    return train_step
+
+
+def make_prefill_step(cfg: ModelConfig):
+    def prefill_step(params, batch):
+        return M.prefill(params, cfg,
+                         tokens=batch.get("tokens"),
+                         embeds=batch.get("embeds"))
+    return prefill_step
+
+
+def make_serve_step(cfg: ModelConfig):
+    """One synchronized decode step: next-token logits -> greedy token."""
+
+    def serve_step(params, caches, tokens, pos):
+        logits, caches = M.decode_step(params, cfg, tokens, pos, caches)
+        next_tok = jnp.argmax(logits[:, -1], axis=-1).astype(jnp.int32)
+        return next_tok[:, None], caches
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# abstract inputs
+# ---------------------------------------------------------------------------
+def _sds(shape, dtype):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def batch_specs_abstract(cfg: ModelConfig, shape: ShapeConfig,
+                         with_labels: bool = True) -> dict:
+    B, S = shape.global_batch, shape.seq_len
+    batch: dict[str, Any] = {}
+    if cfg.input_mode == "tokens":
+        batch["tokens"] = _sds((B, S), jnp.int32)
+    else:
+        batch["embeds"] = _sds((B, S, cfg.d_model), jnp.bfloat16)
+    if with_labels:
+        batch["labels"] = _sds((B, S), jnp.int32)
+    return batch
+
+
+def input_specs(cfg: ModelConfig, shape: ShapeConfig) -> dict:
+    """All abstract inputs for the cell's step function.
+
+    train:   {params, opt_state, batch}
+    prefill: {params, batch}
+    decode:  {params, caches, tokens, pos}
+    """
+    params = M.init_abstract(cfg)
+    if shape.kind == "train":
+        opt_state = jax.eval_shape(make_optimizer(cfg).init, params)
+        return {"params": params, "opt_state": opt_state,
+                "batch": batch_specs_abstract(cfg, shape)}
+    if shape.kind == "prefill":
+        return {"params": params,
+                "batch": batch_specs_abstract(cfg, shape, with_labels=False)}
+    if shape.kind == "decode":
+        B = shape.global_batch
+        caches = M.init_cache_abstract(cfg, B, shape.seq_len)
+        if cfg.input_mode == "tokens":
+            tok = _sds((B, 1), jnp.int32)
+        else:
+            tok = _sds((B, 1, cfg.d_model), jnp.bfloat16)
+        return {"params": params, "caches": caches, "tokens": tok,
+                "pos": _sds((), jnp.int32)}
+    raise ValueError(shape.kind)
+
+
+def concrete_batch(cfg: ModelConfig, B: int, S: int, key) -> dict:
+    """Real synthetic batch (smoke tests / examples)."""
+    k1, k2 = jax.random.split(key)
+    batch = {"labels": jax.random.randint(k2, (B, S), 0, cfg.vocab_size)}
+    if cfg.input_mode == "tokens":
+        batch["tokens"] = jax.random.randint(k1, (B, S), 0, cfg.vocab_size)
+    else:
+        batch["embeds"] = jax.random.normal(k1, (B, S, cfg.d_model),
+                                            jnp.bfloat16) * 0.02
+    return batch

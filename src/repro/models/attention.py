@@ -1,0 +1,221 @@
+"""GQA attention: chunked (flash-style) prefill/train path with O(S·chunk)
+memory, and a single-token decode path over a (optionally sliding-window
+ring) KV cache.  The Pallas kernel in kernels/flash_attention implements the
+same math for the TPU hot path; this module is the composable jnp version
+used under pjit (XLA SPMD shards it by batch/heads).
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import apply_rope, cdtype, dense_init
+
+NEG_INF = -1e30
+
+
+def constrain_heads(x, cfg: ModelConfig):
+    """Pin (B, S, H, hd) activations to batch-DP x head-TP sharding when the
+    launcher enabled act_shard and the head count divides the TP axis.
+    Without this, XLA's SPMD fallback for the GQA einsums is replicated
+    compute over the model axis (16x the attention FLOPs per chip)."""
+    if not cfg.act_shard:
+        return x
+    dp, tp = cfg.act_shard
+    heads = x.shape[2]
+    tp_ax = tp if heads % max(cfg.tp_size, 1) == 0 else None
+    from jax.sharding import PartitionSpec as P
+    return jax.lax.with_sharding_constraint(x, P(dp, None, tp_ax, None))
+
+
+def attn_init(key, cfg: ModelConfig):
+    D, H, KV, hd = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    ks = jax.random.split(key, 4)
+    p = {
+        "wq": dense_init(ks[0], (D, H * hd)),
+        "wk": dense_init(ks[1], (D, KV * hd)),
+        "wv": dense_init(ks[2], (D, KV * hd)),
+        "wo": dense_init(ks[3], (H * hd, D)),
+    }
+    if cfg.qkv_bias:
+        p["bq"] = jnp.zeros((H * hd,), jnp.float32)
+        p["bk"] = jnp.zeros((KV * hd,), jnp.float32)
+        p["bv"] = jnp.zeros((KV * hd,), jnp.float32)
+    return p
+
+
+class KVCache(NamedTuple):
+    k: jax.Array      # (B, C, KV, hd) — C = cache length (window for SWA)
+    v: jax.Array      # (B, C, KV, hd)
+    length: jax.Array  # () int32: total tokens written so far
+
+
+def init_kv_cache(cfg: ModelConfig, batch: int, cache_len: int,
+                  dtype=None) -> KVCache:
+    C = min(cache_len, cfg.sliding_window) if cfg.sliding_window else cache_len
+    KV, hd = cfg.num_kv_heads, cfg.resolved_head_dim
+    dt = dtype or cdtype(cfg)
+    return KVCache(
+        k=jnp.zeros((batch, C, KV, hd), dt),
+        v=jnp.zeros((batch, C, KV, hd), dt),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+# ---------------------------------------------------------------------------
+# chunked causal attention (train / prefill)
+# ---------------------------------------------------------------------------
+def chunked_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                      q_chunk: int = 1024, kv_chunk: int = 1024,
+                      base_q_pos: int = 0, unroll: bool = False) -> jax.Array:
+    """Flash-style two-level chunking with online softmax.
+
+    q: (B, Sq, H, hd); k: (B, Sk, H, hd); v: (B, Sk, H, hd_v).
+    GQA callers expand K/V to H heads BEFORE this call (a free repeat of
+    replicated tensors) so every einsum is cleanly head-sharded — the
+    grouped (KV, G) reshape forces XLA SPMD into replicated attention
+    compute (EXPERIMENTS.md §Perf iteration 1).
+    Memory is O(B*H*q_chunk*kv_chunk) scores instead of O(Sq*Sk).
+    """
+    B, Sq, H, hd = q.shape
+    Sk = k.shape[1]
+    assert k.shape[2] == H and v.shape[2] == H
+    hd_v = v.shape[-1]
+    scale = hd**-0.5
+    q_chunk = min(q_chunk, Sq)
+    kv_chunk = min(kv_chunk, Sk)
+    assert Sq % q_chunk == 0 and Sk % kv_chunk == 0
+
+    qc = q.reshape(B, Sq // q_chunk, q_chunk, H, hd).swapaxes(0, 1)
+    kc = k.reshape(B, Sk // kv_chunk, kv_chunk, H, hd).swapaxes(0, 1)
+    vc = v.reshape(B, Sk // kv_chunk, kv_chunk, H, hd_v).swapaxes(0, 1)
+
+    def q_block(qi, q_blk):
+        q_pos = base_q_pos + qi * q_chunk + jnp.arange(q_chunk)
+
+        def kv_block(carry, inputs):
+            acc, m, l = carry
+            ki, k_blk, v_blk = inputs
+            k_pos = ki * kv_chunk + jnp.arange(kv_chunk)
+            # scores: (B, q_chunk, H, kv_chunk)
+            s = jnp.einsum("bqhe,bshe->bqhs", q_blk.astype(jnp.float32),
+                           k_blk.astype(jnp.float32)) * scale
+            mask = jnp.ones((q_chunk, kv_chunk), bool)
+            if causal:
+                mask &= q_pos[:, None] >= k_pos[None, :]
+            if window:
+                mask &= k_pos[None, :] > q_pos[:, None] - window
+            s = jnp.where(mask[None, :, None, :], s, NEG_INF)
+            m_new = jnp.maximum(m, s.max(axis=-1))
+            p = jnp.exp(s - m_new[..., None])
+            corr = jnp.exp(m - m_new)
+            l_new = l * corr + p.sum(axis=-1)
+            pv = jnp.einsum("bqhs,bshe->bqhe", p,
+                            v_blk.astype(jnp.float32))
+            acc = acc * corr[..., None] + pv
+            return (acc, m_new, l_new), None
+
+        acc0 = jnp.zeros((B, q_chunk, H, hd_v), jnp.float32)
+        m0 = jnp.full((B, q_chunk, H), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((B, q_chunk, H), jnp.float32)
+        ks_idx = jnp.arange(Sk // kv_chunk)
+        (acc, m, l), _ = jax.lax.scan(kv_block, (acc0, m0, l0),
+                                      (ks_idx, kc, vc), unroll=unroll)
+        return acc / jnp.maximum(l[..., None], 1e-30)
+
+    def q_scan(_, args):
+        return None, q_block(*args)
+
+    _, out = jax.lax.scan(q_scan, None,
+                          (jnp.arange(Sq // q_chunk), qc), unroll=unroll)
+    out = out.swapaxes(0, 1).reshape(B, Sq, H, hd_v)
+    return out.astype(q.dtype)
+
+
+def attn_apply(params, x, positions, cfg: ModelConfig, *,
+               q_chunk: int = 0, kv_chunk: int = 0) -> jax.Array:
+    """Full-sequence causal attention (train / prefill)."""
+    q_chunk = q_chunk or cfg.q_chunk
+    kv_chunk = kv_chunk or cfg.kv_chunk
+    dt = cdtype(cfg)
+    B, S, D = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    q = x @ params["wq"].astype(dt)
+    k = x @ params["wk"].astype(dt)
+    v = x @ params["wv"].astype(dt)
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(dt)
+        k = k + params["bk"].astype(dt)
+        v = v + params["bv"].astype(dt)
+    q = q.reshape(B, S, H, hd)
+    k = k.reshape(B, S, KV, hd)
+    v = v.reshape(B, S, KV, hd)
+    q = apply_rope(q, positions, cfg.rope_theta)
+    k = apply_rope(k, positions, cfg.rope_theta)
+    # expand KV to H heads, then pin head-sharded layout (TP over heads)
+    groups = H // KV
+    if groups > 1:
+        k = jnp.repeat(k, groups, axis=2)
+        v = jnp.repeat(v, groups, axis=2)
+    q = constrain_heads(q, cfg)
+    k = constrain_heads(k, cfg)
+    v = constrain_heads(v, cfg)
+    out = chunked_attention(q, k, v, causal=True, window=cfg.sliding_window,
+                            q_chunk=q_chunk, kv_chunk=kv_chunk,
+                            unroll=cfg.unroll_scans)
+    out = constrain_heads(out, cfg)
+    return out.reshape(B, S, H * hd) @ params["wo"].astype(dt)
+
+
+# ---------------------------------------------------------------------------
+# decode path
+# ---------------------------------------------------------------------------
+def attn_decode(params, x, pos, cache: KVCache, cfg: ModelConfig
+                ) -> tuple[jax.Array, KVCache]:
+    """One-token decode. x: (B, 1, D); pos: () int32 absolute position.
+
+    The cache is a ring buffer of length C (= sliding window for SWA models,
+    else the max context); attention is masked to valid / in-window entries.
+    """
+    dt = cdtype(cfg)
+    B, _, D = x.shape
+    H, KV, hd = cfg.num_heads, cfg.num_kv_heads, cfg.resolved_head_dim
+    C = cache.k.shape[1]
+
+    q = x @ params["wq"].astype(dt)
+    k = x @ params["wk"].astype(dt)
+    v = x @ params["wv"].astype(dt)
+    if cfg.qkv_bias:
+        q = q + params["bq"].astype(dt)
+        k = k + params["bk"].astype(dt)
+        v = v + params["bv"].astype(dt)
+    q = q.reshape(B, 1, H, hd)
+    k = k.reshape(B, 1, KV, hd)
+    v = v.reshape(B, 1, KV, hd)
+    posv = jnp.full((B, 1), pos, jnp.int32)
+    q = apply_rope(q, posv, cfg.rope_theta)
+    k = apply_rope(k, posv, cfg.rope_theta)
+
+    slot = pos % C
+    new_k = jax.lax.dynamic_update_slice_in_dim(cache.k, k.astype(cache.k.dtype), slot, axis=1)
+    new_v = jax.lax.dynamic_update_slice_in_dim(cache.v, v.astype(cache.v.dtype), slot, axis=1)
+    cache = KVCache(new_k, new_v, pos + 1)
+
+    # positions stored in each ring slot (for masking)
+    idx = jnp.arange(C)
+    stored_pos = jnp.where(idx <= slot, pos - (slot - idx), pos - (slot + C - idx))
+    valid = stored_pos >= 0
+    if cfg.sliding_window:
+        valid &= stored_pos > pos - cfg.sliding_window
+
+    groups = H // KV
+    qr = q.reshape(B, KV, groups, hd).astype(jnp.float32)
+    s = jnp.einsum("bkgh,bckh->bkgc", qr, new_k.astype(jnp.float32)) * hd**-0.5
+    s = jnp.where(valid[None, None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    o = jnp.einsum("bkgc,bckh->bkgh", p, new_v.astype(jnp.float32))
+    o = o.reshape(B, 1, H * hd).astype(dt)
+    return o @ params["wo"].astype(dt), cache

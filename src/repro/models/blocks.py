@@ -1,0 +1,84 @@
+"""Decoder blocks: (pre-norm mixer + residual) -> (pre-norm FFN + residual),
+with the mixer/FFN kinds chosen by the layer descriptor (dense / MoE / Mamba /
+GQA / MLA / SWA)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .attention import attn_apply, attn_decode, attn_init, init_kv_cache
+from .config import FFNKind, MixerKind, ModelConfig
+from .layers import mlp_apply, mlp_init, rms_norm, rms_norm_init
+from .mamba2 import init_mamba_cache, mamba_apply, mamba_decode, mamba_init
+from .mla import init_mla_cache, mla_apply, mla_decode, mla_init
+from .moe import moe_apply, moe_init
+
+
+def layer_init(key, cfg: ModelConfig, desc: tuple[MixerKind, FFNKind]):
+    mixer_kind, ffn_kind = desc
+    k1, k2 = jax.random.split(key)
+    p = {"mixer_norm": rms_norm_init(cfg.d_model)}
+    if mixer_kind == "attn":
+        p["mixer"] = attn_init(k1, cfg)
+    elif mixer_kind == "mla":
+        p["mixer"] = mla_init(k1, cfg)
+    else:
+        p["mixer"] = mamba_init(k1, cfg)
+    if ffn_kind != "none":
+        p["ffn_norm"] = rms_norm_init(cfg.d_model)
+        p["ffn"] = mlp_init(k2, cfg.d_model, cfg.d_ff) if ffn_kind == "dense" \
+            else moe_init(k2, cfg)
+    return p
+
+
+def layer_apply(params, x, positions, cfg: ModelConfig,
+                desc: tuple[MixerKind, FFNKind]) -> tuple[jax.Array, dict]:
+    """Full-sequence (train / prefill) layer."""
+    mixer_kind, ffn_kind = desc
+    h = rms_norm(params["mixer_norm"], x, cfg.norm_eps)
+    if mixer_kind == "attn":
+        h = attn_apply(params["mixer"], h, positions, cfg)
+    elif mixer_kind == "mla":
+        h = mla_apply(params["mixer"], h, positions, cfg)
+    else:
+        h = mamba_apply(params["mixer"], h, positions, cfg)
+    x = x + h
+    aux: dict = {}
+    if ffn_kind != "none":
+        h = rms_norm(params["ffn_norm"], x, cfg.norm_eps)
+        if ffn_kind == "dense":
+            h = mlp_apply(params["ffn"], h, cfg)
+        else:
+            h, aux = moe_apply(params["ffn"], h, cfg)
+        x = x + h
+    return x, aux
+
+
+def layer_cache_init(cfg: ModelConfig, desc, batch: int, cache_len: int):
+    mixer_kind, _ = desc
+    if mixer_kind == "attn":
+        return init_kv_cache(cfg, batch, cache_len)
+    if mixer_kind == "mla":
+        return init_mla_cache(cfg, batch, cache_len)
+    return init_mamba_cache(cfg, batch)
+
+
+def layer_decode(params, x, pos, cache, cfg: ModelConfig, desc):
+    """One-token decode step. x: (B, 1, D)."""
+    mixer_kind, ffn_kind = desc
+    h = rms_norm(params["mixer_norm"], x, cfg.norm_eps)
+    if mixer_kind == "attn":
+        h, cache = attn_decode(params["mixer"], h, pos, cache, cfg)
+    elif mixer_kind == "mla":
+        h, cache = mla_decode(params["mixer"], h, pos, cache, cfg)
+    else:
+        h, cache = mamba_decode(params["mixer"], h, pos, cache, cfg)
+    x = x + h
+    if ffn_kind != "none":
+        h = rms_norm(params["ffn_norm"], x, cfg.norm_eps)
+        if ffn_kind == "dense":
+            h = mlp_apply(params["ffn"], h, cfg)
+        else:
+            h, _ = moe_apply(params["ffn"], h, cfg)
+        x = x + h
+    return x, cache

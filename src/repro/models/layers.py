@@ -1,0 +1,101 @@
+"""Shared layers: RMSNorm, SwiGLU MLP, embeddings, RoPE. Pure functions over
+parameter pytrees (nested dicts of jnp arrays); params live in fp32, compute
+runs in cfg.dtype (bf16 by default)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+
+
+def cdtype(cfg: ModelConfig):
+    return jnp.dtype(cfg.dtype)
+
+
+def dense_init(key, shape, in_axis: int = 0, scale: float = 1.0):
+    fan_in = shape[in_axis]
+    std = scale / jnp.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -3, 3, shape, jnp.float32) * std)
+
+
+# -- RMSNorm -----------------------------------------------------------------
+def rms_norm_init(d: int):
+    return {"scale": jnp.ones((d,), jnp.float32)}
+
+
+def rms_norm(params, x, eps: float):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    y = xf * jax.lax.rsqrt(var + eps)
+    return (y * params["scale"]).astype(dt)
+
+
+# -- SwiGLU MLP ---------------------------------------------------------------
+def mlp_init(key, d_model: int, d_ff: int):
+    k1, k2, k3 = jax.random.split(key, 3)
+    return {
+        "w_gate": dense_init(k1, (d_model, d_ff)),
+        "w_in": dense_init(k2, (d_model, d_ff)),
+        "w_out": dense_init(k3, (d_ff, d_model)),
+    }
+
+
+def mlp_apply(params, x, cfg: ModelConfig):
+    dt = cdtype(cfg)
+    g = x @ params["w_gate"].astype(dt)
+    h = x @ params["w_in"].astype(dt)
+    return (jax.nn.silu(g) * h) @ params["w_out"].astype(dt)
+
+
+# -- Embedding / LM head --------------------------------------------------------
+def embed_init(key, cfg: ModelConfig):
+    k1, k2 = jax.random.split(key)
+    p = {"embed": {"w": jax.random.normal(k1, (cfg.vocab_size, cfg.d_model),
+                                          jnp.float32) * 0.02}}
+    if not cfg.tie_embeddings:
+        p["head"] = {"w": dense_init(k2, (cfg.d_model, cfg.vocab_size))}
+    return p
+
+
+def embed_apply(params, tokens, cfg: ModelConfig):
+    return params["embed"]["w"].astype(cdtype(cfg))[tokens]
+
+
+def head_apply(params, x, cfg: ModelConfig):
+    if cfg.tie_embeddings:
+        w = params["embed"]["w"].T
+    else:
+        w = params["head"]["w"]
+    logits = x @ w.astype(x.dtype)
+    return logits.astype(jnp.float32) if cfg.logits_fp32 else logits
+
+
+# -- RoPE ----------------------------------------------------------------------
+def rope_frequencies(head_dim: int, theta: float) -> jax.Array:
+    return 1.0 / (theta ** (jnp.arange(0, head_dim, 2, dtype=jnp.float32) / head_dim))
+
+
+def apply_rope(x: jax.Array, positions: jax.Array, theta: float) -> jax.Array:
+    """x: (..., S, H, hd); positions: broadcastable to (..., S)."""
+    hd = x.shape[-1]
+    freqs = rope_frequencies(hd, theta)                     # (hd/2,)
+    angles = positions[..., :, None, None].astype(jnp.float32) * freqs  # (...,S,1,hd/2)
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = jnp.split(x.astype(jnp.float32), 2, axis=-1)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    return out.astype(x.dtype)
+
+
+# -- losses ----------------------------------------------------------------------
+def softmax_cross_entropy(logits: jax.Array, labels: jax.Array,
+                          mask: jax.Array | None = None) -> jax.Array:
+    """Mean token cross-entropy; logits (B,S,V) fp32, labels (B,S) int."""
+    logz = jax.nn.logsumexp(logits, axis=-1)
+    ll = jnp.take_along_axis(logits, labels[..., None], axis=-1)[..., 0]
+    nll = logz - ll
+    if mask is None:
+        return nll.mean()
+    mask = mask.astype(nll.dtype)
+    return (nll * mask).sum() / jnp.maximum(mask.sum(), 1.0)

@@ -1,0 +1,193 @@
+"""Mamba2 mixer — SSD (state-space duality), arXiv:2405.21060.
+
+Training/prefill uses the chunked SSD algorithm: within-chunk quadratic form
+plus an inter-chunk linear state recurrence, expressed as ONE ``lax.scan``
+over chunks so the (Lc x Lc) decay matrix only ever exists for the current
+chunk.  Decode is the O(1)-state recurrence.  kernels/ssd_scan provides the
+Pallas TPU version of the chunk kernel; this module is the jnp oracle-grade
+implementation used under pjit.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import cdtype, dense_init
+
+
+def mamba_init(key, cfg: ModelConfig):
+    D = cfg.d_model
+    din = cfg.d_inner
+    G, N, nh = cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    conv_dim = din + 2 * G * N
+    zdim = 2 * din + 2 * G * N + nh          # [z, x, B, C, dt]
+    ks = jax.random.split(key, 4)
+    return {
+        "w_in": dense_init(ks[0], (D, zdim)),
+        "conv_w": jax.random.normal(ks[1], (cfg.ssm_conv, conv_dim),
+                                    jnp.float32) * 0.1,
+        "conv_b": jnp.zeros((conv_dim,), jnp.float32),
+        "A_log": jnp.log(jnp.linspace(1.0, 16.0, nh).astype(jnp.float32)),
+        "D_skip": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.log(jnp.expm1(jnp.full((nh,), 0.01, jnp.float32))),
+        "norm_scale": jnp.ones((din,), jnp.float32),
+        "w_out": dense_init(ks[2], (din, D)),
+    }
+
+
+class MambaCache(NamedTuple):
+    conv: jax.Array   # (B, k-1, conv_dim) last inputs to the causal conv
+    ssm: jax.Array    # (B, nh, hd, N) state
+    length: jax.Array
+
+
+def init_mamba_cache(cfg: ModelConfig, batch: int, dtype=None) -> MambaCache:
+    dt = dtype or cdtype(cfg)
+    G, N = cfg.ssm_groups, cfg.ssm_state
+    conv_dim = cfg.d_inner + 2 * G * N
+    return MambaCache(
+        conv=jnp.zeros((batch, cfg.ssm_conv - 1, conv_dim), dt),
+        ssm=jnp.zeros((batch, cfg.ssm_heads, cfg.ssm_head_dim, N), jnp.float32),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def _split_proj(params, x, cfg: ModelConfig):
+    dt_ = cdtype(cfg)
+    din, G, N, nh = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state, cfg.ssm_heads
+    zxbcdt = x @ params["w_in"].astype(dt_)
+    z, xbc, dt_raw = jnp.split(zxbcdt, [din, 2 * din + 2 * G * N], axis=-1)
+    return z, xbc, dt_raw
+
+
+def _causal_conv(params, xbc, cfg: ModelConfig):
+    """Depthwise causal conv1d + SiLU over the [x, B, C] channels."""
+    k = cfg.ssm_conv
+    pad = jnp.pad(xbc, ((0, 0), (k - 1, 0), (0, 0)))
+    w = params["conv_w"].astype(xbc.dtype)                 # (k, conv_dim)
+    out = sum(pad[:, i : i + xbc.shape[1], :] * w[i] for i in range(k))
+    return jax.nn.silu(out + params["conv_b"].astype(xbc.dtype))
+
+
+def _gated_norm(params, y, z, eps):
+    g = y * jax.nn.silu(z)
+    gf = g.astype(jnp.float32)
+    var = jnp.mean(gf * gf, axis=-1, keepdims=True)
+    out = gf * jax.lax.rsqrt(var + eps) * params["norm_scale"]
+    return out.astype(y.dtype)
+
+
+def _segsum(a):
+    """a: (B, L, H) -> (B, H, L, L) lower-triangular pairwise sums
+    exp-arg[i,j] = sum_{k=j+1..i} a_k for i >= j."""
+    cs = jnp.cumsum(a, axis=1)                              # (B, L, H)
+    d = cs[:, :, None, :] - cs[:, None, :, :]               # (B, L, L, H)
+    L = a.shape[1]
+    mask = jnp.tril(jnp.ones((L, L), bool))
+    return jnp.where(mask[None, :, :, None], d, -jnp.inf).transpose(0, 3, 1, 2)
+
+
+def ssd_chunk_scan(xdt, Bm, Cm, a, state0, unroll: bool = False):
+    """The SSD core over pre-chunked inputs.
+
+    xdt: (B, nc, Lc, H, P)  -- dt * x
+    Bm, Cm: (B, nc, Lc, H, N)
+    a:   (B, nc, Lc, H)     -- dt * A (negative)
+    state0: (B, H, P, N)
+    Returns y: (B, nc, Lc, H, P), final state.
+    """
+
+    def body(S, inp):
+        x_c, B_c, C_c, a_c = inp                          # leading axis = chunk
+        cs = jnp.cumsum(a_c, axis=1)                       # (B, Lc, H)
+        Lmat = jnp.exp(_segsum(a_c))                       # (B, H, Lc, Lc)
+        y_diag = jnp.einsum("blhn,bshn,bhls,bshp->blhp",
+                            C_c, B_c, Lmat, x_c)
+        decay_out = jnp.exp(cs)                            # (B, Lc, H)
+        y_off = jnp.einsum("blhn,bhpn,blh->blhp", C_c, S, decay_out)
+        decay_state = jnp.exp(cs[:, -1:, :] - cs)          # (B, Lc, H)
+        new_states = jnp.einsum("blhn,blh,blhp->bhpn",
+                                B_c, decay_state, x_c)
+        S = S * jnp.exp(cs[:, -1, :])[:, :, None, None] + new_states
+        return S, y_diag + y_off
+
+    # scan over the chunk axis
+    xs = (xdt.swapaxes(0, 1), Bm.swapaxes(0, 1), Cm.swapaxes(0, 1),
+          a.swapaxes(0, 1))
+    state, y = jax.lax.scan(body, state0, xs, unroll=unroll)
+    return y.swapaxes(0, 1), state
+
+
+def mamba_apply(params, x, positions, cfg: ModelConfig) -> jax.Array:
+    """Full-sequence SSD. x: (B, S, D)."""
+    del positions
+    dt_ = cdtype(cfg)
+    B, S, D = x.shape
+    din, G, N = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state
+    nh, P = cfg.ssm_heads, cfg.ssm_head_dim
+    Lc = min(cfg.ssm_chunk, S)
+    assert S % Lc == 0, f"seq {S} % chunk {Lc}"
+    nc = S // Lc
+
+    z, xbc, dt_raw = _split_proj(params, x, cfg)
+    xbc = _causal_conv(params, xbc, cfg)
+    xs, Bc, Cc = jnp.split(xbc, [din, din + G * N], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32)
+                         + params["dt_bias"])              # (B,S,nh)
+    A = -jnp.exp(params["A_log"])                          # (nh,)
+    a = dt * A                                             # (B,S,nh)
+
+    xh = xs.reshape(B, S, nh, P).astype(jnp.float32)
+    xdt = xh * dt[..., None]
+    heads_per_group = nh // G
+    Bm = jnp.repeat(Bc.reshape(B, S, G, N), heads_per_group, axis=2
+                    ).astype(jnp.float32)
+    Cm = jnp.repeat(Cc.reshape(B, S, G, N), heads_per_group, axis=2
+                    ).astype(jnp.float32)
+
+    chunk = lambda t: t.reshape(B, nc, Lc, *t.shape[2:])
+    state0 = jnp.zeros((B, nh, P, N), jnp.float32)
+    y, _ = ssd_chunk_scan(chunk(xdt), chunk(Bm), chunk(Cm),
+                          chunk(a), state0, unroll=cfg.unroll_scans)
+    y = y.reshape(B, S, nh, P) + params["D_skip"][None, None, :, None] * xh
+    y = y.reshape(B, S, din).astype(dt_)
+    y = _gated_norm(params, y, z, cfg.norm_eps)
+    return y @ params["w_out"].astype(dt_)
+
+
+def mamba_decode(params, x, pos, cache: MambaCache, cfg: ModelConfig
+                 ) -> tuple[jax.Array, MambaCache]:
+    """One-token recurrence. x: (B, 1, D)."""
+    del pos
+    dt_ = cdtype(cfg)
+    B = x.shape[0]
+    din, G, N = cfg.d_inner, cfg.ssm_groups, cfg.ssm_state
+    nh, P = cfg.ssm_heads, cfg.ssm_head_dim
+
+    z, xbc, dt_raw = _split_proj(params, x, cfg)           # (B,1,*)
+    window = jnp.concatenate([cache.conv, xbc.astype(cache.conv.dtype)], axis=1)
+    w = params["conv_w"].astype(xbc.dtype)                 # (k, conv_dim)
+    conv_out = (window * w[None]).sum(axis=1) + params["conv_b"].astype(xbc.dtype)
+    xbc1 = jax.nn.silu(conv_out)                           # (B, conv_dim)
+    xs, Bc, Cc = jnp.split(xbc1, [din, din + G * N], axis=-1)
+
+    dt = jax.nn.softplus(dt_raw[:, 0].astype(jnp.float32) + params["dt_bias"])
+    A = -jnp.exp(params["A_log"])
+    decay = jnp.exp(dt * A)                                # (B, nh)
+
+    xh = xs.reshape(B, nh, P).astype(jnp.float32)
+    hpg = nh // G
+    Bm = jnp.repeat(Bc.reshape(B, G, N), hpg, axis=1).astype(jnp.float32)
+    Cm = jnp.repeat(Cc.reshape(B, G, N), hpg, axis=1).astype(jnp.float32)
+
+    S = cache.ssm * decay[:, :, None, None] + jnp.einsum(
+        "bhp,bhn->bhpn", xh * dt[..., None], Bm)
+    y = jnp.einsum("bhpn,bhn->bhp", S, Cm) + params["D_skip"][None, :, None] * xh
+    y = y.reshape(B, 1, din).astype(dt_)
+    y = _gated_norm(params, y, z, cfg.norm_eps)
+    new_cache = MambaCache(window[:, 1:], S, cache.length + 1)
+    return y @ params["w_out"].astype(dt_), new_cache

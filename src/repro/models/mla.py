@@ -1,0 +1,146 @@
+"""Multi-head Latent Attention (DeepSeek-V2): the KV cache is a compressed
+latent c_kv (kv_lora_rank) plus a shared rotary key (qk_rope_dim) per token —
+~an order of magnitude smaller than GQA caches.  Decode decompresses K/V
+through the up-projections; prefill materializes K/V per chunk inside the
+flash-style loop so full K/V for the sequence never exists at once.
+"""
+from __future__ import annotations
+
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+from .attention import chunked_attention
+from .config import ModelConfig
+from .layers import apply_rope, cdtype, dense_init
+
+NEG_INF = -1e30
+
+
+def mla_init(key, cfg: ModelConfig):
+    D, H = cfg.d_model, cfg.num_heads
+    qd = cfg.qk_nope_dim + cfg.qk_rope_dim
+    ks = jax.random.split(key, 5)
+    return {
+        "wq": dense_init(ks[0], (D, H * qd)),
+        "w_dkv": dense_init(ks[1], (D, cfg.kv_lora_rank)),
+        "w_kr": dense_init(ks[2], (D, cfg.qk_rope_dim)),
+        "w_uk": dense_init(ks[3], (cfg.kv_lora_rank, H * cfg.qk_nope_dim)),
+        "w_uv": dense_init(ks[3], (cfg.kv_lora_rank, H * cfg.v_head_dim)),
+        "wo": dense_init(ks[4], (H * cfg.v_head_dim, D)),
+    }
+
+
+class MLACache(NamedTuple):
+    c_kv: jax.Array    # (B, C, kv_lora_rank)
+    k_rope: jax.Array  # (B, C, qk_rope_dim)
+    length: jax.Array
+
+
+def init_mla_cache(cfg: ModelConfig, batch: int, cache_len: int, dtype=None) -> MLACache:
+    dt = dtype or cdtype(cfg)
+    return MLACache(
+        c_kv=jnp.zeros((batch, cache_len, cfg.kv_lora_rank), dt),
+        k_rope=jnp.zeros((batch, cache_len, cfg.qk_rope_dim), dt),
+        length=jnp.zeros((), jnp.int32),
+    )
+
+
+def _project_qkv(params, x, positions, cfg: ModelConfig):
+    dt = cdtype(cfg)
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    qd = cfg.qk_nope_dim + cfg.qk_rope_dim
+    q = (x @ params["wq"].astype(dt)).reshape(B, S, H, qd)
+    q_nope, q_rope = jnp.split(q, [cfg.qk_nope_dim], axis=-1)
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+    c_kv = x @ params["w_dkv"].astype(dt)                       # (B,S,r)
+    k_rope = x @ params["w_kr"].astype(dt)                      # (B,S,rd)
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0]
+    return q_nope, q_rope, c_kv, k_rope
+
+
+def _decompress(params, c_kv, cfg: ModelConfig):
+    dt = c_kv.dtype
+    B, S, _ = c_kv.shape
+    H = cfg.num_heads
+    k_nope = (c_kv @ params["w_uk"].astype(dt)).reshape(B, S, H, cfg.qk_nope_dim)
+    v = (c_kv @ params["w_uv"].astype(dt)).reshape(B, S, H, cfg.v_head_dim)
+    return k_nope, v
+
+
+def mla_apply(params, x, positions, cfg: ModelConfig, *,
+              q_chunk: int = 0, kv_chunk: int = 0) -> jax.Array:
+    """Full-sequence causal MLA (train / prefill)."""
+    q_chunk = q_chunk or cfg.q_chunk
+    kv_chunk = kv_chunk or cfg.kv_chunk
+    dt = cdtype(cfg)
+    B, S, _ = x.shape
+    H = cfg.num_heads
+    q_nope, q_rope, c_kv, k_rope = _project_qkv(params, x, positions, cfg)
+    k_nope, v = _decompress(params, c_kv, cfg)
+    # fold the shared rotary key into per-head keys; queries concat likewise
+    k_rope_h = jnp.broadcast_to(k_rope[:, :, None, :],
+                                (B, S, H, cfg.qk_rope_dim))
+    q = jnp.concatenate([q_nope, q_rope], axis=-1)
+    k = jnp.concatenate([k_nope, k_rope_h], axis=-1)
+    from .attention import constrain_heads
+    q = constrain_heads(q, cfg)
+    k = constrain_heads(k, cfg)
+    v = constrain_heads(v, cfg)
+    out = chunked_attention(q, k, v, causal=True,
+                            q_chunk=q_chunk, kv_chunk=kv_chunk,
+                            unroll=cfg.unroll_scans)
+    out = out.reshape(B, S, H * cfg.v_head_dim)
+    return out @ params["wo"].astype(dt)
+
+
+def mla_decode(params, x, pos, cache: MLACache, cfg: ModelConfig
+               ) -> tuple[jax.Array, MLACache]:
+    """One-token decode against the compressed cache."""
+    dt = cdtype(cfg)
+    B, _, D = x.shape
+    H = cfg.num_heads
+    C = cache.c_kv.shape[1]
+    posv = jnp.full((B, 1), pos, jnp.int32)
+    q_nope, q_rope, c_kv_new, k_rope_new = _project_qkv(params, x, posv, cfg)
+
+    c_kv = jax.lax.dynamic_update_slice_in_dim(
+        cache.c_kv, c_kv_new.astype(cache.c_kv.dtype), pos, axis=1)
+    k_rope = jax.lax.dynamic_update_slice_in_dim(
+        cache.k_rope, k_rope_new.astype(cache.k_rope.dtype), pos, axis=1)
+    cache = MLACache(c_kv, k_rope, pos + 1)
+
+    valid = jnp.arange(C) <= pos
+    rd = cfg.qk_rope_dim
+    scale = (cfg.qk_nope_dim + rd) ** -0.5
+    if cfg.mla_absorb:
+        # Absorbed attention: fold w_uk into the query and w_uv into the
+        # output so scores/values are taken against the (B, C, r) latent —
+        # O(C*r) per head-step instead of O(C*r*head_dim) decompression.
+        r = cfg.kv_lora_rank
+        w_uk = params["w_uk"].astype(jnp.float32).reshape(
+            r, H, cfg.qk_nope_dim)
+        q_abs = jnp.einsum("bqhd,rhd->bhr", q_nope.astype(jnp.float32), w_uk)
+        s = jnp.einsum("bhr,bcr->bhc", q_abs, c_kv.astype(jnp.float32))
+        s = s + jnp.einsum("bqhd,bcd->bhc", q_rope.astype(jnp.float32),
+                           k_rope.astype(jnp.float32))
+        s = jnp.where(valid[None, None, :], s * scale, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o_lat = jnp.einsum("bhc,bcr->bhr", p, c_kv.astype(jnp.float32))
+        w_uv = params["w_uv"].astype(jnp.float32).reshape(
+            r, H, cfg.v_head_dim)
+        o = jnp.einsum("bhr,rhd->bhd", o_lat, w_uv)
+    else:
+        # baseline: decompress K/V for the whole cache, then attend
+        k_nope, v = _decompress(params, c_kv, cfg)           # (B,C,H,*)
+        s = jnp.einsum("bqhd,bchd->bhc", q_nope.astype(jnp.float32),
+                       k_nope.astype(jnp.float32))
+        s = s + jnp.einsum("bqhd,bcd->bhc", q_rope.astype(jnp.float32),
+                           k_rope.astype(jnp.float32))
+        s = jnp.where(valid[None, None, :], s * scale, NEG_INF)
+        p = jax.nn.softmax(s, axis=-1)
+        o = jnp.einsum("bhc,bchd->bhd", p, v.astype(jnp.float32))
+    o = o.reshape(B, 1, H * cfg.v_head_dim).astype(dt)
+    return o @ params["wo"].astype(dt), cache

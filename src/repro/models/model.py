@@ -1,0 +1,169 @@
+"""The unified causal LM over all 10 architectures.
+
+Decoder = ``lax.scan`` over ``num_periods`` stacked super-blocks; each
+super-block unrolls the period's layer descriptors (1 for homogeneous models,
+8 for Jamba).  HLO size therefore stays ~one period regardless of depth —
+essential for compiling 88-layer configs in the dry-run.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Any
+
+import jax
+import jax.numpy as jnp
+
+from .blocks import (layer_apply, layer_cache_init, layer_decode, layer_init)
+from .config import ModelConfig
+from .layers import (cdtype, embed_apply, embed_init, head_apply, rms_norm,
+                     rms_norm_init, softmax_cross_entropy)
+
+
+# ---------------------------------------------------------------------------
+# init
+# ---------------------------------------------------------------------------
+def init_params(cfg: ModelConfig, key: jax.Array) -> dict:
+    program = cfg.layer_program()
+    keys = jax.random.split(key, len(program) + 1)
+    params: dict[str, Any] = embed_init(keys[-1], cfg)
+    layers = {}
+    for p, desc in enumerate(program):
+        pk = jax.random.split(keys[p], cfg.num_periods)
+        layers[f"p{p}"] = jax.vmap(
+            functools.partial(layer_init, cfg=cfg, desc=desc))(pk)
+    params["layers"] = layers
+    params["final_norm"] = rms_norm_init(cfg.d_model)
+    return params
+
+
+def init_abstract(cfg: ModelConfig) -> dict:
+    """Parameter ShapeDtypeStructs without allocating (dry-run path)."""
+    return jax.eval_shape(lambda k: init_params(cfg, k),
+                          jax.ShapeDtypeStruct((2,), jnp.uint32))
+
+
+# ---------------------------------------------------------------------------
+# forward (train / prefill)
+# ---------------------------------------------------------------------------
+def constrain_residual(x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Pin the (B, S, D) residual stream to batch-DP sharding at layer
+    boundaries.  Without this XLA SPMD may choose a weight-stationary
+    strategy per layer (all-reducing batch-replicated activations) —
+    catastrophic at depth (§Perf)."""
+    if not cfg.act_shard:
+        return x
+    from jax.sharding import PartitionSpec as P
+    dp, _ = cfg.act_shard
+    return jax.lax.with_sharding_constraint(x, P(dp, None, None))
+
+
+def _stack_body(cfg: ModelConfig, program):
+    def body(x_and_pos, period_params):
+        x, positions = x_and_pos
+        aux_sum = jnp.zeros((), jnp.float32)
+        for p, desc in enumerate(program):
+            x = constrain_residual(x, cfg)
+            x, aux = layer_apply(period_params[f"p{p}"], x, positions, cfg, desc)
+            if "moe_aux_loss" in aux:
+                aux_sum = aux_sum + aux["moe_aux_loss"]
+        return (constrain_residual(x, cfg), positions), aux_sum
+    return body
+
+
+def forward(params: dict, cfg: ModelConfig, *,
+            tokens: jax.Array | None = None,
+            embeds: jax.Array | None = None,
+            positions: jax.Array | None = None) -> tuple[jax.Array, dict]:
+    """Returns (logits (B,S,V) , aux metrics)."""
+    if tokens is not None:
+        x = embed_apply(params, tokens, cfg)
+        B, S = tokens.shape
+    else:
+        x = embeds.astype(cdtype(cfg))
+        B, S = embeds.shape[:2]
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    program = cfg.layer_program()
+    body = _stack_body(cfg, program)
+    if cfg.remat and cfg.remat_policy != "full":
+        policy = (jax.checkpoint_policies.dots_with_no_batch_dims_saveable
+                  if cfg.remat_policy == "dots"
+                  else jax.checkpoint_policies.nothing_saveable)
+        body = jax.checkpoint(body, policy=policy)
+    (x, _), aux = jax.lax.scan(body, (x, positions), params["layers"],
+                               unroll=cfg.unroll_scans)
+
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = head_apply(params, x, cfg)
+    return logits, {"moe_aux_loss": aux.sum()}
+
+
+def loss_fn(params: dict, cfg: ModelConfig, batch: dict,
+            aux_weight: float = 0.01) -> tuple[jax.Array, dict]:
+    logits, aux = forward(
+        params, cfg,
+        tokens=batch.get("tokens"),
+        embeds=batch.get("embeds"),
+    )
+    loss = softmax_cross_entropy(logits, batch["labels"], batch.get("mask"))
+    total = loss + aux_weight * aux["moe_aux_loss"]
+    return total, {"ce_loss": loss, **aux}
+
+
+# ---------------------------------------------------------------------------
+# decode (serve)
+# ---------------------------------------------------------------------------
+def init_cache(cfg: ModelConfig, batch: int, cache_len: int):
+    """Per-period-position caches stacked over periods (scan-compatible)."""
+    program = cfg.layer_program()
+    caches = {}
+    for p, desc in enumerate(program):
+        one = layer_cache_init(cfg, desc, batch, cache_len)
+        caches[f"p{p}"] = jax.tree.map(
+            lambda a: jnp.broadcast_to(a[None], (cfg.num_periods, *a.shape)),
+            one)
+    return caches
+
+
+def init_cache_abstract(cfg: ModelConfig, batch: int, cache_len: int):
+    return jax.eval_shape(lambda: init_cache(cfg, batch, cache_len))
+
+
+def decode_step(params: dict, cfg: ModelConfig, tokens_or_embeds: jax.Array,
+                pos: jax.Array, caches) -> tuple[jax.Array, Any]:
+    """One decode step for the whole batch.
+
+    tokens_or_embeds: (B, 1) int tokens or (B, 1, D) embeds; pos: () int32 —
+    current absolute position (cache fill level).
+    Returns (logits (B, 1, V), updated caches).
+    """
+    if tokens_or_embeds.ndim == 2:
+        x = embed_apply(params, tokens_or_embeds, cfg)
+    else:
+        x = tokens_or_embeds.astype(cdtype(cfg))
+
+    program = cfg.layer_program()
+
+    def body(x, scanned):
+        period_params, cache = scanned
+        new_cache = {}
+        for p, desc in enumerate(program):
+            x, new_cache[f"p{p}"] = layer_decode(
+                period_params[f"p{p}"], x, pos, cache[f"p{p}"], cfg, desc)
+        return x, new_cache
+
+    x, new_caches = jax.lax.scan(body, x, (params["layers"], caches),
+                                 unroll=cfg.unroll_scans)
+    x = rms_norm(params["final_norm"], x, cfg.norm_eps)
+    logits = head_apply(params, x, cfg)
+    return logits, new_caches
+
+
+def prefill(params: dict, cfg: ModelConfig, *,
+            tokens: jax.Array | None = None,
+            embeds: jax.Array | None = None) -> jax.Array:
+    """Prefill = forward pass returning last-position logits (B, V); the
+    serving engine uses this for admission-time scoring."""
+    logits, _ = forward(params, cfg, tokens=tokens, embeds=embeds)
+    return logits[:, -1]

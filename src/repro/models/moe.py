@@ -1,0 +1,84 @@
+"""Token-choice top-k Mixture-of-Experts with capacity-based dispatch.
+
+The dispatch is gather/scatter (sort tokens by expert, truncate at capacity)
+rather than dense one-hot einsum, so compiled FLOPs scale with ACTIVATED
+parameters (6*N_active*D accounting) instead of all experts.  Experts shard
+over the `model` mesh axis (EP); shared experts are plain TP MLPs.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .config import ModelConfig
+from .layers import cdtype, dense_init, mlp_apply, mlp_init
+
+
+def moe_init(key, cfg: ModelConfig):
+    D, E, F = cfg.d_model, cfg.num_experts, cfg.moe_d_ff
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": dense_init(ks[0], (D, E), scale=0.1),
+        "w_gate": dense_init(ks[1], (E, D, F)),
+        "w_in": dense_init(ks[2], (E, D, F)),
+        "w_out": dense_init(ks[3], (E, F, D)),
+    }
+    if cfg.num_shared_experts:
+        p["shared"] = mlp_init(ks[4], D, cfg.moe_d_ff * cfg.num_shared_experts)
+    return p
+
+
+def moe_apply(params, x, cfg: ModelConfig) -> tuple[jax.Array, dict]:
+    """x: (B, S, D) -> (B, S, D), aux metrics (load-balance loss, drop rate)."""
+    dt = cdtype(cfg)
+    B, S, D = x.shape
+    E, k = cfg.num_experts, cfg.num_experts_per_tok
+    T = B * S
+    capacity = int(cfg.capacity_factor * T * k / E) + 1
+
+    xf = x.reshape(T, D)
+    logits = (xf @ params["router"].astype(dt)).astype(jnp.float32)  # (T,E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top_w, top_e = jax.lax.top_k(probs, k)                           # (T,k)
+    top_w = top_w / jnp.maximum(top_w.sum(-1, keepdims=True), 1e-9)
+
+    # ---- load-balance auxiliary (Switch-style) -------------------------
+    me = probs.mean(axis=0)                                          # (E,)
+    ce = jnp.zeros(E).at[top_e.reshape(-1)].add(1.0) / (T * k)
+    aux_loss = E * jnp.sum(me * ce)
+
+    # ---- capacity dispatch via sort ------------------------------------
+    e_flat = top_e.reshape(-1)                                       # (T*k,)
+    w_flat = top_w.reshape(-1)
+    tok_flat = jnp.repeat(jnp.arange(T), k)
+    order = jnp.argsort(e_flat, stable=True)
+    e_sorted = e_flat[order]
+    tok_sorted = tok_flat[order]
+    w_sorted = w_flat[order]
+    group_start = jnp.searchsorted(e_sorted, jnp.arange(E), side="left")
+    rank = jnp.arange(T * k) - group_start[e_sorted]
+    keep = rank < capacity
+    slot = e_sorted * capacity + jnp.minimum(rank, capacity - 1)
+
+    x_disp = jnp.zeros((E * capacity, D), dt)
+    x_disp = x_disp.at[jnp.where(keep, slot, E * capacity)].set(
+        xf[tok_sorted], mode="drop")
+    x_disp = x_disp.reshape(E, capacity, D)
+
+    # ---- expert computation (einsum over the expert axis: EP shards e) --
+    g = jnp.einsum("ecd,edf->ecf", x_disp, params["w_gate"].astype(dt))
+    h = jnp.einsum("ecd,edf->ecf", x_disp, params["w_in"].astype(dt))
+    y_e = jnp.einsum("ecf,efd->ecd", jax.nn.silu(g) * h,
+                     params["w_out"].astype(dt))
+    y_e = y_e.reshape(E * capacity, D)
+
+    # ---- combine ---------------------------------------------------------
+    contrib = y_e[slot] * (w_sorted * keep)[:, None].astype(dt)
+    y = jnp.zeros((T, D), dt).at[tok_sorted].add(contrib)
+
+    if cfg.num_shared_experts:
+        y = y + mlp_apply(params["shared"], xf, cfg)
+
+    drop_rate = 1.0 - keep.mean()
+    return y.reshape(B, S, D), {"moe_aux_loss": aux_loss,
+                                "moe_drop_rate": drop_rate}

@@ -1,0 +1,202 @@
+"""Continuous-batching serving engine with paper-scheduler admission.
+
+Each replica holds a jitted ragged decode step (per-request positions via
+vmap) over B_slots cache slots of C_max tokens.  A request needs
+(prompt_len + max_new) tokens of KV memory = a fraction of the replica's
+cache — the paper's job size.  Admission runs BF-J/S (cluster/admission.py):
+BF-J on arrival, BF-S on completion.
+
+The engine is single-host but replica-sharded by construction: each replica
+owns its params reference, cache pool and slot map, so replicas map 1:1 to
+pods in a real deployment.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass, field
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.cluster.admission import AdmissionController, PendingJob
+from repro.models import model as M
+from repro.models.config import ModelConfig
+
+
+@dataclass
+class Request:
+    rid: int
+    prompt: np.ndarray          # (P,) int32
+    max_new: int
+    out: list = field(default_factory=list)
+    replica: int = -1
+    slot: int = -1
+    pos: int = 0                # tokens generated so far (incl. prompt fill)
+    done: bool = False
+
+    @property
+    def tokens_needed(self) -> int:
+        return len(self.prompt) + self.max_new
+
+
+def make_ragged_decode(cfg: ModelConfig):
+    """vmap decode over per-request positions (continuous batching).
+
+    Cache array leaves are (periods, B, ...) -> mapped along axis 1; the
+    scalar `length` counters (periods,) are unmapped and re-normalized after
+    the call (positions are passed explicitly, lengths are informational).
+    """
+
+    def single(params, tok, pos, cache):
+        # per-request: tok is a scalar id (or (D,) embed) -> (B=1, 1, ...);
+        # cache leaves arrive batch-stripped (periods, ...) -> re-add B=1.
+        tok = tok[None, None]
+        cache = jax.tree.map(
+            lambda l: l[:, None] if l.ndim >= 2 else l, cache)
+        logits, cache = M.decode_step(params, cfg, tok, pos, cache)
+        cache = jax.tree.map(
+            lambda l: l[:, 0] if l.ndim >= 3 else l, cache)
+        return jnp.argmax(logits[0, -1]).astype(jnp.int32), cache
+
+    def is_len(path):
+        return any(getattr(p, "name", None) == "length" for p in path)
+
+    def step(params, toks, pos, caches):
+        ax_in = jax.tree_util.tree_map_with_path(
+            lambda p, l: None if is_len(p) else 1, caches)
+        ax_out = jax.tree_util.tree_map_with_path(
+            lambda p, l: 0 if is_len(p) else 1, caches)
+        vm = jax.vmap(single, in_axes=(None, 0, 0, ax_in),
+                      out_axes=(0, ax_out))
+        toks_out, new_caches = vm(params, toks, pos, caches)
+        # length leaves came back (B, periods); collapse to (periods,)
+        new_caches = jax.tree_util.tree_map_with_path(
+            lambda p, l: l.max(axis=0) if is_len(p) else l, new_caches)
+        return toks_out, new_caches
+
+    return jax.jit(step)
+
+
+class Replica:
+    def __init__(self, cfg: ModelConfig, params, b_slots: int, c_max: int):
+        self.cfg = cfg
+        self.params = params
+        self.b_slots = b_slots
+        self.c_max = c_max
+        self.caches = M.init_cache(cfg, b_slots, c_max)
+        self.slots: list[Request | None] = [None] * b_slots
+        self.positions = np.zeros(b_slots, dtype=np.int32)
+        self._decode = make_ragged_decode(cfg)
+
+    def free_slot(self) -> int:
+        for i, s in enumerate(self.slots):
+            if s is None:
+                return i
+        return -1
+
+    def active(self) -> list[Request]:
+        return [r for r in self.slots if r is not None]
+
+    def step(self) -> list[Request]:
+        """One decode step for all active slots; returns finished requests."""
+        if not self.active():
+            return []
+        toks = np.zeros(self.b_slots, dtype=np.int32)
+        for i, r in enumerate(self.slots):
+            if r is None:
+                continue
+            if r.pos < len(r.prompt):          # prompt feed (teacher forcing)
+                toks[i] = r.prompt[r.pos]
+            else:
+                toks[i] = r.out[-1] if r.out else r.prompt[-1]
+        next_toks, self.caches = self._decode(
+            self.params, jnp.asarray(toks), jnp.asarray(self.positions),
+            self.caches)
+        next_toks = np.asarray(next_toks)
+        finished = []
+        for i, r in enumerate(self.slots):
+            if r is None:
+                continue
+            self.positions[i] += 1
+            r.pos += 1
+            if r.pos >= len(r.prompt):
+                r.out.append(int(next_toks[i]))
+            if len(r.out) >= r.max_new or r.pos >= self.c_max:
+                r.done = True
+                finished.append(r)
+                self.slots[i] = None
+                self.positions[i] = 0
+        return finished
+
+
+class ServingEngine:
+    """L replicas + paper-scheduler admission; host-level request queue."""
+
+    def __init__(self, cfg: ModelConfig, params, num_replicas: int = 2,
+                 b_slots: int = 4, c_max: int = 128, policy: str = "bf"):
+        self.cfg = cfg
+        self.replicas = [Replica(cfg, params, b_slots, c_max)
+                         for _ in range(num_replicas)]
+        self.admission = AdmissionController(num_replicas, policy=policy)
+        self.c_max = c_max
+        self._by_rid: dict[int, Request] = {}
+        self._job_size: dict[int, int] = {}
+        self.completed: list[Request] = []
+        self.stats = {"queue_len": [], "active": [], "admitted": 0,
+                      "rejected_slots": 0}
+
+    # -- paper job model ----------------------------------------------------
+    def _to_job(self, req: Request) -> PendingJob:
+        frac = min(req.tokens_needed / self.c_max, 1.0)
+        return PendingJob(rid=req.rid, frac=frac)
+
+    def submit(self, reqs: list[Request]) -> None:
+        jobs = []
+        for r in reqs:
+            self._by_rid[r.rid] = r
+            job = self._to_job(r)
+            self._job_size[r.rid] = job.size
+            jobs.append(job)
+        for rid, replica in self.admission.admit(jobs):
+            self._start(rid, replica)
+
+    def _start(self, rid: int, replica_idx: int) -> None:
+        req = self._by_rid[rid]
+        rep = self.replicas[replica_idx]
+        slot = rep.free_slot()
+        if slot < 0:
+            # memory admitted but no batch slot: return to queue front
+            self.admission.release(replica_idx, self._job_size[rid])
+            self.admission.queue.insert(0, self._to_job(req))
+            self.stats["rejected_slots"] += 1
+            return
+        req.replica, req.slot = replica_idx, slot
+        rep.slots[slot] = req
+        rep.positions[slot] = 0
+        self.stats["admitted"] += 1
+
+    def step(self) -> list[Request]:
+        """One engine tick: decode every replica, release + BF-S refill."""
+        finished_all = []
+        for idx, rep in enumerate(self.replicas):
+            finished = rep.step()
+            for r in finished:
+                self.admission.release(idx, self._job_size[r.rid])
+                self.completed.append(r)
+            finished_all.extend(finished)
+            if finished:
+                for rid, ridx in self.admission.refill(idx):
+                    self._start(rid, ridx)
+        self.stats["queue_len"].append(self.admission.queue_len())
+        self.stats["active"].append(
+            sum(len(rep.active()) for rep in self.replicas))
+        return finished_all
+
+    def run(self, max_steps: int = 1000) -> list[Request]:
+        for _ in range(max_steps):
+            self.step()
+            if not any(rep.active() for rep in self.replicas) \
+                    and self.admission.queue_len() == 0:
+                break
+        return self.completed

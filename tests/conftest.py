@@ -1,0 +1,8 @@
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+# Tests must see the real (1-device) CPU platform — the 512-device override
+# belongs to the dry-run subprocesses only.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

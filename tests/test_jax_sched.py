@@ -1,0 +1,86 @@
+"""JAX scheduling engine: agreement with the event-driven engine and the
+Pallas kernel; Monte-Carlo vmap path."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import BFJS, PartitionI, ServiceModel, Uniform, simulate, to_grid
+from repro.core.jax_sched import (best_fit_place, best_fit_server,
+                                  max_weight_config_jax, monte_carlo_bfjs,
+                                  run_bfjs, vq_type_of)
+from repro.core.partition import k_red, max_weight_config
+
+
+def test_best_fit_place_matches_pallas_ref():
+    from repro.kernels.best_fit.ref import best_fit_ref
+    k1, k2 = jax.random.split(jax.random.PRNGKey(0))
+    resid = jax.random.uniform(k1, (32,))
+    sizes = jax.random.uniform(k2, (16,), minval=0.05, maxval=0.7)
+    a1, r1 = best_fit_place(resid, sizes)
+    a2, r2 = best_fit_ref(resid, sizes)
+    np.testing.assert_array_equal(np.asarray(a1), np.asarray(a2))
+    np.testing.assert_allclose(r1, r2, rtol=1e-6)
+
+
+def test_best_fit_server_rejects():
+    assert int(best_fit_server(jnp.array([0.2, 0.1]), jnp.asarray(0.5))) == -1
+    assert int(best_fit_server(jnp.array([0.6, 0.5]), jnp.asarray(0.5))) == 1
+
+
+def test_vq_type_of_matches_partition():
+    for J in (2, 4, 6):
+        part = PartitionI(J)
+        sizes = np.linspace(0.012, 1.0, 97)
+        ints = to_grid(sizes)
+        expect = part.type_of(ints)
+        got = np.asarray(vq_type_of(jnp.asarray(sizes), J))
+        agree = (got == expect).mean()
+        assert agree > 0.95, (J, agree)  # float/grid boundary slack
+
+
+def test_max_weight_config_jax_matches_numpy():
+    for J in (2, 4):
+        q = np.random.default_rng(0).integers(0, 100, size=2 * J)
+        i_np, c_np = max_weight_config(J, q)
+        i_j, c_j = max_weight_config_jax(J, jnp.asarray(q))
+        w = k_red(J) @ q
+        assert w[int(i_j)] == w.max()
+        np.testing.assert_array_equal(np.asarray(c_j), k_red(J)[int(i_j)])
+
+
+def test_run_bfjs_stable_vs_overloaded():
+    def sampler(key, n):
+        return jax.random.uniform(key, (n,), minval=0.1, maxval=0.9)
+
+    stable = run_bfjs(jax.random.PRNGKey(0), lam=0.06, mu=0.01,
+                      sampler=sampler, L=5, K=12, Qcap=512, A_max=6,
+                      horizon=15_000)
+    over = run_bfjs(jax.random.PRNGKey(0), lam=0.25, mu=0.01,
+                    sampler=sampler, L=5, K=12, Qcap=512, A_max=6,
+                    horizon=15_000)
+    q_s = float(stable.queue_len[-3000:].mean())
+    q_o = float(over.queue_len[-3000:].mean())
+    assert q_s < 30
+    assert q_o > 5 * q_s       # overloaded queue blows up
+    assert int(stable.dropped) == 0
+
+
+def test_jax_engine_agrees_with_numpy_engine_distributionally():
+    """Same workload, both engines: tail queue means within 2x (they use
+    different RNG streams; the regime must match)."""
+    lam, mu, L = 0.07, 0.01, 5
+
+    def sampler(key, n):
+        return jax.random.uniform(key, (n,), minval=0.1, maxval=0.9)
+
+    keys = jax.random.split(jax.random.PRNGKey(1), 4)
+    jres = monte_carlo_bfjs(keys, lam, mu, sampler, L=L, K=16, Qcap=512,
+                            A_max=6, horizon=12_000)
+    jq = float(jres.queue_len[:, -3000:].mean())
+
+    nres = simulate(BFJS(), L=L, lam=lam, dist=Uniform(0.1, 0.9),
+                    service=ServiceModel("geometric", 1 / mu),
+                    horizon=12_000, seed=0)
+    nq = max(nres.mean_queue_tail, 0.3)
+    assert jq / nq < 3.0 and nq / max(jq, 0.3) < 3.0, (jq, nq)

@@ -1,0 +1,148 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.best_fit.best_fit import (best_fit_pallas,
+                                             best_fit_pallas_batched)
+from repro.kernels.best_fit.ref import best_fit_ref, best_fit_ref_batched
+from repro.kernels.decode_attention.decode_attention import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.flash_attention.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.ssd_scan.ref import ssd_ref
+from repro.kernels.ssd_scan.ssd_scan import ssd_scan
+
+
+# ---------------------------------------------------------------------------
+# best_fit
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("L,N,seed", [(8, 4, 0), (64, 32, 1), (256, 128, 2),
+                                      (128, 200, 3)])
+def test_best_fit_sweep(L, N, seed):
+    k1, k2 = jax.random.split(jax.random.PRNGKey(seed))
+    resid = jax.random.uniform(k1, (L,))
+    sizes = jax.random.uniform(k2, (N,), minval=0.01, maxval=0.8)
+    a1, r1 = best_fit_pallas(resid, sizes, interpret=True)
+    a2, r2 = best_fit_ref(resid, sizes)
+    np.testing.assert_array_equal(a1, a2)
+    np.testing.assert_allclose(r1, r2, rtol=1e-6)
+
+
+def test_best_fit_exact_fit_and_rejects():
+    resid = jnp.array([0.5, 0.3])
+    sizes = jnp.array([0.3, 0.5, 0.2, 0.9])
+    a, r = best_fit_pallas(resid, sizes, interpret=True)
+    # 0.3 -> server 1 (tightest), 0.5 -> server 0, 0.2 -> nothing fits? 0 left
+    assert list(np.asarray(a)) == [1, 0, -1, -1]
+    np.testing.assert_allclose(r, [0.0, 0.0], atol=1e-7)
+
+
+def test_best_fit_batched_matches_ref():
+    k = jax.random.PRNGKey(0)
+    resid = jax.random.uniform(k, (5, 32))
+    sizes = jax.random.uniform(jax.random.PRNGKey(1), (5, 16), minval=0.05,
+                               maxval=0.6)
+    a1, r1 = best_fit_pallas_batched(resid, sizes, interpret=True)
+    a2, r2 = best_fit_ref_batched(resid, sizes)
+    np.testing.assert_array_equal(a1, a2)
+    np.testing.assert_allclose(r1, r2, rtol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# flash attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("S,hd,dtype,window", [
+    (128, 64, jnp.float32, 0),
+    (256, 64, jnp.float32, 0),
+    (256, 128, jnp.float32, 64),
+    (256, 32, jnp.bfloat16, 0),
+    (512, 64, jnp.bfloat16, 128),
+])
+def test_flash_attention_sweep(S, hd, dtype, window):
+    B, H, KV = 2, 4, 2
+    ks = jax.random.split(jax.random.PRNGKey(S + hd), 3)
+    q = jax.random.normal(ks[0], (B, H, S, hd), dtype)
+    k = jax.random.normal(ks[1], (B, KV, S, hd), dtype)
+    v = jax.random.normal(ks[2], (B, KV, S, hd), dtype)
+    out = flash_attention(q, k, v, causal=True, window=window,
+                          bq=128, bk=128, interpret=True)
+    ref = attention_ref(q, k, v, causal=True, window=window)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+def test_flash_attention_mha_equals_gqa_with_repeated_kv():
+    B, H, S, hd = 1, 4, 128, 32
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, H, S, hd))
+    k = jax.random.normal(ks[1], (B, 1, S, hd))
+    v = jax.random.normal(ks[2], (B, 1, S, hd))
+    gqa = flash_attention(q, k, v, interpret=True, bq=64, bk=64)
+    mha = flash_attention(q, jnp.repeat(k, H, 1), jnp.repeat(v, H, 1),
+                          interpret=True, bq=64, bk=64)
+    np.testing.assert_allclose(gqa, mha, atol=1e-6)
+
+
+# ---------------------------------------------------------------------------
+# decode attention
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("C,pos,window,dtype", [
+    (256, 0, 0, jnp.float32),
+    (256, 255, 0, jnp.float32),
+    (512, 300, 0, jnp.bfloat16),
+    (512, 300, 128, jnp.float32),
+])
+def test_decode_attention_sweep(C, pos, window, dtype):
+    B, H, KV, hd = 2, 8, 2, 64
+    ks = jax.random.split(jax.random.PRNGKey(C + pos), 3)
+    q = jax.random.normal(ks[0], (B, H, hd), dtype)
+    k = jax.random.normal(ks[1], (B, KV, C, hd), dtype)
+    v = jax.random.normal(ks[2], (B, KV, C, hd), dtype)
+    out = decode_attention(q, k, v, jnp.asarray(pos, jnp.int32), bc=128,
+                           window=window, interpret=True)
+    ref = decode_attention_ref(q, k, v, jnp.asarray(pos), window=window)
+    tol = 2e-2 if dtype == jnp.bfloat16 else 2e-5
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32),
+                               atol=tol, rtol=tol)
+
+
+# ---------------------------------------------------------------------------
+# ssd scan
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("nc,Lc,hd,N,dtype", [
+    (2, 32, 16, 8, jnp.float32),
+    (4, 64, 32, 16, jnp.float32),
+    (4, 64, 64, 32, jnp.bfloat16),
+])
+def test_ssd_scan_sweep(nc, Lc, hd, N, dtype):
+    B, H = 2, 3
+    ks = jax.random.split(jax.random.PRNGKey(nc * Lc), 4)
+    xdt = (jax.random.normal(ks[0], (B, H, nc, Lc, hd)) * 0.5).astype(dtype)
+    Bm = (jax.random.normal(ks[1], (B, H, nc, Lc, N)) * 0.5).astype(dtype)
+    Cm = (jax.random.normal(ks[2], (B, H, nc, Lc, N)) * 0.5).astype(dtype)
+    a = -jax.nn.softplus(jax.random.normal(ks[3], (B, H, nc, Lc)))
+    y1 = ssd_scan(xdt, Bm, Cm, a.astype(dtype), interpret=True)
+    y2 = ssd_ref(xdt, Bm, Cm, a.astype(dtype))
+    tol = 5e-2 if dtype == jnp.bfloat16 else 1e-4
+    np.testing.assert_allclose(np.asarray(y1, np.float32),
+                               np.asarray(y2, np.float32),
+                               atol=tol, rtol=1e-2)
+
+
+def test_ssd_state_continuity_across_chunks():
+    """Chunked output must equal the unchunked recurrence exactly —
+    the inter-chunk state pass is the core of SSD."""
+    B, H, nc, Lc, hd, N = 1, 1, 8, 16, 8, 4
+    ks = jax.random.split(jax.random.PRNGKey(9), 4)
+    xdt = jax.random.normal(ks[0], (B, H, nc, Lc, hd)) * 0.3
+    Bm = jax.random.normal(ks[1], (B, H, nc, Lc, N)) * 0.3
+    Cm = jax.random.normal(ks[2], (B, H, nc, Lc, N)) * 0.3
+    a = -jax.nn.softplus(jax.random.normal(ks[3], (B, H, nc, Lc)))
+    y_kernel = ssd_scan(xdt, Bm, Cm, a, interpret=True)
+    y_ref = ssd_ref(xdt, Bm, Cm, a)
+    np.testing.assert_allclose(y_kernel, y_ref, atol=1e-5, rtol=1e-4)

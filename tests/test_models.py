@@ -1,0 +1,134 @@
+"""Per-arch smoke tests (reduced configs) + decode/forward consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_config, get_smoke_config
+from repro.configs.registry import applicable_shapes, supports_long_context
+from repro.models import model as M
+
+
+def _batch(cfg, B, S, key):
+    if cfg.input_mode == "tokens":
+        return {"tokens": jax.random.randint(key, (B, S), 0, cfg.vocab_size),
+                "labels": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
+    return {"embeds": jax.random.normal(key, (B, S, cfg.d_model),
+                                        jnp.float32) * 0.02,
+            "labels": jax.random.randint(key, (B, S), 0, cfg.vocab_size)}
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    """One forward + one SGD-free grad step on CPU: shapes + no NaNs."""
+    cfg = get_smoke_config(arch)
+    key = jax.random.PRNGKey(0)
+    params = M.init_params(cfg, key)
+    B, S = 2, 32
+    batch = _batch(cfg, B, S, jax.random.PRNGKey(1))
+    logits, aux = jax.jit(lambda p, b: M.forward(
+        p, cfg, tokens=b.get("tokens"), embeds=b.get("embeds")))(params, batch)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert jnp.isfinite(logits.astype(jnp.float32)).all()
+    (loss, _), grads = jax.jit(jax.value_and_grad(
+        lambda p, b: M.loss_fn(p, cfg, b), has_aux=True))(params, batch)
+    assert jnp.isfinite(loss)
+    gnorm = sum(jnp.sum(jnp.abs(g)) for g in jax.tree.leaves(grads))
+    assert jnp.isfinite(gnorm) and gnorm > 0
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_decode_step(arch):
+    cfg = get_smoke_config(arch)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    B, C = 2, 32
+    caches = M.init_cache(cfg, B, C)
+    if cfg.input_mode == "tokens":
+        tok = jnp.ones((B, 1), jnp.int32)
+    else:
+        tok = jnp.ones((B, 1, cfg.d_model), jnp.float32) * 0.01
+    step = jax.jit(lambda p, t, pos, c: M.decode_step(p, cfg, t, pos, c))
+    for pos in range(3):
+        logits, caches = step(params, tok, jnp.asarray(pos, jnp.int32), caches)
+    assert logits.shape == (B, 1, cfg.vocab_size)
+    assert jnp.isfinite(logits.astype(jnp.float32)).all()
+
+
+@pytest.mark.parametrize("arch", ["llama3-8b", "h2o-danube-3-4b",
+                                  "deepseek-v2-lite-16b", "mamba2-130m"])
+def test_decode_matches_forward(arch):
+    """Token-by-token decode must reproduce the full forward logits —
+    this validates KV/latent/SSM cache correctness end to end.
+    capacity_factor is raised so MoE capacity dropping (a batched-prefill
+    training-time behaviour) cannot diverge from dropless decode."""
+    cfg = get_smoke_config(arch).with_(dtype="float32", capacity_factor=16.0)
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    B, S = 1, 16
+    toks = jax.random.randint(jax.random.PRNGKey(5), (B, S), 1,
+                              cfg.vocab_size)
+    full_logits, _ = M.forward(params, cfg, tokens=toks)
+
+    caches = M.init_cache(cfg, B, S)
+    step = jax.jit(lambda p, t, pos, c: M.decode_step(p, cfg, t, pos, c))
+    outs = []
+    for i in range(S):
+        logits, caches = step(params, toks[:, i : i + 1],
+                              jnp.asarray(i, jnp.int32), caches)
+        outs.append(logits[:, 0])
+    dec_logits = jnp.stack(outs, axis=1)
+    np.testing.assert_allclose(np.asarray(dec_logits),
+                               np.asarray(full_logits),
+                               atol=2e-3, rtol=2e-3)
+
+
+def test_param_counts_match_brief():
+    expected = {
+        "mamba2-130m": 0.13, "jamba-1.5-large-398b": 398.0,
+        "deepseek-v2-lite-16b": 16.0, "dbrx-132b": 132.0,
+        "mistral-large-123b": 123.0, "llama3-8b": 8.0,
+        "h2o-danube-3-4b": 4.0, "qwen2-72b": 72.0,
+        "llava-next-mistral-7b": 7.0, "musicgen-medium": 1.5,
+    }
+    for arch, target in expected.items():
+        n = get_config(arch).param_counts()["total"] / 1e9
+        assert abs(n - target) / target < 0.25, (arch, n, target)
+
+
+def test_long_context_applicability():
+    runs_long = {a for a in ARCH_IDS
+                 if supports_long_context(get_config(a))}
+    assert runs_long == {"mamba2-130m", "jamba-1.5-large-398b",
+                         "h2o-danube-3-4b"}
+    for a in ARCH_IDS:
+        shapes = {s.name for s in applicable_shapes(get_config(a))}
+        assert {"train_4k", "prefill_32k", "decode_32k"} <= shapes
+
+
+def test_chunked_attention_matches_ref():
+    from repro.kernels.flash_attention.ref import attention_ref
+    from repro.models.attention import chunked_attention
+    B, H, KV, S, hd = 2, 4, 2, 128, 32
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, S, H, hd))
+    k = jax.random.normal(ks[1], (B, S, KV, hd))
+    v = jax.random.normal(ks[2], (B, S, KV, hd))
+    # chunked_attention is MHA-only by design: GQA callers expand K/V
+    ke = jnp.repeat(k, H // KV, axis=2)
+    ve = jnp.repeat(v, H // KV, axis=2)
+    out = chunked_attention(q, ke, ve, causal=True, q_chunk=32, kv_chunk=32)
+    ref = attention_ref(q.transpose(0, 2, 1, 3), k.transpose(0, 2, 1, 3),
+                        v.transpose(0, 2, 1, 3), causal=True)
+    np.testing.assert_allclose(out.transpose(0, 2, 1, 3), ref,
+                               atol=2e-5, rtol=1e-4)
+
+
+def test_moe_capacity_drop_rate_reported():
+    from repro.models.moe import moe_apply, moe_init
+    cfg = get_smoke_config("dbrx-132b")
+    params = moe_init(jax.random.PRNGKey(0), cfg)
+    x = jax.random.normal(jax.random.PRNGKey(1), (2, 16, cfg.d_model),
+                          jnp.float32)
+    y, aux = moe_apply(params, x, cfg)
+    assert y.shape == x.shape
+    assert 0.0 <= float(aux["moe_drop_rate"]) <= 1.0
+    assert float(aux["moe_aux_loss"]) > 0

@@ -1,0 +1,78 @@
+"""The paper's Section VII empirical claims, as assertions.
+
+Horizons are scaled down for CI but chosen so the stable/unstable gap is
+unambiguous (queue ratios >> 2x).  Full-horizon runs live in benchmarks/.
+"""
+import pytest
+
+from repro.core import (BFJS, Discrete, ServiceModel, Uniform, VQS, VQSBF,
+                        simulate)
+
+H = 150_000
+
+
+@pytest.fixture(scope="module")
+def fig3a_results():
+    dist = Discrete([0.4, 0.6], [0.5, 0.5])
+    svc = ServiceModel("geometric", 100.0)
+    out = {}
+    for mk, name in ((BFJS, "bf-js"), (lambda: VQS(J=2), "vqs"),
+                     (lambda: VQSBF(J=2), "vqs-bf")):
+        out[name] = simulate(mk() if callable(mk) else mk, L=1, lam=0.014,
+                             dist=dist, service=svc, horizon=H, seed=11)
+    return out
+
+
+def test_fig3a_vqs_unstable_bf_stable(fig3a_results):
+    """Fig 3a: rate 0.014 > (2/3)*0.02 => VQS diverges; BF-J/S and VQS-BF
+    support it (rho = 1.4 < 2 = rho*)."""
+    r = fig3a_results
+    assert r["vqs"].mean_queue_tail > 5 * r["bf-js"].mean_queue_tail
+    assert r["vqs"].mean_queue_tail > 5 * r["vqs-bf"].mean_queue_tail
+    assert r["bf-js"].final_queue < 40
+    assert r["vqs-bf"].final_queue < 40
+    # VQS queue keeps growing (first-half mean << second-half mean)
+    q = r["vqs"].queue_lens
+    assert q[-len(q) // 4:].mean() > 1.5 * q[: len(q) // 4].mean()
+
+
+def test_fig3b_vqs_stable_bf_unstable():
+    """Fig 3b: fixed service 100, sizes 0.2/0.5 (2:1), rate 0.0306: VQS
+    stays stable; BF-J/S drifts (lock-in to the (2,1) mixed packing)."""
+    dist = Discrete([0.2, 0.5], [2 / 3, 1 / 3])
+    svc = ServiceModel("fixed", 100.0)
+    vqs = simulate(VQS(J=3), L=1, lam=0.0306, dist=dist, service=svc,
+                   horizon=400_000, seed=7)
+    bf = simulate(BFJS(), L=1, lam=0.0306, dist=dist, service=svc,
+                  horizon=400_000, seed=7)
+    assert vqs.mean_queue_tail < 60
+    # BF-J/S queue grows roughly linearly once locked in
+    q = bf.queue_lens
+    assert q[-len(q) // 4:].mean() > 2.0 * q[: len(q) // 4].mean()
+    assert bf.mean_queue_tail > 2 * vqs.mean_queue_tail
+
+
+def test_bfjs_meets_half_guarantee_uniform():
+    """Theorem 2 sanity: BF-J/S stable at rho = 0.9 * (rho*/2) for a
+    continuous distribution (uniform [0.1, 0.9], L=3)."""
+    dist = Uniform(0.1, 0.9)
+    svc = ServiceModel("geometric", 50.0)
+    # rho* <= L/mean = 6; run at rho = 2.7 = 0.9 * 3
+    lam = 2.7 / 50.0
+    res = simulate(BFJS(), L=3, lam=lam, dist=dist, service=svc,
+                   horizon=60_000, seed=13)
+    assert res.final_queue < 60
+    assert res.mean_queue_tail < 60
+
+
+def test_vqsbf_beats_vqs_delay_uniform():
+    """Section VII.A.3: VQS has clearly worse delay than VQS-BF on
+    uniform [0.1, 0.9] at high traffic."""
+    dist = Uniform(0.1, 0.9)
+    svc = ServiceModel("geometric", 100.0)
+    lam = 0.88 * 5 / 0.5 / 100.0     # alpha = 0.88, L = 5
+    vqs = simulate(VQS(J=4), L=5, lam=lam, dist=dist, service=svc,
+                   horizon=60_000, seed=3)
+    vqsbf = simulate(VQSBF(J=4), L=5, lam=lam, dist=dist, service=svc,
+                     horizon=60_000, seed=3)
+    assert vqsbf.mean_queue_tail < vqs.mean_queue_tail

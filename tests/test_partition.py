@@ -1,0 +1,79 @@
+"""Partition I (Eq. 6) and K_RED^(J) (Eq. 7) properties."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.partition import PartitionI, k_red, k_red_is_feasible
+from repro.core.quantize import RES, to_grid
+
+
+@pytest.mark.parametrize("J", [2, 3, 4, 6, 8, 12])
+def test_k_red_cardinality_and_feasibility(J):
+    confs = k_red(J)
+    assert confs.shape == (4 * J - 4, 2 * J)          # Definition 5
+    assert k_red_is_feasible(J)                        # capacity-respecting
+    # each configuration has at most one type other than type 1 (paper note)
+    for row in confs:
+        nz = np.nonzero(row)[0]
+        others = [j for j in nz if j != 1]
+        assert len(others) <= 1
+        assert row[1] in (0, 1)
+
+
+def test_partition_boundaries_exact():
+    p = PartitionI(3)
+    assert p.type_of_scalar(RES) == 0          # size 1.0 -> I_0 = (2/3, 1]
+    assert p.type_of_scalar(RES // 2) == 2     # 0.5 -> I_2 = (1/3, 1/2]
+    assert p.type_of_scalar(RES // 2 + 1) == 1  # just above 1/2 -> I_1
+
+
+def test_partition_known_sizes():
+    p = PartitionI(3)
+    sizes = to_grid([0.9, 0.6, 0.45, 0.3, 0.22, 0.14, 0.05])
+    types = p.type_of(sizes)
+    assert list(types) == [0, 1, 2, 3, 4, 5, 5]
+    # last VQ rounding
+    eff = p.effective_size(sizes)
+    assert eff[-1] == p.min_grid_size
+    assert (eff[:-1] == sizes[:-1]).all()
+
+
+@settings(max_examples=200, deadline=None)
+@given(st.integers(min_value=1, max_value=RES), st.integers(2, 10))
+def test_type_membership(size, J):
+    """Every size lands in exactly the interval its type claims."""
+    p = PartitionI(J)
+    t = p.type_of_scalar(size)
+    assert 0 <= t < 2 * J
+    if size <= (RES >> J):
+        assert t == 2 * J - 1
+        return
+    m, odd = divmod(t, 2)
+    upper = RES >> m
+    if odd == 0:  # I_2m = (2/3 * 2^-m, 2^-m]
+        assert 3 * size > 2 * upper and size <= upper
+    else:         # I_2m+1 = (2^-(m+1), 2/3 * 2^-m]
+        assert size > (upper >> 1) and 3 * size <= 2 * upper
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.integers(2, 8), st.lists(st.integers(0, 10_000), min_size=4,
+                                   max_size=24))
+def test_max_weight_is_argmax(J, qs):
+    from repro.core.partition import max_weight_config
+    q = np.zeros(2 * J, dtype=np.int64)
+    for i, v in enumerate(qs[: 2 * J]):
+        q[i] = v
+    idx, conf = max_weight_config(J, q)
+    w = k_red(J) @ q
+    assert w[idx] == w.max()
+    assert (conf == k_red(J)[idx]).all()
+
+
+def test_upper_bounds_match_classification():
+    """sup I_j on the grid is classified as type j (boundary exactness)."""
+    for J in (2, 4, 8):
+        p = PartitionI(J)
+        for j in range(2 * J - 1):  # last VQ has the round-up rule
+            ub = p.upper_bound_int(j)
+            assert p.type_of_scalar(ub) == j, (J, j, ub)

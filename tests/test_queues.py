@@ -1,0 +1,90 @@
+"""Fenwick / SegTree / SortedJobQueue / VirtualQueues exactness."""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.fenwick import Fenwick, SegTreeMax
+from repro.core.partition import PartitionI
+from repro.core.queues import Job, SortedJobQueue, VirtualQueues
+from repro.core.quantize import RES
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.tuples(st.integers(0, 1023), st.sampled_from([1, -1])),
+                min_size=1, max_size=200))
+def test_fenwick_vs_naive(ops):
+    fen = Fenwick(1024)
+    counts = np.zeros(1024, dtype=int)
+    for key, delta in ops:
+        if delta < 0 and counts[key] == 0:
+            continue
+        fen.add(key, delta)
+        counts[key] += delta
+        present = np.nonzero(counts)[0]
+        for probe in (0, key, 511, 1023):
+            exp_leq = present[present <= probe]
+            assert fen.max_leq(probe) == (exp_leq[-1] if len(exp_leq) else -1)
+            exp_geq = present[present >= probe]
+            assert fen.min_geq(probe) == (exp_geq[0] if len(exp_geq) else -1)
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.integers(0, 100), min_size=1, max_size=64),
+       st.lists(st.tuples(st.integers(0, 63), st.integers(0, 100)),
+                max_size=32),
+       st.integers(0, 100))
+def test_segtree_first_fit(init, updates, probe):
+    vals = np.asarray(init, dtype=np.int64)
+    seg = SegTreeMax(vals)
+    for idx, v in updates:
+        if idx < len(vals):
+            vals[idx] = v
+            seg.update(idx, v)
+    hits = np.nonzero(vals >= probe)[0]
+    assert seg.first_fit(probe) == (hits[0] if len(hits) else -1)
+
+
+@settings(max_examples=40, deadline=None)
+@given(st.lists(st.integers(1, RES), min_size=1, max_size=80),
+       st.lists(st.integers(1, RES), min_size=1, max_size=40))
+def test_sorted_queue_pop_largest(pushes, caps):
+    q = SortedJobQueue()
+    naive: list[int] = []
+    for i, s in enumerate(pushes):
+        q.push(Job(i, s, s, -1, 0))
+        naive.append(s)
+    for cap in caps:
+        got = q.pop_largest_leq(cap)
+        fits = [s for s in naive if s <= cap]
+        if not fits:
+            assert got is None
+        else:
+            expect = max(fits)
+            assert got is not None and got.eff_size == expect
+            naive.remove(expect)
+    assert len(q) == len(naive)
+
+
+def test_virtual_queues_fifo_and_sorted_views():
+    vqs = VirtualQueues(3)
+    part = PartitionI(3)
+    sizes = [30000, 28000, 32000, 29000]  # all in I_2 = (1/3, 1/2]
+    t = part.type_of_scalar(sizes[0])
+    jobs = []
+    for i, s in enumerate(sizes):
+        assert part.type_of_scalar(s) == t
+        j = Job(i, s, s, t, 0)
+        jobs.append(j)
+        vqs.push(j)
+    assert vqs.sizes[t] == 4
+    # FIFO head is the first pushed
+    assert vqs.head(t).jid == 0
+    # largest-fit pops 33000 first
+    got = vqs.pop_largest_leq(t, RES)
+    assert got.jid == 2
+    # FIFO view skips the lazily-deleted job
+    assert vqs.pop_head(t).jid == 0
+    assert vqs.head(t).jid == 1
+    # global sweep finds the remaining largest
+    got = vqs.pop_largest_leq_any(RES)
+    assert got.jid == 3
+    assert len(vqs) == 1

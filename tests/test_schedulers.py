@@ -1,0 +1,95 @@
+"""Scheduler invariants (hypothesis) + behavioural specifics."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (BFJ, BFJS, BFS, FIFOFF, VQS, Discrete, MaxWeight,
+                        ServiceModel, Uniform, VQSBF, simulate)
+
+
+def mk_policies(J=4, types=None):
+    pol = [BFJS(), BFJ(), BFS(), FIFOFF(), VQS(J=J), VQSBF(J=J)]
+    if types is not None:
+        pol.append(MaxWeight(types))
+    return pol
+
+
+@settings(max_examples=15, deadline=None)
+@given(st.integers(0, 10_000), st.integers(1, 4),
+       st.floats(0.05, 0.9), st.floats(0.1, 0.95))
+def test_invariants_random_workloads(seed, L, lam, lo_frac):
+    """Capacity constraints + job conservation for every scheduler."""
+    lo = 0.05 + 0.6 * lo_frac
+    dist = Uniform(lo, min(lo + 0.3, 1.0))
+    svc = ServiceModel("geometric", 20.0)
+    for policy in mk_policies():
+        res = simulate(policy, L=L, lam=lam, dist=dist, service=svc,
+                       horizon=400, seed=seed, check_invariants=True)
+        in_service = res.arrived - res.departed - res.final_queue
+        assert in_service >= 0
+        assert 0.0 <= res.utilization <= 1.0
+
+
+def test_bfjs_packs_exact_fit():
+    """0.4 + 0.6 must share one server under Best-Fit."""
+    dist = Discrete([0.4, 0.6], [0.5, 0.5])
+    svc = ServiceModel("geometric", 50.0)
+    res = simulate(BFJS(), L=1, lam=0.03, dist=dist, service=svc,
+                   horizon=20_000, seed=3, check_invariants=True)
+    # supportable iff packing works (rho = 0.03*50 = 1.5 < rho* = 2)
+    assert res.final_queue < 50
+    assert res.departed > 0.95 * (res.arrived - 50)
+
+
+def test_fifo_head_of_line_blocking():
+    """FIFO-FF cannot reorder: a 0.9 job at HOL starves 0.1 jobs even when
+    capacity is available; BF-J/S does not."""
+    dist = Discrete([0.1, 0.9], [0.5, 0.5])
+    svc = ServiceModel("geometric", 100.0)
+    fifo = simulate(FIFOFF(), L=2, lam=0.028, dist=dist, service=svc,
+                    horizon=30_000, seed=1)
+    bf = simulate(BFJS(), L=2, lam=0.028, dist=dist, service=svc,
+                  horizon=30_000, seed=1)
+    assert bf.mean_queue_tail < fifo.mean_queue_tail
+
+
+def test_vqs_respects_reservation():
+    """Under config e1 + k e_j, non-type-1 jobs use at most 1/3 capacity."""
+    dist = Discrete([0.6, 0.3], [0.5, 0.5])
+    svc = ServiceModel("geometric", 30.0)
+    res = simulate(VQS(J=3), L=2, lam=0.08, dist=dist, service=svc,
+                   horizon=5000, seed=5, check_invariants=True)
+    assert res.utilization > 0.2  # it does schedule
+
+
+def test_maxweight_oracle_stable_on_finite_types():
+    dist = Discrete([0.4, 0.6], [0.5, 0.5])
+    svc = ServiceModel("geometric", 100.0)
+    res = simulate(MaxWeight([0.4, 0.6]), L=1, lam=0.018, dist=dist,
+                   service=svc, horizon=40_000, seed=2,
+                   check_invariants=True)
+    # rho = 1.8 < rho* = 2 -> stable
+    assert res.final_queue < 120
+
+
+@pytest.mark.parametrize("policy_cls", [BFJS, FIFOFF])
+def test_heterogeneous_capacities(policy_cls):
+    from repro.core.quantize import RES
+    caps = np.array([RES, RES // 2, RES // 4], dtype=np.int64)
+    dist = Uniform(0.05, 0.45)
+    svc = ServiceModel("geometric", 25.0)
+    res = simulate(policy_cls(), L=3, lam=0.1, dist=dist, service=svc,
+                   horizon=2000, seed=0, capacities=caps,
+                   check_invariants=True)
+    assert res.departed > 0
+
+
+def test_determinism():
+    dist = Uniform(0.1, 0.9)
+    svc = ServiceModel("geometric", 50.0)
+    a = simulate(BFJS(), L=3, lam=0.1, dist=dist, service=svc,
+                 horizon=3000, seed=42)
+    b = simulate(BFJS(), L=3, lam=0.1, dist=dist, service=svc,
+                 horizon=3000, seed=42)
+    assert (a.queue_lens == b.queue_lens).all()
+    assert a.departed == b.departed

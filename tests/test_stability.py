@@ -1,0 +1,89 @@
+"""rho* LP (Eq. 4), Lemma 1, Theorem 1 convergence, Proposition 2 example."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.distributions import Discrete, Uniform
+from repro.core.stability import (enumerate_configs, maximal_configs,
+                                  rho_bounds, rho_star_discrete,
+                                  rho_star_upper_bound)
+
+
+def test_fig3a_example():
+    # sizes 0.4/0.6 equal prob, 1 server: config (1,1) feasible => rho* = 2
+    r = rho_star_discrete(np.array([0.4, 0.6]), np.array([0.5, 0.5]), L=1)
+    assert r == pytest.approx(2.0, rel=1e-6)
+
+
+def test_fig3b_example():
+    # cap 10 / sizes 2,5 (0.2/0.5), probs (2/3, 1/3): paper shows
+    # lambda < 4/9 mu1 + 5/9 mu2 supportable -> rho* = 10/3
+    r = rho_star_discrete(np.array([0.2, 0.5]), np.array([2 / 3, 1 / 3]), L=1)
+    assert r == pytest.approx(10 / 3, rel=1e-6)
+
+
+def test_proposition2_example():
+    """Sizes 1/2 +- eps: true rho* = 2 (config (1,1)); upper-rounding both
+    types to a partition with sup >= 1/2+eps can pack only (2,0)/(0,1) ->
+    4/3 = (2/3) rho*. The LP reproduces both numbers."""
+    eps = 0.01
+    r_true = rho_star_discrete(np.array([0.5 - eps, 0.5 + eps]),
+                               np.array([0.5, 0.5]), L=1)
+    assert r_true == pytest.approx(2.0, rel=1e-6)
+    # oblivious upper-rounded system: both sizes round up so that two
+    # "small" jobs still fit but small+large do not
+    r_rounded = rho_star_discrete(np.array([0.5, 0.5 + eps]),
+                                  np.array([0.5, 0.5]), L=1)
+    assert r_rounded == pytest.approx(4 / 3, rel=1e-4)
+    assert r_rounded == pytest.approx(2 / 3 * r_true, rel=1e-4)
+
+
+def test_lemma1_upper_bound():
+    d = Uniform(0.1, 0.9)
+    assert rho_star_upper_bound(d, 5) == pytest.approx(5 / 0.5)
+
+
+def test_scaling_in_servers():
+    sizes, probs = np.array([0.3, 0.5]), np.array([0.5, 0.5])
+    r1 = rho_star_discrete(sizes, probs, L=1)
+    r4 = rho_star_discrete(sizes, probs, L=4)
+    assert r4 == pytest.approx(4 * r1, rel=1e-6)
+
+
+def test_theorem1_convergence():
+    """Upper-rounded bound increases, lower-rounded decreases, and they
+    bracket L/E[R]-ish truth as the quantile partition refines."""
+    d = Uniform(0.2, 0.9)
+    ups, los = [], []
+    for n in (0, 1, 2):
+        up, lo = rho_bounds(d, n, L=1)
+        ups.append(up)
+        los.append(lo)
+    assert ups == sorted(ups)                 # nondecreasing
+    assert los == sorted(los, reverse=True)   # nonincreasing
+    assert ups[-1] <= los[-1]
+    assert los[-1] - ups[-1] < los[0] - ups[0]
+
+
+def test_enumerate_configs_counts():
+    sizes = np.array([32768, 21845], dtype=np.int64)   # 0.5, 1/3
+    confs = enumerate_configs(sizes)
+    # k1 in 0..2, k2 in 0..3 subject to k1/2 + k2/3 <= 1
+    feasible = {(k1, k2) for k1 in range(3) for k2 in range(4)
+                if k1 * 32768 + k2 * 21845 <= 65536}
+    assert set(map(tuple, confs)) == feasible
+    maxi = maximal_configs(confs, sizes)
+    assert set(map(tuple, maxi)) == {(2, 0), (1, 1), (0, 3)}
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.lists(st.floats(0.15, 1.0), min_size=1, max_size=4, unique=True),
+       st.integers(1, 4))
+def test_rho_star_bounds_random(sizes, L):
+    """L <= rho* <= L / mean(R) for any discrete distribution."""
+    sizes = np.asarray(sizes)
+    probs = np.full(len(sizes), 1.0 / len(sizes))
+    r = rho_star_discrete(sizes, probs, L=L)
+    mean = float(np.dot(sizes, probs))
+    assert r >= L - 1e-6
+    assert r <= L / mean + 1e-4 + L * 1e-3  # grid-rounding slack
