@@ -1,6 +1,14 @@
 # One function per paper table/figure. Prints ``name,us_per_call,derived``
-# CSV rows.  REPRO_BENCH_FULL=1 runs paper-scale horizons (Fig 5: 10^6 tasks
-# on 1000 servers); the default is a CI-sized slice of every experiment.
+# CSV rows and dumps every row to a machine-readable BENCH_sched.json so the
+# perf trajectory is tracked across PRs.
+#
+#   REPRO_BENCH_FULL=1   paper-scale horizons (Fig 5: 10^6 tasks on 1000
+#                        servers); default is a CI-sized slice.
+#   REPRO_BENCH_SMOKE=1  tiny shapes everywhere (CI smoke).
+#   REPRO_BENCH_ONLY=a,b run only the named modules
+#                        (fig3,fig4,fig5,stability_bench,sched_micro,roofline)
+#   REPRO_BENCH_JSON=p   where to write the JSON (default: repo-root
+#                        BENCH_sched.json)
 import os
 import sys
 
@@ -8,27 +16,48 @@ sys.path.insert(0, os.path.dirname(__file__))
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
 
+def _selected(name: str) -> bool:
+    only = os.environ.get("REPRO_BENCH_ONLY", "")
+    return not only or name in only.split(",")
+
+
 def main() -> None:
     print("name,us_per_call,derived")
-    import fig3
-    fig3.main()
-    import fig4
-    fig4.main()
-    import fig5
-    fig5.main()
-    import stability_bench
-    stability_bench.main()
-    import sched_micro
-    sched_micro.main()
-    # roofline table from the dry-run artifacts (if generated)
-    import roofline
-    rows = roofline.run(os.path.join(os.path.dirname(__file__), "results",
-                                     "roofline.csv"))
-    for r in rows:
-        from common import row
-        row(f"roofline/{r['arch']}/{r['shape']}", 0.0,
-            f"dom={r['dominant']};useful={r['useful_ratio']:.2f};"
-            f"roof={100 * r['roofline_frac']:.1f}%")
+    if _selected("fig3"):
+        import fig3
+        fig3.main()
+    if _selected("fig4"):
+        import fig4
+        fig4.main()
+    if _selected("fig5"):
+        import fig5
+        fig5.main()
+    if _selected("stability_bench"):
+        import stability_bench
+        stability_bench.main()
+    if _selected("sched_micro"):
+        import sched_micro
+        sched_micro.main()
+    if _selected("roofline"):
+        # roofline table from the dry-run artifacts (if generated)
+        import roofline
+        rows = roofline.run(os.path.join(os.path.dirname(__file__), "results",
+                                         "roofline.csv"))
+        for r in rows:
+            from common import row
+            row(f"roofline/{r['arch']}/{r['shape']}", 0.0,
+                f"dom={r['dominant']};useful={r['useful_ratio']:.2f};"
+                f"roof={100 * r['roofline_frac']:.1f}%")
+
+    from common import write_json
+    json_path = os.environ.get("REPRO_BENCH_JSON")
+    if json_path is None and os.environ.get("REPRO_BENCH_ONLY"):
+        # a subset run must not clobber the committed full-trajectory file
+        print("REPRO_BENCH_ONLY set and no REPRO_BENCH_JSON: "
+              "skipping BENCH_sched.json write", flush=True)
+        return
+    write_json(json_path or os.path.join(
+        os.path.dirname(__file__), "..", "BENCH_sched.json"))
 
 
 if __name__ == "__main__":

@@ -1,53 +1,152 @@
-"""Scheduler microbenchmarks: placement throughput of the three engines
-(event-driven numpy, pure-JAX, Pallas interpret) + rho* LP timing."""
+"""Scheduler microbenchmarks.
+
+Placement throughput of the BF-J/S engines (event-driven numpy; the original
+nested-loop jax "reference"; the rewritten branch-free "scan"; the fused
+Pallas kernel in interpret mode for correctness), the best-fit placement
+kernels, and rho* LP timing.
+
+The headline rows compare the rewritten engine against the seed engine at
+the historical bench config (L=16, K=24, Qcap=512, horizon=5000) and verify
+IN-PROCESS that the fast engine reproduces the seed trajectories bit-for-bit
+(bitmatch=1, trunc=0) — the speedup is for identical output.
+
+REPRO_BENCH_SMOKE=1 shrinks every shape to a CI-sized smoke test.
+"""
 from __future__ import annotations
+
+import time
 
 import numpy as np
 
-from common import row, timed
+from common import SMOKE, row, timed, timed_best
 
 import jax
 import jax.numpy as jnp
 
 from repro.core import (BFJS, ServiceModel, Uniform, simulate,
                         rho_star_discrete)
-from repro.core.jax_sched import best_fit_place, run_bfjs
+from repro.core.jax_sched import (best_fit_place, make_streams,
+                                  monte_carlo_bfjs, run_bfjs)
 from repro.kernels.best_fit.best_fit import best_fit_pallas
+from repro.kernels.bfjs.ops import bfjs_simulate
+
+
+def sampler(key, n):
+    return jax.random.uniform(key, (n,), minval=0.05, maxval=0.5)
+
+
+def _bench_engines():
+    """Seed engine vs rewritten engine, same key, same config, same output.
+
+    The variants are timed INTERLEAVED (round-robin, best-of-N per variant)
+    so machine-load drift hits every engine equally — on shared hosts the
+    wall clock of a single variant can swing +-50% between back-to-back
+    runs, which would make a sequential comparison meaningless."""
+    if SMOKE:
+        kw = dict(L=4, K=6, Qcap=64, A_max=6, horizon=200)
+    else:
+        kw = dict(L=16, K=24, Qcap=512, A_max=8, horizon=5_000)
+    T = kw["horizon"]
+    key = jax.random.PRNGKey(0)
+
+    def run(engine, work_steps=None):
+        return run_bfjs(key, 1.5, 0.01, sampler, engine=engine,
+                        work_steps=work_steps, **kw)
+
+    variants = {"ref": ("reference", None), "default": ("scan", None),
+                "tuned": ("scan", 5)}
+    best = {name: float("inf") for name in variants}
+    for name, (eng, ws) in variants.items():   # compile once each
+        run(eng, ws).queue_len.block_until_ready()
+    for _ in range(2 if SMOKE else 7):
+        for name, (eng, ws) in variants.items():
+            t0 = time.time()
+            run(eng, ws).queue_len.block_until_ready()
+            best[name] = min(best[name], time.time() - t0)
+
+    us_ref = best["ref"] * 1e6
+    row("micro/jax_bfjs_slot_ref", us_ref / T,
+        f"engine=reference;slots_per_sec={T / (us_ref / 1e6):.0f}")
+    ref = run("reference")
+    for label, name in (("", "default"), ("_tuned", "tuned")):
+        eng, ws = variants[name]
+        us = best[name] * 1e6
+        res = run(eng, ws)
+        match = int((res.queue_len == ref.queue_len).all()
+                    & (res.departed == ref.departed).all()
+                    & (res.occupancy == ref.occupancy).all()
+                    & (res.dropped == ref.dropped).all())
+        row(f"micro/jax_bfjs_slot{label}", us / T,
+            f"engine=scan;work_steps={ws};slots_per_sec={T / (us / 1e6):.0f};"
+            f"speedup_vs_ref={us_ref / us:.2f}x;bitmatch={match};"
+            f"trunc={int(res.truncated)}")
+
+
+def _bench_ensemble():
+    """Monte-Carlo ensemble throughput (slots/sec x ensembles), old vs new."""
+    if SMOKE:
+        G, kw = 2, dict(L=4, K=6, Qcap=64, A_max=6, horizon=120)
+    else:
+        G, kw = 8, dict(L=16, K=24, Qcap=512, A_max=8, horizon=2_000)
+    T = kw["horizon"]
+    keys = jax.random.split(jax.random.PRNGKey(0), G)
+    us_by_engine = {}
+    for engine in ("reference", "scan"):
+        fn = lambda: monte_carlo_bfjs(
+            keys, 1.5, 0.01, sampler, engine=engine,
+            **kw).queue_len.block_until_ready()
+        _, us = timed_best(fn, repeat=2)
+        us_by_engine[engine] = us
+        speed = "" if engine == "reference" else \
+            f";speedup_vs_ref={us_by_engine['reference'] / us:.2f}x"
+        row(f"micro/bfjs_mc_{engine}", us / (G * T),
+            f"ensembles={G};ensemble_slots_per_sec={G * T / (us / 1e6):.0f}"
+            + speed)
+
+
+def _bench_pallas_bfjs():
+    """Fused slot-step kernel, interpret mode: correctness-grade timing."""
+    G, kw = 2, dict(L=4, K=6, Qcap=64, A_max=6)
+    T = 120
+    keys = jax.random.split(jax.random.PRNGKey(1), G)
+    streams = jax.vmap(lambda k: make_streams(
+        k, 1.2, 0.02, sampler, L=kw["L"], K=kw["K"], A_max=kw["A_max"],
+        horizon=T))(keys)
+    fn = lambda: bfjs_simulate(streams, Qcap=kw["Qcap"],
+                               **{k: kw[k] for k in ("L", "K", "A_max")}
+                               ).queue_len.block_until_ready()
+    _, us = timed_best(fn, repeat=1)
+    row("micro/bfjs_pallas_interp", us / (G * T),
+        "per_slot;interpret-mode(correctness-only)")
 
 
 def main():
     # numpy event-driven engine: jobs/sec at trace-like load
     dist = Uniform(0.05, 0.5)
     svc = ServiceModel("geometric", 100.0)
-    horizon = 50_000
+    horizon = 2_000 if SMOKE else 50_000
     res, us = timed(simulate, BFJS(), L=100, lam=2.0, dist=dist, service=svc,
                     horizon=horizon, seed=0)
     row("micro/numpy_bfjs", us / horizon,
         f"jobs_per_sec={res.departed / (us / 1e6):.0f}")
 
-    # JAX scan engine (jit, CPU)
-    def sampler(key, n):
-        return jax.random.uniform(key, (n,), minval=0.05, maxval=0.5)
-
-    fn = lambda: run_bfjs(jax.random.PRNGKey(0), lam=1.5, mu=0.01,
-                          sampler=sampler, L=16, K=24, Qcap=512, A_max=8,
-                          horizon=5_000).queue_len.block_until_ready()
-    fn()  # compile
-    _, us = timed(fn)
-    row("micro/jax_bfjs_slot", us / 5_000, "engine=lax.scan")
+    _bench_engines()
+    _bench_ensemble()
+    _bench_pallas_bfjs()
 
     # best-fit placement kernels: jnp scan vs Pallas(interpret)
-    resid = jax.random.uniform(jax.random.PRNGKey(1), (1024,))
-    sizes = jax.random.uniform(jax.random.PRNGKey(2), (256,), minval=0.01,
+    Lbf, Nbf = (128, 32) if SMOKE else (1024, 256)
+    resid = jax.random.uniform(jax.random.PRNGKey(1), (Lbf,))
+    sizes = jax.random.uniform(jax.random.PRNGKey(2), (Nbf,), minval=0.01,
                                maxval=0.3)
     jp = jax.jit(best_fit_place)
     jp(resid, sizes)[0].block_until_ready()
     _, us = timed(lambda: jp(resid, sizes)[0].block_until_ready(), repeat=5)
-    row("micro/best_fit_jnp", us / 256, "per_job;L=1024")
+    row("micro/best_fit_jnp", us / Nbf, f"per_job;L={Lbf}")
     best_fit_pallas(resid, sizes, interpret=True)
     _, us = timed(lambda: best_fit_pallas(resid, sizes, interpret=True)[0]
                   .block_until_ready(), repeat=2)
-    row("micro/best_fit_pallas_interp", us / 256,
+    row("micro/best_fit_pallas_interp", us / Nbf,
         "per_job;interpret-mode(correctness-only)")
 
     # rho* LP

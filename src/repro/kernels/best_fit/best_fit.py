@@ -5,8 +5,9 @@ capacity (BF-J, Section IV).  The sequential dependence across jobs lives in
 a ``fori_loop`` INSIDE the kernel while the per-job candidate search is a
 masked min-reduction over the residual vector held in VMEM — residuals never
 round-trip to HBM between placements.  (On GPU this would be a warp-shuffle
-argmin; the VMEM-resident loop is the TPU-idiomatic equivalent —
-see DESIGN.md §3.)
+argmin; the VMEM-resident loop is the TPU-idiomatic equivalent — see
+DESIGN.md §3.  The fused slot-step engine kernel in kernels/bfjs
+generalizes this pattern to whole cluster simulations, DESIGN.md §4.)
 
 Shapes: residuals (L,), sizes (N,) -> assignment (N,) int32 (-1 = rejected),
 updated residuals (L,).  The batched entry point grids over independent

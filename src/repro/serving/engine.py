@@ -130,6 +130,44 @@ class Replica:
         return finished
 
 
+def estimate_capacity(num_replicas: int, lam: float,
+                      mean_service_slots: float, size_sampler=None, *,
+                      ensembles: int = 8, horizon: int = 2_000,
+                      engine: str = "scan", seed: int = 0, K: int = 16,
+                      Qcap: int = 512, A_max: int = 8) -> dict:
+    """Monte-Carlo what-if sizing for a serving fleet.
+
+    Simulates BF-J/S admission (the controller this engine runs) on
+    ``num_replicas`` replicas under Poisson(``lam``) request arrivals whose
+    KV-cache fractions come from ``size_sampler(key, n)`` and whose decode
+    lengths are geometric with mean ``mean_service_slots`` — on-device via
+    the accelerated engines in core/jax_sched (``engine=`` "scan" |
+    "reference" | "pallas").  Returns tail-queue / drop statistics to answer
+    "how many replicas do I need for this traffic?" before any model is
+    loaded.
+    """
+    from repro.core.jax_sched import monte_carlo_bfjs
+
+    if size_sampler is None:
+        def size_sampler(key, n):
+            return jax.random.uniform(key, (n,), minval=0.05, maxval=0.5)
+
+    keys = jax.random.split(jax.random.PRNGKey(seed), ensembles)
+    res = monte_carlo_bfjs(keys, lam, 1.0 / mean_service_slots, size_sampler,
+                           engine=engine, L=num_replicas, K=K, Qcap=Qcap,
+                           A_max=A_max, horizon=horizon)
+    tail = np.asarray(res.queue_len)[:, -max(horizon // 4, 1):]
+    return {
+        "replicas": num_replicas,
+        "mean_tail_queue": float(tail.mean()),
+        "p95_tail_queue": float(np.percentile(tail, 95)),
+        "mean_occupancy": float(np.asarray(res.occupancy).mean()),
+        "dropped": int(np.asarray(res.dropped).sum()),
+        "truncated": int(np.asarray(res.truncated).sum()),
+        "slots_simulated": ensembles * horizon,
+    }
+
+
 class ServingEngine:
     """L replicas + paper-scheduler admission; host-level request queue."""
 

@@ -5,10 +5,12 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
-from repro.core import BFJS, PartitionI, ServiceModel, Uniform, simulate, to_grid
+from repro.core import BFJS, PartitionI, RES, ServiceModel, Uniform, \
+    simulate, to_grid
 from repro.core.jax_sched import (best_fit_place, best_fit_server,
-                                  max_weight_config_jax, monte_carlo_bfjs,
-                                  run_bfjs, vq_type_of)
+                                  make_streams, max_weight_config_jax,
+                                  monte_carlo_bfjs, run_bfjs,
+                                  run_bfjs_streams, vq_type_of)
 from repro.core.partition import k_red, max_weight_config
 
 
@@ -39,6 +41,23 @@ def test_vq_type_of_matches_partition():
         assert agree > 0.95, (J, agree)  # float/grid boundary slack
 
 
+@pytest.mark.parametrize("J", [2, 3, 6, 10])
+def test_vq_type_of_matches_partition_exactly_on_full_grid(J):
+    """Exact parity with PartitionI.type_of_scalar on EVERY grid size,
+    including exact powers of two and the size <= 2^-J tail."""
+    part = PartitionI(J)
+    g = np.arange(1, RES + 1, dtype=np.int64)
+    sizes = (g.astype(np.float64) / RES).astype(np.float32)  # exact in f32
+    expect = part.type_of(g)
+    got = np.asarray(vq_type_of(jnp.asarray(sizes), J))
+    np.testing.assert_array_equal(got, expect)
+    # spot-check the scalar API on the boundaries the float path fudged
+    for m in range(J):
+        assert int(vq_type_of(jnp.float32(2.0 ** -m), J)) \
+            == part.type_of_scalar(RES >> m)
+    assert int(vq_type_of(jnp.float32(2.0 ** -J), J)) == 2 * J - 1
+
+
 def test_max_weight_config_jax_matches_numpy():
     for J in (2, 4):
         q = np.random.default_rng(0).integers(0, 100, size=2 * J)
@@ -64,6 +83,91 @@ def test_run_bfjs_stable_vs_overloaded():
     assert q_s < 30
     assert q_o > 5 * q_s       # overloaded queue blows up
     assert int(stable.dropped) == 0
+
+
+def _uniform_sampler(lo, hi):
+    def sampler(key, n):
+        return jax.random.uniform(key, (n,), minval=lo, maxval=hi)
+    return sampler
+
+
+@pytest.mark.parametrize("seed,lam", [(0, 0.5), (1, 1.5), (2, 3.0)])
+def test_scan_engine_bitmatches_reference_engine(seed, lam):
+    """The branch-free engine on pre-generated streams reproduces the seed
+    nested-loop engine trajectory bit-for-bit (same key)."""
+    sampler = _uniform_sampler(0.05, 0.5)
+    kw = dict(L=6, K=8, Qcap=64, A_max=6, horizon=800)
+    ref = run_bfjs(jax.random.PRNGKey(seed), lam, 0.02, sampler,
+                   engine="reference", **kw)
+    new = run_bfjs(jax.random.PRNGKey(seed), lam, 0.02, sampler,
+                   engine="scan", **kw)
+    assert int(new.truncated) == 0
+    np.testing.assert_array_equal(np.asarray(new.queue_len),
+                                  np.asarray(ref.queue_len))
+    np.testing.assert_array_equal(np.asarray(new.departed),
+                                  np.asarray(ref.departed))
+    np.testing.assert_array_equal(np.asarray(new.occupancy),
+                                  np.asarray(ref.occupancy))
+    assert int(new.dropped) == int(ref.dropped)
+
+
+def test_streams_bitmatch_reference_inloop_draws():
+    """make_streams replays the reference engine's exact per-slot key chain:
+    batched pre-generation == the in-loop draws, bitwise."""
+    lam, mu, L, K, A_max, T = 1.5, 0.01, 4, 6, 8, 60
+    sampler = _uniform_sampler(0.05, 0.5)
+    key = jax.random.PRNGKey(42)
+    st = make_streams(key, lam, mu, sampler, L=L, K=K, A_max=A_max,
+                      horizon=T)
+    from repro.core.jax_sched import _geometric
+    k = key
+    for t in range(T):
+        k, _, k_n, k_sizes, k_dur = jax.random.split(k, 5)
+        n = jnp.minimum(jax.random.poisson(k_n, lam), A_max)
+        assert int(st.n[t]) == int(n)
+        np.testing.assert_array_equal(np.asarray(st.sizes[t]),
+                                      np.asarray(sampler(k_sizes, A_max)))
+        np.testing.assert_array_equal(
+            np.asarray(st.durs[t]),
+            np.asarray(_geometric(k_dur, mu, (L * K + A_max,))))
+
+
+def test_scan_engine_truncation_is_flagged_not_silent():
+    """A too-small work list must be reported via `truncated`, and a
+    sufficient one must reproduce the reference exactly."""
+    sampler = _uniform_sampler(0.05, 0.2)   # many small jobs per server
+    kw = dict(L=4, K=12, Qcap=64, A_max=8)
+    streams = make_streams(jax.random.PRNGKey(5), 4.0, 0.05, sampler,
+                           L=4, K=12, A_max=8, horizon=400)
+    tiny = run_bfjs_streams(streams, Qcap=64, L=4, K=12, A_max=8,
+                            work_steps=1)
+    ample = run_bfjs_streams(streams, Qcap=64, L=4, K=12, A_max=8,
+                             work_steps=24)
+    assert int(tiny.truncated) > 0
+    assert int(ample.truncated) == 0
+    ref = run_bfjs(jax.random.PRNGKey(5), 4.0, 0.05, sampler,
+                   engine="reference", horizon=400, **kw)
+    np.testing.assert_array_equal(np.asarray(ample.queue_len),
+                                  np.asarray(ref.queue_len))
+
+
+def test_monte_carlo_engines_agree():
+    """vmapped scan engine == gridded Pallas kernel (interpret) == reference,
+    member by member, on shared streams."""
+    sampler = _uniform_sampler(0.1, 0.6)
+    kw = dict(L=4, K=6, Qcap=48, A_max=5, horizon=150)
+    keys = jax.random.split(jax.random.PRNGKey(9), 3)
+    ref = monte_carlo_bfjs(keys, 1.0, 0.03, sampler, engine="reference", **kw)
+    scan = monte_carlo_bfjs(keys, 1.0, 0.03, sampler, engine="scan", **kw)
+    pal = monte_carlo_bfjs(keys, 1.0, 0.03, sampler, engine="pallas", **kw)
+    assert int(np.asarray(scan.truncated).sum()) == 0
+    for res in (scan, pal):
+        np.testing.assert_array_equal(np.asarray(res.queue_len),
+                                      np.asarray(ref.queue_len))
+        np.testing.assert_array_equal(np.asarray(res.departed),
+                                      np.asarray(ref.departed))
+        np.testing.assert_array_equal(np.asarray(res.dropped),
+                                      np.asarray(ref.dropped))
 
 
 def test_jax_engine_agrees_with_numpy_engine_distributionally():

@@ -1,6 +1,8 @@
 """Partition I (Eq. 6) and K_RED^(J) (Eq. 7) properties."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.partition import PartitionI, k_red, k_red_is_feasible

@@ -1,5 +1,8 @@
 """Fenwick / SegTree / SortedJobQueue / VirtualQueues exactness."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.fenwick import Fenwick, SegTreeMax

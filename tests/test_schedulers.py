@@ -1,6 +1,8 @@
 """Scheduler invariants (hypothesis) + behavioural specifics."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core import (BFJ, BFJS, BFS, FIFOFF, VQS, Discrete, MaxWeight,

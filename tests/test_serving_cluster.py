@@ -9,7 +9,7 @@ from repro.cluster.gang import GangScheduler, TrainJob
 from repro.configs import get_smoke_config
 from repro.core.quantize import RES
 from repro.models import model as M
-from repro.serving.engine import Request, ServingEngine
+from repro.serving.engine import Request, ServingEngine, estimate_capacity
 
 
 def test_admission_best_fit_order():
@@ -62,6 +62,20 @@ def test_serving_engine_completes(arch):
     # paper capacity constraint held throughout
     assert (eng.admission.residual >= 0).all()
     assert (eng.admission.residual <= RES).all()
+
+
+def test_estimate_capacity_separates_under_from_overprovisioned():
+    """The jax_sched-backed what-if planner: a fleet double the offered load
+    keeps a short queue and drops nothing; a fleet at a fraction of it
+    saturates."""
+    kw = dict(ensembles=3, horizon=600, K=8, Qcap=128, A_max=6)
+    lam, mean_slots = 0.4, 40.0          # offered capacity-load ~ 4.4
+    big = estimate_capacity(10, lam, mean_slots, **kw)
+    small = estimate_capacity(2, lam, mean_slots, **kw)
+    assert big["truncated"] == 0
+    assert big["dropped"] == 0
+    assert big["mean_tail_queue"] < 5
+    assert small["mean_tail_queue"] > 10 * max(big["mean_tail_queue"], 0.1)
 
 
 def test_serving_queue_drains_in_arrival_waves():

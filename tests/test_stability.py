@@ -1,6 +1,8 @@
 """rho* LP (Eq. 4), Lemma 1, Theorem 1 convergence, Proposition 2 example."""
 import numpy as np
 import pytest
+
+pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 
 from repro.core.distributions import Discrete, Uniform
