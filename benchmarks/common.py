@@ -47,6 +47,25 @@ def timed_best(fn, *args, repeat: int = 5, **kw):
     return out, best * 1e6
 
 
+def timed_interleaved(variants: dict, rounds: int = 7) -> dict:
+    """Round-robin best-of-N over named thunks, in microseconds.
+
+    Engine comparisons must be timed INTERLEAVED so machine-load drift hits
+    every variant equally — on shared hosts the wall clock of a single
+    variant can swing +-50% between back-to-back runs, which would make a
+    sequential comparison meaningless.  Each thunk runs once for warm-up /
+    compile (excluded), then ``rounds`` timed passes (2 under SMOKE)."""
+    for fn in variants.values():
+        fn()
+    best = {name: float("inf") for name in variants}
+    for _ in range(2 if SMOKE else rounds):
+        for name, fn in variants.items():
+            t0 = time.time()
+            fn()
+            best[name] = min(best[name], time.time() - t0)
+    return {name: b * 1e6 for name, b in best.items()}
+
+
 def write_json(path: str) -> str:
     os.makedirs(os.path.dirname(path) or ".", exist_ok=True)
     with open(path, "w") as f:

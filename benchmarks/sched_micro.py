@@ -1,32 +1,36 @@
 """Scheduler microbenchmarks.
 
-Placement throughput of the BF-J/S engines (event-driven numpy; the original
-nested-loop jax "reference"; the rewritten branch-free "scan"; the fused
-Pallas kernel in interpret mode for correctness), the best-fit placement
-kernels, and rho* LP timing.
+Placement throughput of the BF-J/S and VQS engines (event-driven numpy; the
+nested-loop jax "reference" oracles; the branch-free "scan" rewrites; the
+fused Pallas kernels in interpret mode for correctness), the best-fit
+placement kernels, and rho* LP timing.
 
-The headline rows compare the rewritten engine against the seed engine at
-the historical bench config (L=16, K=24, Qcap=512, horizon=5000) and verify
-IN-PROCESS that the fast engine reproduces the seed trajectories bit-for-bit
-(bitmatch=1, trunc=0) — the speedup is for identical output.
+The headline rows compare the engines at the historical bench config
+(L=16, K=24, Qcap=512, horizon=5000) and verify IN-PROCESS that the fast
+engines reproduce their oracle trajectories bit-for-bit (bitmatch=1,
+trunc=0) — every speedup is for identical output.  The VQS rows time the
+event-driven numpy engine against the scan engine on the same workload
+parameters (micro/vqs_slot_numpy vs micro/vqs_slot: the scan-vs-numpy
+slots/sec comparison tracked across PRs).
 
 REPRO_BENCH_SMOKE=1 shrinks every shape to a CI-sized smoke test.
 """
 from __future__ import annotations
 
-import time
 
 import numpy as np
 
-from common import SMOKE, row, timed, timed_best
+from common import SMOKE, row, timed, timed_best, timed_interleaved
 
 import jax
 import jax.numpy as jnp
 
-from repro.core import (BFJS, ServiceModel, Uniform, simulate,
+from repro.core import (BFJS, ServiceModel, Uniform, VQS, simulate,
                         rho_star_discrete)
-from repro.core.jax_sched import (best_fit_place, make_streams,
-                                  monte_carlo_bfjs, run_bfjs)
+from repro.core.engine import (best_fit_place, make_streams,
+                               monte_carlo_bfjs, monte_carlo_policy,
+                               run_bfjs, run_vqs_streams)
+from repro.core.engine.vqs import _run_vqs_reference_streams
 from repro.kernels.best_fit.best_fit import best_fit_pallas
 from repro.kernels.bfjs.ops import bfjs_simulate
 
@@ -55,22 +59,18 @@ def _bench_engines():
 
     variants = {"ref": ("reference", None), "default": ("scan", None),
                 "tuned": ("scan", 5)}
-    best = {name: float("inf") for name in variants}
-    for name, (eng, ws) in variants.items():   # compile once each
-        run(eng, ws).queue_len.block_until_ready()
-    for _ in range(2 if SMOKE else 7):
-        for name, (eng, ws) in variants.items():
-            t0 = time.time()
-            run(eng, ws).queue_len.block_until_ready()
-            best[name] = min(best[name], time.time() - t0)
+    best = timed_interleaved({
+        name: (lambda eng=eng, ws=ws:
+               run(eng, ws).queue_len.block_until_ready())
+        for name, (eng, ws) in variants.items()})
 
-    us_ref = best["ref"] * 1e6
+    us_ref = best["ref"]
     row("micro/jax_bfjs_slot_ref", us_ref / T,
         f"engine=reference;slots_per_sec={T / (us_ref / 1e6):.0f}")
     ref = run("reference")
     for label, name in (("", "default"), ("_tuned", "tuned")):
         eng, ws = variants[name]
-        us = best[name] * 1e6
+        us = best[name]
         res = run(eng, ws)
         match = int((res.queue_len == ref.queue_len).all()
                     & (res.departed == ref.departed).all()
@@ -104,6 +104,104 @@ def _bench_ensemble():
             + speed)
 
 
+def _bench_vqs_engines():
+    """VQS: event-driven numpy engine vs the scan + reference jax engines,
+    same workload parameters, timed INTERLEAVED (round-robin best-of-N, see
+    _bench_engines) at the historical bench config.
+
+    The scan engine's trajectory is asserted bit-identical to the jax
+    reference oracle on shared streams in the same process (bitmatch=1,
+    trunc=0); the numpy engine runs its own RNG realization of the same
+    workload, so its row is a throughput baseline, not a trajectory twin.
+    """
+    J = 4
+    if SMOKE:
+        L, K, Qcap, A_max, T, lam = 4, 6, 256, 6, 200, 1.5
+    else:
+        L, K, Qcap, A_max, T, lam = 16, 24, 8192, 8, 5_000, 1.5
+    mu = 0.01
+    streams = make_streams(jax.random.PRNGKey(0), lam, mu, sampler,
+                           L=L, K=K, A_max=A_max, horizon=T)
+    kw = dict(J=J, L=L, K=K, Qcap=Qcap, A_max=A_max)
+
+    def run_numpy():
+        return simulate(VQS(J=J), L=L, lam=lam, dist=Uniform(0.05, 0.5),
+                        service=ServiceModel("geometric", 1.0 / mu),
+                        horizon=T, seed=0)
+
+    def run_scan():
+        return run_vqs_streams(streams, **kw).queue_len.block_until_ready()
+
+    def run_ref():
+        return _run_vqs_reference_streams(
+            streams, **kw).queue_len.block_until_ready()
+
+    best = timed_interleaved(
+        {"numpy": run_numpy, "scan": run_scan, "ref": run_ref})
+
+    us_np = best["numpy"]
+    row("micro/vqs_slot_numpy", us_np / T,
+        f"engine=numpy-event-driven;J={J};L={L};"
+        f"slots_per_sec={T / (us_np / 1e6):.0f}")
+    scan_res = run_vqs_streams(streams, **kw)
+    ref_res = _run_vqs_reference_streams(streams, **kw)
+    match = int((scan_res.queue_len == ref_res.queue_len).all()
+                & (scan_res.departed == ref_res.departed).all()
+                & (scan_res.occupancy == ref_res.occupancy).all()
+                & (scan_res.dropped == ref_res.dropped).all())
+    for name, label in (("scan", "micro/vqs_slot"),
+                        ("ref", "micro/vqs_slot_ref")):
+        us = best[name]
+        meta = (f"engine={'scan' if name == 'scan' else 'reference'};J={J};"
+                f"slots_per_sec={T / (us / 1e6):.0f};"
+                f"speedup_vs_numpy={us_np / us:.2f}x")
+        if name == "scan":
+            meta += (f";bitmatch_vs_ref={match};"
+                     f"trunc={int(scan_res.truncated)}")
+        row(label, us / T, meta)
+
+
+def _bench_vqs_ensemble():
+    """VQS Monte-Carlo ensemble throughput (vmapped scan vs reference)."""
+    J = 4
+    if SMOKE:
+        G, kw = 2, dict(L=4, K=6, Qcap=256, A_max=6, horizon=120)
+    else:
+        G, kw = 8, dict(L=16, K=24, Qcap=8192, A_max=8, horizon=2_000)
+    T = kw["horizon"]
+    keys = jax.random.split(jax.random.PRNGKey(0), G)
+    us_ref = None
+    for engine in ("reference", "scan"):
+        fn = lambda: monte_carlo_policy(
+            keys, 1.5, 0.01, sampler, policy="vqs", engine=engine, J=J,
+            **kw).queue_len.block_until_ready()
+        _, us = timed_best(fn, repeat=2)
+        meta = f"ensembles={G};ensemble_slots_per_sec={G * T / (us / 1e6):.0f}"
+        if engine == "reference":
+            us_ref = us
+        else:
+            meta += f";speedup_vs_ref={us_ref / us:.2f}x"
+        row(f"micro/vqs_mc_{engine}", us / (G * T), meta)
+
+
+def _bench_pallas_vqs():
+    """Fused VQS slot-step kernel, interpret mode: correctness-grade
+    timing."""
+    from repro.kernels.vqs.ops import vqs_simulate
+    G, J, kw = 2, 3, dict(L=4, K=8, Qcap=64, A_max=5)
+    T = 120
+    keys = jax.random.split(jax.random.PRNGKey(2), G)
+    streams = jax.vmap(lambda k: make_streams(
+        k, 1.0, 0.03, sampler, L=kw["L"], K=kw["K"], A_max=kw["A_max"],
+        horizon=T))(keys)
+    fn = lambda: vqs_simulate(streams, J=J, Qcap=kw["Qcap"],
+                              **{k: kw[k] for k in ("L", "K", "A_max")}
+                              ).queue_len.block_until_ready()
+    _, us = timed_best(fn, repeat=1)
+    row("micro/vqs_pallas_interp", us / (G * T),
+        "per_slot;interpret-mode(correctness-only)")
+
+
 def _bench_pallas_bfjs():
     """Fused slot-step kernel, interpret mode: correctness-grade timing."""
     G, kw = 2, dict(L=4, K=6, Qcap=64, A_max=6)
@@ -133,6 +231,9 @@ def main():
     _bench_engines()
     _bench_ensemble()
     _bench_pallas_bfjs()
+    _bench_vqs_engines()
+    _bench_vqs_ensemble()
+    _bench_pallas_vqs()
 
     # best-fit placement kernels: jnp scan vs Pallas(interpret)
     Lbf, Nbf = (128, 32) if SMOKE else (1024, 256)

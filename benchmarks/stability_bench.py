@@ -1,7 +1,8 @@
 """Theorem-1 machinery: rho-bar*/rho-lower* convergence table + the
 Proposition-2 2/3-tightness example, as a benchmark artifact — plus the
-Monte-Carlo ensemble throughput of the accelerator engines at a
-stability-study operating point (the workload the jax engines exist for)."""
+Monte-Carlo ensemble throughput of the accelerator engines (BF-J/S and
+VQS, via the policy-generic run_policy stack) at a stability-study
+operating point (the workload the jax engines exist for)."""
 from __future__ import annotations
 
 import numpy as np
@@ -11,15 +12,18 @@ from common import SMOKE, row, timed, timed_best
 import jax
 
 from repro.core import Uniform, rho_bounds, rho_star_discrete
-from repro.core.jax_sched import monte_carlo_bfjs
+from repro.core.engine import monte_carlo_policy
 
 
-def _mc_ensemble_throughput():
-    """Old vs new engine on a stable (rho < rho*) ensemble study."""
+def _mc_ensemble_throughput(policy: str, Qcap: int | None = None,
+                            **policy_kw):
+    """Reference vs scan engine on a stable (rho < rho*) ensemble study."""
     if SMOKE:
         G, kw = 2, dict(L=4, K=8, Qcap=64, A_max=6, horizon=150)
     else:
         G, kw = 8, dict(L=8, K=16, Qcap=256, A_max=6, horizon=1_500)
+    if Qcap is not None:
+        kw["Qcap"] = Qcap if not SMOKE else max(64, Qcap // 8)
     T = kw["horizon"]
     lam, mu = 0.4, 0.02        # rho ~ 0.9 of capacity for U(0.1, 0.6) sizes
 
@@ -30,7 +34,8 @@ def _mc_ensemble_throughput():
     us_ref = None
     for engine in ("reference", "scan"):
         def fn():
-            r = monte_carlo_bfjs(keys, lam, mu, sampler, engine=engine, **kw)
+            r = monte_carlo_policy(keys, lam, mu, sampler, policy=policy,
+                                   engine=engine, **policy_kw, **kw)
             r.queue_len.block_until_ready()
             return r
         res, us = timed_best(fn, repeat=2)
@@ -43,7 +48,8 @@ def _mc_ensemble_throughput():
         else:
             meta += (f";speedup_vs_ref={us_ref / us:.2f}x"
                      f";trunc={int(np.asarray(res.truncated).sum())}")
-        row(f"stability/mc_ensemble_{engine}", us / (G * T), meta)
+        suffix = "" if policy == "bfjs" else f"_{policy}"
+        row(f"stability/mc_ensemble{suffix}_{engine}", us / (G * T), meta)
 
 
 def main():
@@ -62,7 +68,9 @@ def main():
         f"rho*={r_true:.3f};oblivious={r_obl:.3f};"
         f"ratio={r_obl / r_true:.4f}(=2/3)")
 
-    _mc_ensemble_throughput()
+    _mc_ensemble_throughput("bfjs")
+    # VQS: sizes in U(0.1, 0.6) live above 2^-3, K=16 >= 2^3 packing bound
+    _mc_ensemble_throughput("vqs", Qcap=2048, J=3)
 
 
 if __name__ == "__main__":

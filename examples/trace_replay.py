@@ -2,10 +2,18 @@
 
 Synthesizes a statistically Google-like trace (hundreds of distinct discrete
 request sizes, diurnal arrivals, heavy-tailed durations), collapses cpu/mem
-to max(cpu, mem) per the paper's preprocessing, and replays it through
-BF-J/S, VQS-BF and FIFO-FF at increasing traffic scalings.
+to max(cpu, mem) per the paper's preprocessing, and replays it at increasing
+traffic scalings through
 
-    PYTHONPATH=src python examples/trace_replay.py [--tasks 50000]
+  * the event-driven numpy engine (BF-J/S and VQS-BF), and
+  * the accelerator engine stack: the trace is packed into ``SchedStreams``
+    (``streams_from_trace``) and replayed through
+    ``run_policy_streams(..., policy="vqs", engine="scan")`` — the same
+    fixed-shape engine that runs the Monte-Carlo stability studies, now
+    driven by real-workload arrivals.  ``--check`` re-runs the numpy VQS
+    engine and asserts the two queue trajectories are bit-identical.
+
+    PYTHONPATH=src python examples/trace_replay.py [--tasks 50000] [--check]
 """
 import argparse
 import os
@@ -13,15 +21,57 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
-from repro.core import (BFJS, FIFOFF, VQSBF, collapse_resources,
+import numpy as np
+
+from repro.core import (BFJS, FIFOFF, VQS, VQSBF, collapse_resources,
                         empirical_size_stats, scale_arrivals, simulate_trace,
                         synthesize_google_like_trace)
+from repro.core.engine import run_policy_streams, streams_from_trace
+
+# Partition parameter: VQs cover sizes > 2^-5.  (J=5 rather than the
+# earlier numpy-only run's J=7 so the fixed-shape engine's K_SLOTS >= 2^J
+# per-server packing bound stays small; the numpy rows use the same J for
+# an apples-to-apples comparison.)
+J = 5
+K_SLOTS = 32   # >= 2^J jobs per server => no placement truncation
+
+
+def replay_vqs_jax(scaled, sizes, L, horizon, check=False):
+    """Replay the trace through the scan engine; returns a SimResult-like
+    row (mean queue, utilization, departures) computed from the
+    PolicyResult trajectory."""
+    streams = streams_from_trace(scaled.arrival_slots, sizes,
+                                 scaled.durations,
+                                 horizon=horizon)
+    res = run_policy_streams(streams, policy="vqs", engine="scan",
+                             J=J, L=L, K=K_SLOTS, Qcap=1 << 15,
+                             A_max=int(streams.sizes.shape[1]))
+    qlen = np.asarray(res.queue_len)
+    row = {
+        "mean_Q": float(qlen.mean()),
+        "util": float(np.asarray(res.occupancy).mean()) / L,
+        "done": int(res.departed[-1]),
+        "trunc": int(res.truncated),
+        "dropped": int(res.dropped),
+    }
+    if check:
+        ref = simulate_trace(VQS(J=J), L=L,
+                             arrival_slots=scaled.arrival_slots,
+                             sizes=sizes, durations=scaled.durations,
+                             horizon=horizon, seed=1, record_every=1)
+        assert row["trunc"] == 0 and row["dropped"] == 0, row
+        assert (qlen == ref.queue_lens).all(), \
+            "scan engine diverged from the event-driven VQS engine"
+        row["bitmatch"] = 1
+    return row
 
 
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--tasks", type=int, default=50_000)
     ap.add_argument("--servers", type=int, default=100)
+    ap.add_argument("--check", action="store_true",
+                    help="assert the jax replay bit-matches numpy VQS")
     args = ap.parse_args()
 
     horizon = args.tasks  # ~1 task/slot on average
@@ -30,19 +80,26 @@ def main():
     stats = empirical_size_stats(sizes)
     print(f"trace: {len(trace)} tasks, {stats['distinct_values']} distinct "
           f"sizes, mean {stats['mean']:.3f}, p99 {stats['p99']:.3f}\n")
-    print(f"{'scaling':>8} {'policy':>8} {'mean_Q':>9} {'util':>6} {'done':>8}")
+    print(f"{'scaling':>8} {'policy':>12} {'mean_Q':>9} {'util':>6} "
+          f"{'done':>8}")
 
     for scaling in (1.0, 1.3, 1.6):
         scaled = scale_arrivals(trace, scaling)
-        for name, mk in (("bf-js", BFJS), ("vqs-bf", lambda: VQSBF(J=7)),
+        h = int(horizon / scaling) + 500
+        for name, mk in (("bf-js", BFJS), ("vqs-bf", lambda: VQSBF(J=J)),
                          ("fifo-ff", FIFOFF)):
             res = simulate_trace(
                 mk(), L=args.servers,
                 arrival_slots=scaled.arrival_slots, sizes=sizes,
-                durations=scaled.durations,
-                horizon=int(horizon / scaling) + 500, seed=1)
-            print(f"{scaling:>8} {name:>8} {res.mean_queue:>9.1f} "
+                durations=scaled.durations, horizon=h, seed=1)
+            print(f"{scaling:>8} {name:>12} {res.mean_queue:>9.1f} "
                   f"{res.utilization:>6.3f} {res.departed:>8}")
+        row = replay_vqs_jax(scaled, sizes, args.servers, h,
+                             check=args.check)
+        extra = " bitmatch=1" if args.check else \
+            f" trunc={row['trunc']} dropped={row['dropped']}"
+        print(f"{scaling:>8} {'vqs[scan]':>12} {row['mean_Q']:>9.1f} "
+              f"{row['util']:>6.3f} {row['done']:>8}{extra}")
 
 
 if __name__ == "__main__":

@@ -1,0 +1,116 @@
+"""Policy-generic entry points for the accelerator engines.
+
+One registry maps policy names to their engine implementations so every
+caller — serving capacity planner, benchmarks, examples, later sharded /
+multi-resource fleets — dispatches through the same three calls:
+
+    run_policy(key, lam, mu, sampler, policy="vqs", engine="scan", ...)
+    run_policy_streams(streams, policy="vqs", engine="scan", ...)   # traces
+    monte_carlo_policy(keys, ..., policy="bfjs", engine="pallas")
+
+``engine`` is always one of ``"reference" | "scan" | "pallas"`` with the
+same contract as PR 1's BF-J/S stack: "scan" bit-matches "reference" while
+``truncated == 0``, and "pallas" bit-matches "scan".  Policy-specific
+configuration (``J`` for VQS, ``work_steps`` bounds, ...) passes through as
+keyword arguments; unknown keys are rejected by the policy's runner.
+
+New policies register with ``register_policy`` — the hook the roadmap's
+multi-resource and admission-control engines plug into.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import jax
+
+from .bfjs import monte_carlo_bfjs, run_bfjs, run_bfjs_trace
+from .streams import PolicyResult, SchedStreams
+from .vqs import monte_carlo_vqs, run_vqs, run_vqs_trace
+
+ENGINES = ("reference", "scan", "pallas")
+
+
+@dataclass(frozen=True)
+class PolicySpec:
+    """Engine implementations of one scheduling policy."""
+    name: str
+    run: Callable[..., PolicyResult]          # (key, lam, mu, sampler, ...)
+    run_streams: Callable[..., PolicyResult]  # (streams, ...)
+    monte_carlo: Callable[..., PolicyResult]  # (keys, lam, mu, sampler, ...)
+
+
+_POLICIES: dict[str, PolicySpec] = {}
+
+
+def register_policy(spec: PolicySpec) -> PolicySpec:
+    if spec.name in _POLICIES:
+        raise ValueError(f"policy {spec.name!r} already registered")
+    _POLICIES[spec.name] = spec
+    return spec
+
+
+def available_policies() -> tuple[str, ...]:
+    return tuple(sorted(_POLICIES))
+
+
+def get_policy(policy: str) -> PolicySpec:
+    try:
+        return _POLICIES[policy]
+    except KeyError:
+        raise ValueError(
+            f"unknown policy {policy!r}; registered: "
+            f"{', '.join(available_policies())}") from None
+
+
+def _check_engine(engine: str) -> None:
+    if engine not in ENGINES:
+        raise ValueError(f"unknown engine {engine!r}; expected one of "
+                         f"{', '.join(ENGINES)}")
+
+
+register_policy(PolicySpec(
+    name="bfjs",
+    run=run_bfjs,
+    run_streams=run_bfjs_trace,
+    monte_carlo=monte_carlo_bfjs,
+))
+
+register_policy(PolicySpec(
+    name="vqs",
+    run=run_vqs,
+    run_streams=run_vqs_trace,
+    monte_carlo=monte_carlo_vqs,
+))
+
+
+def run_policy(key: jax.Array, lam: float, mu: float, sampler,
+               *, policy: str = "bfjs", engine: str = "scan",
+               **config) -> PolicyResult:
+    """Simulate one cluster under ``policy`` with the chosen ``engine``.
+
+    ``sampler(key, n) -> (n,)`` float job sizes in (0, 1].  ``config``
+    passes through to the policy runner (``L``, ``K``, ``Qcap``, ``A_max``,
+    ``horizon``, ``work_steps``; ``J``/``drain`` for VQS).
+    """
+    _check_engine(engine)
+    return get_policy(policy).run(key, lam, mu, sampler, engine=engine,
+                                  **config)
+
+
+def run_policy_streams(streams: SchedStreams, *, policy: str = "bfjs",
+                       engine: str = "scan", **config) -> PolicyResult:
+    """Replay explicit streams (e.g. ``streams_from_trace``) through a
+    policy engine — the trace-driven path of the stack."""
+    _check_engine(engine)
+    return get_policy(policy).run_streams(streams, engine=engine, **config)
+
+
+def monte_carlo_policy(keys: jax.Array, lam: float, mu: float, sampler,
+                       *, policy: str = "bfjs", engine: str = "scan",
+                       **config) -> PolicyResult:
+    """One simulated cluster per key; "pallas" runs the ensemble as the
+    kernel grid, other engines vmap."""
+    _check_engine(engine)
+    return get_policy(policy).monte_carlo(keys, lam, mu, sampler,
+                                          engine=engine, **config)

@@ -1,0 +1,94 @@
+"""Primitive scheduling ops shared by the engines and the serving stack.
+
+Pure-jnp, jit/vmap-friendly.  The Pallas kernels under ``repro.kernels``
+re-express the hot ones with broadcasted-iota masks; these are the
+behavioural definitions they are tested against.
+"""
+from __future__ import annotations
+
+
+
+import jax
+import jax.numpy as jnp
+
+from ..partition import k_red
+from ..quantize import RES
+
+
+def best_fit_server(residuals: jax.Array, size: jax.Array) -> jax.Array:
+    """Tightest feasible server for one job: argmin residual among residuals
+    >= size; returns -1 if none fits. O(L) vectorized."""
+    feasible = residuals >= size
+    masked = jnp.where(feasible, residuals, jnp.inf)
+    idx = jnp.argmin(masked)
+    return jnp.where(feasible.any(), idx, -1)
+
+
+def best_fit_place(residuals: jax.Array, sizes: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Sequentially Best-Fit place a batch of jobs (pure-jnp reference used by
+    the serving engine; kernels/best_fit provides the Pallas TPU version).
+
+    Returns (assignment (N,) int32 with -1 = rejected, new residuals)."""
+
+    def body(resid, size):
+        srv = best_fit_server(resid, size)
+        ok = srv >= 0
+        resid = jnp.where(ok, resid.at[srv].add(-size), resid)
+        return resid, jnp.where(ok, srv, -1)
+
+    new_resid, assign = jax.lax.scan(body, residuals, sizes)
+    return assign.astype(jnp.int32), new_resid
+
+
+def largest_fitting_job(queue: jax.Array, cap: jax.Array) -> jax.Array:
+    """Index of the largest queued job with size <= cap (BF-S step);
+    -1 if none. Zero entries mean empty queue slots."""
+    fits = (queue > 0) & (queue <= cap)
+    masked = jnp.where(fits, queue, -jnp.inf)
+    idx = jnp.argmax(masked)
+    return jnp.where(fits.any(), idx, -1)
+
+
+def k_red_jnp(J: int) -> jax.Array:
+    """The reduced configuration set K_RED^(J) as an int32 array (a constant
+    when used under jit; ``k_red`` itself is lru-cached host-side)."""
+    return jnp.asarray(k_red(J), jnp.int32)
+
+
+def max_weight_config_jax(J: int, vq_sizes: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """argmax_{k in K_RED^{(J)}} <k, Q>  (paper Eq. 8), jit/vmap-friendly."""
+    confs = k_red_jnp(J)
+    w = confs @ vq_sizes.astype(jnp.int32)
+    i = jnp.argmax(w)
+    return i, confs[i]
+
+
+def vq_type_of_grid(g: jax.Array, J: int) -> jax.Array:
+    """Partition-I type of integer grid sizes (exact, jittable).
+
+    Transcribes ``PartitionI.type_of`` comparison-for-comparison:
+    ``m = #{k in 1..J : g <= RES >> k}`` clipped to ``J-1``, even/odd split
+    by ``3g > 2*(RES >> m)``, and the ``g <= RES >> J`` tail mapping to the
+    last type ``2J - 1``.  Agrees with ``PartitionI.type_of_scalar`` on
+    every grid point — the VQS engines classify with this so their virtual
+    queues are bit-identical to the event-driven engine's.
+    """
+    g = jnp.asarray(g, jnp.int32)
+    bounds = jnp.asarray([RES >> k for k in range(1, J + 1)], jnp.int32)
+    m = jnp.minimum((g[..., None] <= bounds).sum(-1).astype(jnp.int32), J - 1)
+    upper = jnp.right_shift(jnp.int32(RES), m)
+    t = jnp.where(3 * g > 2 * upper, 2 * m, 2 * m + 1)
+    return jnp.where(g <= (RES >> J), 2 * J - 1, t).astype(jnp.int32)
+
+
+def vq_type_of(sizes: jax.Array, J: int) -> jax.Array:
+    """Partition-I type of float sizes in (0,1] (vectorized, jittable).
+
+    Sizes are quantized to the ``quantize.RES`` grid (the same
+    ``max(round(size * RES), 1)`` rule the engines apply) and classified by
+    the exact integer rule, so the result agrees with
+    ``PartitionI.type_of_scalar`` on every grid point (including exact
+    powers of two and the ``size <= 2^-J`` tail).
+    """
+    g = jnp.maximum(jnp.round(sizes * RES), 1.0).astype(jnp.int32)
+    return vq_type_of_grid(g, J)

@@ -1,0 +1,166 @@
+"""Pre-generated randomness streams shared by every accelerator engine.
+
+All engine randomness is hoisted out of the slot loops into ``SchedStreams``:
+per-slot arrival counts, job sizes and service durations, generated either
+
+  * from a PRNG key (``make_streams``) with exactly the key chain of the
+    original in-loop reference engine, so stream-consuming engines reproduce
+    it bit-for-bit; or
+  * from a workload trace (``streams_from_trace``), so Google-like traces
+    (core/trace.py) replay through the same fixed-shape engines that run the
+    synthetic Monte-Carlo studies.
+
+The duration stream layout is shared across policies: the LAST ``A_max``
+lanes of ``durs[t]`` belong to the slot's arrivals (``durs[t, -A_max + a]``
+is arrival ``a``'s duration — consumed by BF-J placements, and by the VQS
+engines, which attach the duration to the job at arrival), while everything
+before them is the sequential-draw region consumed dc-th-placement-first by
+the BF-J/S engines' BF-S refills.  ``make_streams`` emits the full
+``L*K + A_max`` width; ``streams_from_trace`` emits only the per-arrival
+lanes — a trace has no meaningful sequential region (BF-S refills would
+detach durations from job identities), so the BF-J/S engines statically
+reject trace-shaped streams instead of replaying them wrong.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+INF_SLOT = jnp.iinfo(jnp.int32).max
+
+
+class SchedStreams(NamedTuple):
+    """Per-slot randomness consumed by the scheduling engines.
+
+    Generated with exactly the key chain of the in-loop reference engine, so
+    engines consuming these streams reproduce ``engine="reference"``
+    bit-for-bit.  (Known historically as ``BFJSStreams`` — the layout is
+    policy-generic and the old name remains as an alias.)
+    """
+    n: jax.Array       # (T,) int32 arrival counts, already clipped to A_max
+    sizes: jax.Array   # (T, A_max) float32 job sizes in (0, 1]
+    durs: jax.Array    # (T, L*K + A_max) int32 geometric service durations
+
+
+#: Back-compat alias (PR 1 public name).
+BFJSStreams = SchedStreams
+
+
+class PolicyResult(NamedTuple):
+    """Per-slot trajectory of one simulated cluster (any policy/engine)."""
+    queue_len: jax.Array   # (T,) int32
+    occupancy: jax.Array   # (T,) float32 total occupied capacity (servers)
+    departed: jax.Array    # (T,) int32 cumulative departures
+    dropped: jax.Array     # () int32 arrivals dropped by fixed-size buffers
+    truncated: jax.Array   # () int32 slots where a fixed bound cut the
+    #                        policy short (0 == bit-exact vs. the reference)
+
+
+#: Back-compat alias (PR 1 public name).
+BFJSResult = PolicyResult
+
+
+def _geometric(key: jax.Array, mu: float, shape=()) -> jax.Array:
+    u = jax.random.uniform(key, shape, minval=1e-7, maxval=1.0)
+    return jnp.maximum(jnp.ceil(jnp.log(u) / jnp.log1p(-mu)), 1.0).astype(jnp.int32)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("sampler", "L", "K", "A_max", "horizon"))
+def make_streams(key: jax.Array, lam: float, mu: float,
+                 sampler: Callable[[jax.Array, int], jax.Array],
+                 L: int, K: int, A_max: int, horizon: int) -> SchedStreams:
+    """Pre-generate all per-slot randomness for one cluster simulation.
+
+    Replicates the reference engine's per-slot key chain
+    (``key, _, k_n, k_sizes, k_dur = split(key, 5)``) and draws each slot's
+    Poisson count / sizes / durations under ``vmap`` — bitwise identical to
+    the in-loop draws, but issued as three large batched RNG calls instead
+    of ``5 * horizon`` tiny ones.
+    """
+
+    def chain(k, _):
+        ks = jax.random.split(k, 5)
+        return ks[0], ks[1:]
+
+    _, ks = jax.lax.scan(chain, key, None, length=horizon)
+    n = jnp.minimum(jax.vmap(lambda k: jax.random.poisson(k, lam))(ks[:, 1]),
+                    A_max).astype(jnp.int32)
+    sizes = jax.vmap(lambda k: sampler(k, A_max))(ks[:, 2])
+    durs = jax.vmap(lambda k: _geometric(k, mu, (L * K + A_max,)))(ks[:, 3])
+    return SchedStreams(n, sizes, durs)
+
+
+def streams_from_trace(arrival_slots, sizes, durations, *,
+                       horizon: int | None = None,
+                       A_max: int | None = None) -> SchedStreams:
+    """Build ``SchedStreams`` that replay a workload trace exactly.
+
+    Mirrors ``core.simulator.simulate_trace`` preprocessing bit-for-bit:
+    jobs are stably sorted by arrival slot, float sizes are quantized with
+    ``quantize.to_grid`` (the stream stores the exact grid value ``g/RES``,
+    which float32 represents exactly for ``RES = 2**16``, so the engines'
+    in-loop quantization recovers ``g`` verbatim) and durations are clamped
+    to >= 1 slot.
+
+    The duration stream holds ONLY the per-arrival lanes (``(T, A_max)``):
+    every job's duration travels with the job, which is exactly the
+    semantics of policies that attach durations at arrival (VQS).  The
+    BF-J/S engines additionally need a sequential-draw region that a trace
+    cannot provide (their BF-S refills would detach durations from job
+    identities), so they reject trace-shaped streams with a ValueError at
+    trace time instead of replaying them wrong.
+
+    ``A_max`` defaults to the trace's actual max arrivals-per-slot so no
+    arrival is ever silently dropped; passing a smaller ``A_max`` is an
+    error rather than a truncation.
+    """
+    from ..quantize import RES, to_grid
+
+    arrival_slots = np.asarray(arrival_slots)
+    order = np.argsort(arrival_slots, kind="stable")
+    arrival_slots = arrival_slots[order].astype(np.int64)
+    g = to_grid(np.asarray(sizes)[order])
+    durations = np.maximum(np.asarray(durations)[order].astype(np.int64), 1)
+    if horizon is None:
+        if len(arrival_slots) == 0:
+            raise ValueError(
+                "empty trace and no horizon: pass horizon= explicitly")
+        horizon = int(arrival_slots[-1]) + 1
+
+    in_h = (arrival_slots >= 0) & (arrival_slots < horizon)
+    counts = np.bincount(arrival_slots[in_h], minlength=horizon)[:horizon]
+    peak = int(counts.max()) if len(counts) else 0
+    if A_max is None:
+        A_max = max(peak, 1)
+    elif peak > A_max:
+        raise ValueError(
+            f"trace has {peak} arrivals in one slot > A_max={A_max}; "
+            "raise A_max (streams never drop trace jobs silently)")
+
+    size_arr = np.zeros((horizon, A_max), dtype=np.float32)
+    dur_arr = np.ones((horizon, A_max), dtype=np.int32)
+    slot = arrival_slots[in_h]
+    # lane[i] = index of job i within its slot (jobs are slot-sorted)
+    lane = np.arange(len(slot)) - np.repeat(np.cumsum(counts) - counts,
+                                            counts)
+    size_arr[slot, lane] = (g[in_h].astype(np.float64) / RES).astype(np.float32)
+    dur_arr[slot, lane] = durations[in_h]
+    return SchedStreams(jnp.asarray(counts, jnp.int32),
+                        jnp.asarray(size_arr),
+                        jnp.asarray(dur_arr))
+
+
+def resolve_work_steps(work_steps: int | None, A_max: int) -> int:
+    """Default bound of the per-slot placement work lists: enough for every
+    landed arrival plus a burst of refills; the ``truncated`` counter
+    reports the (rare) slots where this was short."""
+    return work_steps if work_steps is not None else A_max + 4
+
+
+#: Back-compat alias (PR 1 private name, imported by kernels/bfjs).
+_resolve_work_steps = resolve_work_steps

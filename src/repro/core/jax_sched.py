@@ -1,523 +1,23 @@
-"""Accelerator-resident scheduling engine (pure JAX).
+"""Back-compat shim: the PR 1 ``jax_sched`` monolith is now the
+``repro.core.engine`` package (streams / ops / bfjs / vqs / api).
 
-The event-driven numpy engine (simulator.py) is exact and fast on hosts; this
-module re-expresses the paper's BF-J/S scheduler as a fixed-shape, branch-free
-program so it can run ON the accelerator:
-
-  * Monte-Carlo stability studies: ``vmap`` over seeds/workloads gives
-    thousands of independent cluster simulations per device;
-  * on-device admission control: the serving engine calls
-    ``best_fit_place`` / ``max_weight_config_jax`` inside jitted control
-    loops (optionally via the Pallas kernel in kernels/best_fit).
-
-Three engines share one trajectory semantics (see DESIGN.md):
-
-  * ``engine="reference"`` — the original nested ``fori/while/cond`` program,
-    kept verbatim as the behavioural oracle;
-  * ``engine="scan"``      — the branch-free rewrite: all randomness is
-    hoisted into pre-generated streams (``make_streams``) and the per-slot
-    BF-S/BF-J placement nest becomes a single bounded work-list scan of
-    masked vectorized selects (no ``cond``, no data-dependent trip counts),
-    so ``vmap`` over seeds vectorizes cleanly;
-  * ``engine="pallas"``    — the fused slot-step kernel in ``kernels/bfjs``
-    (residuals, departure times and the queue stay resident in VMEM; the
-    Monte-Carlo ensemble is the kernel grid).
-
-"scan" and "reference" produce bit-identical trajectories on the shared
-random streams as long as the bounded work list does not saturate; the
-``truncated`` field of the result counts slots where the bound cut BF-S
-short (0 == exact).
-
-Fixed-capacity redesign (documented deviation from the unbounded queueing
-model): the queue is a ``Qcap``-slot buffer and arrivals beyond ``A_max`` per
-slot are dropped AND COUNTED (``dropped`` in the result) — runs whose drop
-count is nonzero must be treated as saturated, not stable.
+Every public name of the old module is re-exported here with identical
+behaviour — ``run_bfjs`` / ``monte_carlo_bfjs`` keep their exact PR 1
+signatures and trajectories (asserted by tests/test_jax_sched.py) — plus
+the policy-generic entry points (``run_policy`` et al.) so existing
+importers migrate incrementally.  New code should import from
+``repro.core.engine`` directly.
 """
 from __future__ import annotations
 
-import functools
-from typing import Callable, NamedTuple
-
-import jax
-import jax.numpy as jnp
-
-from .partition import k_red
-from .quantize import RES
-
-INF_SLOT = jnp.iinfo(jnp.int32).max
-
-
-# ---------------------------------------------------------------------------
-# primitive scheduling ops (shared with the serving engine)
-# ---------------------------------------------------------------------------
-def best_fit_server(residuals: jax.Array, size: jax.Array) -> jax.Array:
-    """Tightest feasible server for one job: argmin residual among residuals
-    >= size; returns -1 if none fits. O(L) vectorized."""
-    feasible = residuals >= size
-    masked = jnp.where(feasible, residuals, jnp.inf)
-    idx = jnp.argmin(masked)
-    return jnp.where(feasible.any(), idx, -1)
-
-
-def best_fit_place(residuals: jax.Array, sizes: jax.Array) -> tuple[jax.Array, jax.Array]:
-    """Sequentially Best-Fit place a batch of jobs (pure-jnp reference used by
-    the serving engine; kernels/best_fit provides the Pallas TPU version).
-
-    Returns (assignment (N,) int32 with -1 = rejected, new residuals)."""
-
-    def body(resid, size):
-        srv = best_fit_server(resid, size)
-        ok = srv >= 0
-        resid = jnp.where(ok, resid.at[srv].add(-size), resid)
-        return resid, jnp.where(ok, srv, -1)
-
-    new_resid, assign = jax.lax.scan(body, residuals, sizes)
-    return assign.astype(jnp.int32), new_resid
-
-
-def largest_fitting_job(queue: jax.Array, cap: jax.Array) -> jax.Array:
-    """Index of the largest queued job with size <= cap (BF-S step);
-    -1 if none. Zero entries mean empty queue slots."""
-    fits = (queue > 0) & (queue <= cap)
-    masked = jnp.where(fits, queue, -jnp.inf)
-    idx = jnp.argmax(masked)
-    return jnp.where(fits.any(), idx, -1)
-
-
-def max_weight_config_jax(J: int, vq_sizes: jax.Array) -> tuple[jax.Array, jax.Array]:
-    """argmax_{k in K_RED^{(J)}} <k, Q>  (paper Eq. 8), jit/vmap-friendly."""
-    confs = jnp.asarray(k_red(J))
-    w = confs @ vq_sizes.astype(jnp.int32)
-    i = jnp.argmax(w)
-    return i, confs[i]
-
-
-def vq_type_of(sizes: jax.Array, J: int) -> jax.Array:
-    """Partition-I type of float sizes in (0,1] (vectorized, jittable).
-
-    Sizes are quantized to the ``quantize.RES`` grid and classified with
-    exact integer comparisons, so the result agrees with
-    ``PartitionI.type_of_scalar`` on every grid point (including exact
-    powers of two and the ``size <= 2^-J`` tail).  The float log2 only
-    seeds the halving count; integer fix-ups make the boundaries exact.
-    """
-    g = jnp.maximum(jnp.round(sizes * RES), 1.0).astype(jnp.int32)
-    res = jnp.int32(RES)
-    m = jnp.clip(jnp.floor(jnp.log2(RES / jnp.maximum(g, 1).astype(jnp.float32))),
-                 0, J - 1).astype(jnp.int32)
-    # size in (2^-(m+1), 2^-m]  <=>  g in (RES>>(m+1), RES>>m]; fix the float
-    # estimate with exact integer shifts (error is at most one halving).
-    m = jnp.where((m < J - 1) & (g <= jnp.right_shift(res, m + 1)), m + 1, m)
-    m = jnp.where((m > 0) & (g > jnp.right_shift(res, m)), m - 1, m)
-    upper = jnp.right_shift(res, m)
-    even = 3 * g > 2 * upper
-    t = jnp.where(even, 2 * m, 2 * m + 1)
-    return jnp.where(g <= (RES >> J), 2 * J - 1, t).astype(jnp.int32)
-
-
-# ---------------------------------------------------------------------------
-# BF-J/S cluster simulation
-# ---------------------------------------------------------------------------
-class BFJSState(NamedTuple):
-    srv: jax.Array       # (L, K) float32 job sizes in servers (0 = empty slot)
-    dep: jax.Array       # (L, K) int32 departure slot (INF_SLOT when empty)
-    queue: jax.Array     # (Qcap,) float32 queued sizes (0 = empty)
-    dropped: jax.Array   # () int32 arrivals dropped by the fixed-size buffer
-    key: jax.Array
-
-
-class BFJSResult(NamedTuple):
-    queue_len: jax.Array   # (T,) int32
-    occupancy: jax.Array   # (T,) float32 total occupied capacity
-    departed: jax.Array    # (T,) int32 cumulative departures
-    dropped: jax.Array     # () int32
-    truncated: jax.Array   # () int32 slots where the bounded BF-S work list
-    #                        saturated (0 == bit-exact vs. the reference)
-
-
-class BFJSStreams(NamedTuple):
-    """Pre-generated per-slot randomness (the hoisted RNG of the engines).
-
-    Generated with exactly the key chain of the reference engine, so engines
-    consuming these streams reproduce ``engine="reference"`` bit-for-bit.
-    """
-    n: jax.Array       # (T,) int32 arrival counts, already clipped to A_max
-    sizes: jax.Array   # (T, A_max) float32 job sizes in (0, 1]
-    durs: jax.Array    # (T, L*K + A_max) int32 geometric service durations
-
-
-def _geometric(key: jax.Array, mu: float, shape=()) -> jax.Array:
-    u = jax.random.uniform(key, shape, minval=1e-7, maxval=1.0)
-    return jnp.maximum(jnp.ceil(jnp.log(u) / jnp.log1p(-mu)), 1.0).astype(jnp.int32)
-
-
-@functools.partial(
-    jax.jit, static_argnames=("sampler", "L", "K", "A_max", "horizon"))
-def make_streams(key: jax.Array, lam: float, mu: float,
-                 sampler: Callable[[jax.Array, int], jax.Array],
-                 L: int, K: int, A_max: int, horizon: int) -> BFJSStreams:
-    """Pre-generate all per-slot randomness for one cluster simulation.
-
-    Replicates the reference engine's per-slot key chain
-    (``key, _, k_n, k_sizes, k_dur = split(key, 5)``) and draws each slot's
-    Poisson count / sizes / durations under ``vmap`` — bitwise identical to
-    the in-loop draws, but issued as three large batched RNG calls instead
-    of ``5 * horizon`` tiny ones.
-    """
-
-    def chain(k, _):
-        ks = jax.random.split(k, 5)
-        return ks[0], ks[1:]
-
-    _, ks = jax.lax.scan(chain, key, None, length=horizon)
-    n = jnp.minimum(jax.vmap(lambda k: jax.random.poisson(k, lam))(ks[:, 1]),
-                    A_max).astype(jnp.int32)
-    sizes = jax.vmap(lambda k: sampler(k, A_max))(ks[:, 2])
-    durs = jax.vmap(lambda k: _geometric(k, mu, (L * K + A_max,)))(ks[:, 3])
-    return BFJSStreams(n, sizes, durs)
-
-
-def _resolve_work_steps(work_steps: int | None, A_max: int) -> int:
-    # one step per placement/arrival attempt: enough for every landed arrival
-    # plus a burst of BF-S refills; the `truncated` counter reports the
-    # (rare) slots where this was short.
-    return work_steps if work_steps is not None else A_max + 4
-
-
-@functools.partial(
-    jax.jit, static_argnames=("L", "K", "Qcap", "A_max", "work_steps"))
-def run_bfjs_streams(streams: BFJSStreams,
-                     L: int, K: int, Qcap: int, A_max: int,
-                     work_steps: int | None = None) -> BFJSResult:
-    """Branch-free BF-J/S slot engine over pre-generated streams.
-
-    One ``lax.scan`` over slots; inside each slot the BF-S refill and BF-J
-    placement passes are a single bounded work list (unrolled: ``work_steps``
-    masked-select placement steps, no ``cond``, no data-dependent trip
-    counts).  Each step dynamically dispatches: while any freed server still
-    has a fitting queued job it performs the BF-S placement for the
-    lowest-index such server, otherwise it attempts the next landed arrival
-    (BF-J).  Jobs only ever leave the queue and placements only shrink
-    residuals, so an exhausted server never un-exhausts and BF-S placements
-    genuinely all precede BF-J attempts — the step order is identical to the
-    reference engine's per-server ``while`` nest, but no step is wasted on a
-    failed probe.
-
-    Residuals are maintained incrementally yet exactly: a placement
-    recomputes the target server's residual as ``1 - row.sum()`` over the
-    slot-ordered row, the same expression the reference engine evaluates, so
-    trajectories bit-match (as long as ``truncated`` stays 0).
-    """
-    horizon = streams.n.shape[0]
-    W = _resolve_work_steps(work_steps, A_max)
-    D = L * K + A_max
-    a_iota = jnp.arange(A_max)
-    l_iota = jnp.arange(L)
-    q_iota = jnp.arange(Qcap)
-    k_iota = jnp.arange(K)
-
-    def slot_step(state, inp):
-        srv, dep, queue, t, q_cnt, dropped, trunc = state
-        n, sizes, durs = inp
-
-        # 1. departures
-        leaving = dep == t
-        freed = leaving.any(axis=1)
-        n_dep = leaving.sum()
-        srv = jnp.where(leaving, 0.0, srv)
-        dep = jnp.where(leaving, INF_SLOT, dep)
-        resid = 1.0 - srv.sum(axis=1)
-
-        # 2. arrivals -> first empty queue slots (record where they landed)
-        n_empty = jnp.cumsum((queue == 0.0).astype(jnp.int32))
-        pos_a = jnp.searchsorted(n_empty, a_iota + 1)  # a-th empty index
-        landed = (a_iota < n) & (pos_a < Qcap)
-        n_landed = landed.sum()
-        dropped = dropped + n - n_landed
-        q_cnt = q_cnt + n_landed
-        queue = queue.at[jnp.where(landed, pos_a, Qcap)].set(
-            jnp.where(landed, sizes, 0.0), mode="drop")
-        new_pos = jnp.where(landed, pos_a, -1)
-        # landed arrival indices, compacted ascending (for BF-J dispatch),
-        # with their duration-stream entries pre-gathered.
-        rank = jnp.cumsum(landed.astype(jnp.int32)) - 1
-        landed_list = jnp.full((A_max,), A_max - 1, jnp.int32).at[
-            jnp.where(landed, rank, A_max)].set(a_iota.astype(jnp.int32),
-                                                mode="drop")
-        pos_list = new_pos[landed_list]
-        dur_list = durs[L * K + landed_list]
-
-        # 3+4. BF-S then BF-J as one bounded, unrolled placement work list.
-        # Index extraction uses min-of-masked-iota instead of argmax/argmin
-        # (same first-index tie-breaks, but plain min/max reductions
-        # vectorize on CPU where XLA's variadic arg-reduce does not).
-        def work(carry):
-            srv, dep, queue, resid, q_cnt, dc, a_ptr = carry
-            occupied = queue > 0.0
-            qmin = jnp.min(jnp.where(occupied, queue, jnp.inf))
-            fits = freed & (resid >= qmin)
-
-            # BF-S candidate: largest fitting job for the lowest-index
-            # freed server that still has one.
-            cur = jnp.min(jnp.where(fits, l_iota, L))
-            any_bfs = cur < L
-            cur = jnp.minimum(cur, L - 1)
-            fitq = jnp.where(occupied & (queue <= resid[cur]), queue,
-                             -jnp.inf)
-            size_bfs = jnp.max(fitq)
-            j_bfs = jnp.min(jnp.where(fitq == size_bfs, q_iota, Qcap))
-            j_bfs = jnp.minimum(j_bfs, Qcap - 1)
-
-            # BF-J candidate: next landed arrival (one attempt each, in
-            # arrival order, even if BF-S already consumed its job).
-            is_bfj = (~any_bfs) & (a_ptr < n_landed)
-            ap = jnp.minimum(a_ptr, A_max - 1)
-            pos = pos_list[ap]
-            size_bfj = queue[jnp.maximum(pos, 0)]
-            masked_r = jnp.where(resid >= size_bfj, resid, jnp.inf)
-            best_r = jnp.min(masked_r)
-            s_bfj = jnp.min(jnp.where(masked_r == best_r, l_iota, L))
-            s_bfj = jnp.minimum(s_bfj, L - 1)
-            ok_bfj = is_bfj & (best_r < jnp.inf) & (size_bfj > 0)
-
-            do = any_bfs | ok_bfj
-            tgt = jnp.where(any_bfs, cur, s_bfj)
-            qidx = jnp.where(do, jnp.where(any_bfs, j_bfs,
-                                           jnp.maximum(pos, 0)), Qcap)
-            size = jnp.where(any_bfs, size_bfs, size_bfj)
-            dur = jnp.where(any_bfs, durs[jnp.minimum(dc, D - 1)],
-                            dur_list[ap])
-
-            row = srv[tgt]
-            slot = jnp.min(jnp.where(row == 0.0, k_iota, K))
-            slot = jnp.where(slot == K, 0, slot)  # row full: reference
-            slot_w = jnp.where(do, slot, K)       # engine overwrites slot 0
-            new_row = row.at[slot_w].set(size, mode="drop")
-            srv = srv.at[tgt].set(new_row)
-            dep = dep.at[tgt].set(
-                dep[tgt].at[slot_w].set(t + dur, mode="drop"))
-            queue = queue.at[qidx].set(0.0, mode="drop")
-            resid = resid.at[jnp.where(do, tgt, L)].set(
-                1.0 - new_row.sum(), mode="drop")
-            q_cnt = q_cnt - do.astype(jnp.int32)
-            dc = dc + any_bfs.astype(jnp.int32)
-            a_ptr = a_ptr + is_bfj.astype(jnp.int32)
-            return srv, dep, queue, resid, q_cnt, dc, a_ptr
-
-        zero = jnp.zeros((), jnp.int32)
-        carry = (srv, dep, queue, resid, q_cnt, zero, zero)
-        for _ in range(W):
-            carry = work(carry)
-        srv, dep, queue, resid, q_cnt, _, a_ptr = carry
-
-        # saturation check: a placement the reference engine would have made
-        # is still possible => the bounded list diverged this slot.  (Missed
-        # BF-J attempts whose job was already consumed, or whose job fits no
-        # server, are no-ops in the reference engine too — not divergence.)
-        qmin = jnp.min(jnp.where(queue > 0.0, queue, jnp.inf))
-        pend_bfs = (freed & (resid >= qmin)).any()
-        left = (a_iota >= a_ptr) & (a_iota < n_landed)
-        sz_left = queue[jnp.maximum(pos_list, 0)]
-        pend_bfj = (left & (sz_left > 0) & (sz_left <= resid.max())).any()
-        trunc = trunc + (pend_bfs | pend_bfj).astype(jnp.int32)
-
-        out = (q_cnt, srv.sum(), n_dep.astype(jnp.int32))
-        return (srv, dep, queue, t + 1, q_cnt, dropped, trunc), out
-
-    state0 = (
-        jnp.zeros((L, K), jnp.float32),
-        jnp.full((L, K), INF_SLOT, jnp.int32),
-        jnp.zeros(Qcap, jnp.float32),
-        jnp.zeros((), jnp.int32),
-        jnp.zeros((), jnp.int32),
-        jnp.zeros((), jnp.int32),
-        jnp.zeros((), jnp.int32),
-    )
-    state, (qlen, occ, ndep) = jax.lax.scan(
-        slot_step, state0, (streams.n, streams.sizes, streams.durs))
-    return BFJSResult(qlen, occ, jnp.cumsum(ndep), state[5], state[6])
-
-
-@functools.partial(
-    jax.jit,
-    static_argnames=("sampler", "L", "K", "Qcap", "A_max", "horizon"),
+from .engine import (  # noqa: F401
+    BFJSResult, BFJSState, BFJSStreams, ENGINES, INF_SLOT, PolicyResult,
+    PolicySpec, SchedStreams, available_policies, best_fit_place,
+    best_fit_server, get_policy, k_red_jnp, largest_fitting_job,
+    make_streams, max_weight_config_jax, monte_carlo_bfjs,
+    monte_carlo_policy, monte_carlo_vqs, register_policy,
+    resolve_work_steps, run_bfjs, run_bfjs_streams, run_bfjs_trace,
+    run_policy, run_policy_streams, run_vqs, run_vqs_streams, run_vqs_trace,
+    streams_from_trace, vq_type_of, vq_type_of_grid,
 )
-def _run_bfjs_reference(key: jax.Array,
-                        lam: float,
-                        mu: float,
-                        sampler: Callable[[jax.Array, int], jax.Array],
-                        L: int = 8,
-                        K: int = 16,
-                        Qcap: int = 512,
-                        A_max: int = 8,
-                        horizon: int = 10_000) -> BFJSResult:
-    """The original nested fori/while/cond slot engine (behavioural oracle).
-
-    Serial and branch-heavy — kept verbatim for equivalence testing and as
-    the baseline of benchmarks/sched_micro.py.
-    """
-
-    def place_in_server(srv_i, dep_i, size, dslot):
-        slot = jnp.argmax(srv_i == 0.0)
-        return srv_i.at[slot].set(size), dep_i.at[slot].set(dslot)
-
-    def slot_step(state: BFJSState, t: jax.Array):
-        srv, dep, queue, dropped, key = state
-        key, k_arr, k_n, k_sizes, k_dur = jax.random.split(key, 5)
-
-        # 1. departures
-        leaving = dep == t
-        freed = leaving.any(axis=1)
-        n_dep = leaving.sum()
-        srv = jnp.where(leaving, 0.0, srv)
-        dep = jnp.where(leaving, INF_SLOT, dep)
-
-        # 2. arrivals -> queue (record the slots they landed in)
-        n = jnp.minimum(jax.random.poisson(k_n, lam), A_max)
-        sizes = sampler(k_sizes, A_max)
-        valid = jnp.arange(A_max) < n
-        empty_slots = jnp.nonzero(queue == 0.0, size=A_max, fill_value=Qcap)[0]
-        landed = valid & (empty_slots < Qcap)
-        dropped = dropped + (valid & ~landed).sum()
-        queue = queue.at[jnp.where(landed, empty_slots, Qcap)].set(
-            jnp.where(landed, sizes, 0.0), mode="drop")
-        new_pos = jnp.where(landed, empty_slots, -1)
-
-        durs = _geometric(k_dur, mu, (L * K + A_max,))
-        dcounter = 0
-
-        # 3. BF-S over freed servers: fill each with the largest fitting job.
-        def bfs_server(i, carry):
-            srv, dep, queue, dc = carry
-
-            def try_place(carry):
-                srv, dep, queue, dc, go = carry
-                resid = 1.0 - srv[i].sum()
-                j = largest_fitting_job(queue, resid)
-                ok = j >= 0
-
-                def do(args):
-                    srv, dep, queue, dc = args
-                    size = queue[j]
-                    s_i, d_i = place_in_server(srv[i], dep[i], size,
-                                               t + durs[dc])
-                    return (srv.at[i].set(s_i), dep.at[i].set(d_i),
-                            queue.at[j].set(0.0), dc + 1)
-
-                srv, dep, queue, dc = jax.lax.cond(
-                    ok, do, lambda a: a, (srv, dep, queue, dc))
-                return srv, dep, queue, dc, ok
-
-            def fill(carry):
-                srv, dep, queue, dc = carry
-                out = jax.lax.while_loop(
-                    lambda c: c[4],
-                    try_place,
-                    (srv, dep, queue, dc, True))
-                return out[:4]
-
-            return jax.lax.cond(freed[i], fill, lambda c: c,
-                                (srv, dep, queue, dc))
-
-        srv, dep, queue, dcounter = jax.lax.fori_loop(
-            0, L, bfs_server, (srv, dep, queue, dcounter))
-
-        # 4. BF-J over the new arrivals still in queue.
-        def bfj_job(a, carry):
-            srv, dep, queue, dc = carry
-            pos = new_pos[a]
-            size = jnp.where(pos >= 0, queue[jnp.maximum(pos, 0)], 0.0)
-            resid = 1.0 - srv.sum(axis=1)
-            s_idx = best_fit_server(resid, jnp.where(size > 0, size, jnp.inf))
-            ok = (size > 0) & (s_idx >= 0)
-
-            def do(args):
-                srv, dep, queue, dc = args
-                s_i, d_i = place_in_server(srv[s_idx], dep[s_idx], size,
-                                           t + durs[L * K + a])
-                return (srv.at[s_idx].set(s_i), dep.at[s_idx].set(d_i),
-                        queue.at[pos].set(0.0), dc)
-
-            return jax.lax.cond(ok, do, lambda x: x, (srv, dep, queue, dc))
-
-        srv, dep, queue, dcounter = jax.lax.fori_loop(
-            0, A_max, bfj_job, (srv, dep, queue, dcounter))
-
-        out = (
-            (queue > 0).sum().astype(jnp.int32),
-            srv.sum(),
-            n_dep.astype(jnp.int32),
-        )
-        return BFJSState(srv, dep, queue, dropped, key), out
-
-    state0 = BFJSState(
-        srv=jnp.zeros((L, K), jnp.float32),
-        dep=jnp.full((L, K), INF_SLOT, jnp.int32),
-        queue=jnp.zeros(Qcap, jnp.float32),
-        dropped=jnp.zeros((), jnp.int32),
-        key=key,
-    )
-    state, (qlen, occ, ndep) = jax.lax.scan(
-        slot_step, state0, jnp.arange(horizon, dtype=jnp.int32))
-    return BFJSResult(qlen, occ, jnp.cumsum(ndep), state.dropped,
-                      jnp.zeros((), jnp.int32))
-
-
-def run_bfjs(key: jax.Array,
-             lam: float,
-             mu: float,
-             sampler: Callable[[jax.Array, int], jax.Array],
-             L: int = 8,
-             K: int = 16,
-             Qcap: int = 512,
-             A_max: int = 8,
-             horizon: int = 10_000,
-             engine: str = "scan",
-             work_steps: int | None = None) -> BFJSResult:
-    """Simulate BF-J/S on L unit-capacity servers for `horizon` slots.
-
-    sampler(key, n) -> (n,) float sizes in (0,1].  vmap over `key` for
-    Monte-Carlo ensembles (or use monte_carlo_bfjs, which also knows the
-    gridded Pallas engine).
-
-    engine: "scan" (branch-free, default) | "reference" (original nested
-    loop oracle) | "pallas" (fused kernels/bfjs slot-step kernel).
-    """
-    if engine == "reference":
-        return _run_bfjs_reference(key, lam, mu, sampler, L=L, K=K, Qcap=Qcap,
-                                   A_max=A_max, horizon=horizon)
-    streams = make_streams(key, lam, mu, sampler, L=L, K=K, A_max=A_max,
-                           horizon=horizon)
-    if engine == "scan":
-        return run_bfjs_streams(streams, L=L, K=K, Qcap=Qcap, A_max=A_max,
-                                work_steps=work_steps)
-    if engine == "pallas":
-        from repro.kernels.bfjs.ops import bfjs_simulate
-        batched = jax.tree.map(lambda x: x[None], streams)
-        res = bfjs_simulate(batched, L=L, K=K, Qcap=Qcap, A_max=A_max,
-                            work_steps=work_steps)
-        return jax.tree.map(lambda x: x[0], res)
-    raise ValueError(f"unknown engine {engine!r}")
-
-
-def monte_carlo_bfjs(keys: jax.Array, lam: float, mu: float, sampler,
-                     engine: str = "scan", work_steps: int | None = None,
-                     L: int = 8, K: int = 16, Qcap: int = 512,
-                     A_max: int = 8, horizon: int = 10_000) -> BFJSResult:
-    """One simulated cluster per key.
-
-    "scan"/"reference" vmap run_bfjs over the keys; "pallas" pre-generates
-    every ensemble member's streams and runs the fused kernel with the
-    ensemble as the kernel grid (one independent cluster per program
-    instance)."""
-    if engine == "pallas":
-        from repro.kernels.bfjs.ops import bfjs_simulate
-        streams = jax.vmap(
-            lambda k: make_streams(k, lam, mu, sampler, L=L, K=K,
-                                   A_max=A_max, horizon=horizon))(keys)
-        return bfjs_simulate(streams, L=L, K=K, Qcap=Qcap, A_max=A_max,
-                             work_steps=work_steps)
-    fn = functools.partial(run_bfjs, lam=lam, mu=mu, sampler=sampler,
-                           engine=engine, work_steps=work_steps, L=L, K=K,
-                           Qcap=Qcap, A_max=A_max, horizon=horizon)
-    return jax.vmap(fn)(keys)
+from .engine.streams import _geometric, _resolve_work_steps  # noqa: F401

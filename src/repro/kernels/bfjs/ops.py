@@ -1,34 +1,30 @@
 """Public entry point: Pallas on TPU, interpret-mode elsewhere."""
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 
-from repro.core.jax_sched import (BFJSResult, BFJSStreams,
-                                  _resolve_work_steps)
+from repro.core.engine.streams import PolicyResult, SchedStreams, \
+    resolve_work_steps
+from repro.kernels.common import interpret_default
 
 from .bfjs import bfjs_pallas
 from .ref import bfjs_ref
 
 
-def _interpret() -> bool:
-    return jax.default_backend() != "tpu"
-
-
-def bfjs_simulate(streams: BFJSStreams, L: int, K: int, Qcap: int,
+def bfjs_simulate(streams: SchedStreams, L: int, K: int, Qcap: int,
                   A_max: int, work_steps: int | None = None,
                   window: int | None = None,
-                  use_pallas: bool = True) -> BFJSResult:
+                  use_pallas: bool = True) -> PolicyResult:
     """Fused-kernel Monte-Carlo BF-J/S: one grid cell per ensemble member.
 
     streams holds (G, ...)-shaped pre-generated randomness
-    (jax_sched.make_streams vmapped over the ensemble keys)."""
-    work_steps = _resolve_work_steps(work_steps, A_max)
+    (engine.streams.make_streams vmapped over the ensemble keys)."""
+    work_steps = resolve_work_steps(work_steps, A_max)
     if not use_pallas:
         return bfjs_ref(streams.n, streams.sizes, streams.durs, L=L, K=K,
                         Qcap=Qcap, A_max=A_max, work_steps=work_steps)
     qlen, occ, ndep, dropped, trunc = bfjs_pallas(
         streams.n, streams.sizes, streams.durs, L=L, K=K, Qcap=Qcap,
         A_max=A_max, work_steps=work_steps, window=window,
-        interpret=_interpret())
-    return BFJSResult(qlen, occ, jnp.cumsum(ndep, axis=1), dropped, trunc)
+        interpret=interpret_default())
+    return PolicyResult(qlen, occ, jnp.cumsum(ndep, axis=1), dropped, trunc)

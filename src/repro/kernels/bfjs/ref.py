@@ -1,6 +1,6 @@
 """Pure-jnp oracle for the fused BF-J/S slot-step kernel.
 
-The oracle IS the production pure-JAX engine (jax_sched.run_bfjs_streams)
+The oracle IS the production pure-JAX engine (engine.bfjs.run_bfjs_streams)
 vmapped over the ensemble dimension — the kernel must reproduce its
 trajectories exactly (and that engine is itself equivalence-tested against
 the original nested-loop reference engine)."""
@@ -8,16 +8,17 @@ from __future__ import annotations
 
 import jax
 
-from repro.core.jax_sched import BFJSResult, BFJSStreams, run_bfjs_streams
+from repro.core.engine.bfjs import run_bfjs_streams
+from repro.core.engine.streams import PolicyResult, SchedStreams
 
 
 def bfjs_ref(n, sizes, durs, L: int, K: int, Qcap: int, A_max: int,
-             work_steps: int | None = None) -> BFJSResult:
+             work_steps: int | None = None) -> PolicyResult:
     """n (G, T) int32, sizes (G, T, A_max) f32, durs (G, T, L*K+A_max)
-    int32 -> BFJSResult with (G, ...)-shaped fields."""
+    int32 -> PolicyResult with (G, ...)-shaped fields."""
 
     def one(n1, s1, d1):
-        return run_bfjs_streams(BFJSStreams(n1, s1, d1), L=L, K=K,
+        return run_bfjs_streams(SchedStreams(n1, s1, d1), L=L, K=K,
                                 Qcap=Qcap, A_max=A_max,
                                 work_steps=work_steps)
 

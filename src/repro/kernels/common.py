@@ -1,0 +1,19 @@
+"""Shared plumbing for the per-policy scheduler kernels.
+
+Every scheduler kernel family (``kernels/bfjs``, ``kernels/vqs``, ...)
+follows the same layout — ``<policy>.py`` holds the fused Pallas kernel,
+``ref.py`` the pure-jnp oracle (the production scan engine vmapped over the
+ensemble), ``ops.py`` the public entry point that dispatches Pallas on TPU
+and interpret mode elsewhere.  The pieces they share live here.
+"""
+from __future__ import annotations
+
+import jax
+
+#: f32 infeasibility sentinel used by the float kernels (~f32 max).
+BIG = 3.4e38
+
+
+def interpret_default() -> bool:
+    """Pallas interpret mode everywhere but real TPUs (correctness-grade)."""
+    return jax.default_backend() != "tpu"

@@ -1,0 +1,33 @@
+"""Public entry point: Pallas on TPU, interpret-mode elsewhere."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.engine.streams import PolicyResult, SchedStreams, \
+    resolve_work_steps
+from repro.core.engine.vqs import _default_drain
+from repro.kernels.common import interpret_default
+
+from .ref import vqs_ref
+from .vqs import vqs_pallas
+
+
+def vqs_simulate(streams: SchedStreams, J: int, L: int, K: int, Qcap: int,
+                 A_max: int, work_steps: int | None = None,
+                 drain: int | None = None, window: int | None = None,
+                 use_pallas: bool = True) -> PolicyResult:
+    """Fused-kernel Monte-Carlo VQS: one grid cell per ensemble member.
+
+    streams holds (G, ...)-shaped pre-generated randomness
+    (engine.streams.make_streams vmapped over the ensemble keys)."""
+    work_steps = resolve_work_steps(work_steps, A_max)
+    drain = drain if drain is not None else _default_drain(K, J)
+    if not use_pallas:
+        return vqs_ref(streams.n, streams.sizes, streams.durs, J=J, L=L,
+                       K=K, Qcap=Qcap, A_max=A_max, work_steps=work_steps,
+                       drain=drain)
+    qlen, occ, ndep, dropped, trunc = vqs_pallas(
+        streams.n, streams.sizes, streams.durs, J=J, L=L, K=K, Qcap=Qcap,
+        A_max=A_max, work_steps=work_steps, drain=drain, window=window,
+        interpret=interpret_default())
+    return PolicyResult(qlen, occ, jnp.cumsum(ndep, axis=1), dropped, trunc)

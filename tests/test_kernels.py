@@ -112,6 +112,61 @@ def test_bfjs_kernel_overload_drops_match():
 
 
 # ---------------------------------------------------------------------------
+# fused VQS slot-step kernel
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("G,J,L,K,Qcap,A_max,T,window", [
+    (2, 3, 4, 8, 48, 5, 120, None),
+    (2, 2, 3, 6, 32, 4, 180, 60),   # windowed grid: state persists in VMEM
+    (1, 4, 6, 16, 64, 6, 90, 30),
+])
+def test_vqs_kernel_matches_scan_engine(G, J, L, K, Qcap, A_max, T, window):
+    """Fused VQS kernel (interpret) == branch-free scan engine, slot by
+    slot, on shared pre-generated streams — rings, configurations and
+    subscriptions all evolve identically."""
+    from repro.kernels.vqs.ops import vqs_simulate
+    from repro.kernels.vqs.ref import vqs_ref
+    from repro.core.engine import SchedStreams
+
+    st = _bfjs_streams(G, L, K, A_max, T, lam=1.0, mu=0.03, seed=9)
+    ref = vqs_ref(st.n, st.sizes, st.durs, J=J, L=L, K=K, Qcap=Qcap,
+                  A_max=A_max)
+    pal = vqs_simulate(SchedStreams(st.n, st.sizes, st.durs), J=J, L=L,
+                       K=K, Qcap=Qcap, A_max=A_max, window=window)
+    np.testing.assert_array_equal(np.asarray(pal.queue_len),
+                                  np.asarray(ref.queue_len))
+    np.testing.assert_array_equal(np.asarray(pal.departed),
+                                  np.asarray(ref.departed))
+    np.testing.assert_array_equal(np.asarray(pal.occupancy),
+                                  np.asarray(ref.occupancy))
+    np.testing.assert_array_equal(np.asarray(pal.dropped),
+                                  np.asarray(ref.dropped))
+    np.testing.assert_array_equal(np.asarray(pal.truncated),
+                                  np.asarray(ref.truncated))
+
+
+def test_vqs_kernel_overload_counters_match():
+    """Saturated regime: ring drops and lazy-finish truncation counters stay
+    in lockstep between kernel and scan engine."""
+    from repro.kernels.vqs.ops import vqs_simulate
+    from repro.kernels.vqs.ref import vqs_ref
+    from repro.core.engine import SchedStreams
+
+    G, J, L, K, Qcap, A_max, T = 2, 3, 3, 8, 8, 6, 150
+    st = _bfjs_streams(G, L, K, A_max, T, lam=4.0, mu=0.01, seed=4)
+    ref = vqs_ref(st.n, st.sizes, st.durs, J=J, L=L, K=K, Qcap=Qcap,
+                  A_max=A_max, work_steps=2)
+    pal = vqs_simulate(SchedStreams(st.n, st.sizes, st.durs), J=J, L=L,
+                       K=K, Qcap=Qcap, A_max=A_max, work_steps=2, window=50)
+    assert int(np.asarray(ref.dropped).sum()) > 0
+    np.testing.assert_array_equal(np.asarray(pal.dropped),
+                                  np.asarray(ref.dropped))
+    np.testing.assert_array_equal(np.asarray(pal.truncated),
+                                  np.asarray(ref.truncated))
+    np.testing.assert_array_equal(np.asarray(pal.queue_len),
+                                  np.asarray(ref.queue_len))
+
+
+# ---------------------------------------------------------------------------
 # flash attention
 # ---------------------------------------------------------------------------
 @pytest.mark.parametrize("S,hd,dtype,window", [

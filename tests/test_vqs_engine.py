@@ -1,0 +1,222 @@
+"""VQS accelerator engines: bit-parity with the event-driven numpy engine
+(trace streams), scan-vs-reference equivalence (random streams), counted
+truncation, and the policy-generic run_policy API (incl. the PR 1
+run_bfjs back-compat contract)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core import VQS, PartitionI, RES, simulate_trace
+from repro.core.engine import (available_policies, make_streams,
+                               monte_carlo_policy, run_bfjs, run_policy,
+                               run_policy_streams, run_vqs_streams,
+                               streams_from_trace, vq_type_of_grid)
+from repro.core.engine.vqs import _run_vqs_reference_streams
+
+
+# ---------------------------------------------------------------------------
+# exact integer-grid classification
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("J", [2, 3, 6, 10])
+def test_vq_type_of_grid_matches_partition_exactly(J):
+    part = PartitionI(J)
+    g = np.arange(1, RES + 1, dtype=np.int64)
+    expect = part.type_of(g)
+    got = np.asarray(vq_type_of_grid(jnp.asarray(g, jnp.int32), J))
+    np.testing.assert_array_equal(got, expect)
+
+
+# ---------------------------------------------------------------------------
+# trace-driven parity with the event-driven engine (the oracle bridge)
+# ---------------------------------------------------------------------------
+def _random_trace(seed, T, N, grid=64):
+    rng = np.random.default_rng(seed)
+    slots = np.sort(rng.integers(0, T, N))
+    sizes = rng.integers(1, grid, N) / float(grid)
+    durs = rng.integers(1, 60, N)
+    return slots, sizes, durs
+
+
+@pytest.mark.parametrize("engine", ["reference", "scan"])
+@pytest.mark.parametrize("seed,J,L", [(0, 3, 5), (7, 5, 12), (3, 2, 1)])
+def test_vqs_engine_bitmatches_numpy_on_trace(engine, seed, J, L):
+    """run_policy_streams(policy="vqs") == simulate_trace(VQS(J)) queue
+    trajectory, slot for slot, on grid-sized jobs."""
+    T, N = 400, 60 * L
+    slots, sizes, durs = _random_trace(seed, T, N)
+    ref = simulate_trace(VQS(J=J), L=L, arrival_slots=slots, sizes=sizes,
+                         durations=durs, horizon=T, seed=0, record_every=1)
+    st = streams_from_trace(slots, sizes, durs, horizon=T)
+    res = run_policy_streams(st, policy="vqs", engine=engine, J=J, L=L,
+                             K=1 << J, Qcap=2048,
+                             A_max=int(st.sizes.shape[1]))
+    assert int(res.truncated) == 0
+    assert int(res.dropped) == 0
+    np.testing.assert_array_equal(np.asarray(res.queue_len),
+                                  ref.queue_lens)
+    assert int(res.departed[-1]) == ref.departed
+
+
+# ---------------------------------------------------------------------------
+# scan vs reference on random streams (all regimes share the RNG hoist)
+# ---------------------------------------------------------------------------
+def _uniform_sampler(lo, hi):
+    def sampler(key, n):
+        return jax.random.uniform(key, (n,), minval=lo, maxval=hi)
+    return sampler
+
+
+@pytest.mark.parametrize("seed,lam,J", [(0, 0.3, 2), (1, 1.0, 4),
+                                        (2, 2.5, 5)])
+def test_vqs_scan_bitmatches_reference_engine(seed, lam, J):
+    sampler = _uniform_sampler(0.05, 0.9)
+    kw = dict(L=6, K=40, Qcap=512, A_max=6)
+    st = make_streams(jax.random.PRNGKey(seed), lam, 0.02, sampler,
+                      L=6, K=40, A_max=6, horizon=600)
+    ref = _run_vqs_reference_streams(st, J=J, **kw)
+    scn = run_vqs_streams(st, J=J, **kw)
+    assert int(scn.truncated) == 0
+    for field in ("queue_len", "occupancy", "departed", "dropped"):
+        np.testing.assert_array_equal(np.asarray(getattr(scn, field)),
+                                      np.asarray(getattr(ref, field)))
+
+
+def test_vqs_scan_empty_membership_not_resurrected():
+    """Regression: a server that was empty at slot start, placed jobs over
+    several work-list steps and was then advanced past must NOT be re-added
+    to the _empty set from the stale slot-start mask — that spurious
+    membership made later slots visit (and pack) servers the reference
+    engine leaves alone, diverging with truncated == 0."""
+    sampler = _uniform_sampler(0.05, 0.95)
+    st = make_streams(jax.random.PRNGKey(8), 3.5, 0.05, sampler,
+                      L=5, K=32, A_max=6, horizon=400)
+    kw = dict(J=4, L=5, K=32, Qcap=256, A_max=6)
+    ref = _run_vqs_reference_streams(st, **kw)
+    scn = run_vqs_streams(st, **kw)
+    assert int(scn.truncated) == 0
+    np.testing.assert_array_equal(np.asarray(scn.queue_len),
+                                  np.asarray(ref.queue_len))
+    np.testing.assert_array_equal(np.asarray(scn.departed),
+                                  np.asarray(ref.departed))
+
+
+def test_vqs_truncation_is_counted_not_silent():
+    """A too-small work-step bound must be reported via `truncated` while
+    an ample bound reproduces the numpy engine exactly — including the
+    departure count, so laziness is visible, never silent."""
+    seed, J, L, T = 5, 3, 8, 300
+    slots, sizes, durs = _random_trace(seed, T, 14 * L, grid=32)
+    st = streams_from_trace(slots, sizes, durs, horizon=T)
+    A = int(st.sizes.shape[1])
+    kw = dict(J=J, L=L, K=1 << J, Qcap=1024, A_max=A)
+    tiny = run_vqs_streams(st, work_steps=1, **kw)
+    ample = run_vqs_streams(st, **kw)
+    assert int(tiny.truncated) > 0
+    assert int(ample.truncated) == 0
+    ref = simulate_trace(VQS(J=J), L=L, arrival_slots=slots, sizes=sizes,
+                         durations=durs, horizon=T, seed=0, record_every=1)
+    np.testing.assert_array_equal(np.asarray(ample.queue_len),
+                                  ref.queue_lens)
+
+
+def test_vqs_server_slot_overflow_is_counted():
+    """K below the per-server packing bound: the placement the unbounded
+    model would make is flagged in `truncated` instead of silently
+    reshaping the trajectory."""
+    # every job is the smallest type: a whole server packs 2**J of them
+    J, L, T = 3, 1, 120
+    slots = np.arange(40) % T
+    sizes = np.full(40, 1.0 / (1 << J))
+    durs = np.full(40, 100)
+    st = streams_from_trace(np.sort(slots), sizes, durs, horizon=T)
+    res = run_vqs_streams(st, J=J, L=L, K=2, Qcap=64,
+                          A_max=int(st.sizes.shape[1]))
+    assert int(res.truncated) > 0
+
+
+# ---------------------------------------------------------------------------
+# policy-generic API + PR 1 back-compat contract
+# ---------------------------------------------------------------------------
+def test_bfjs_rejects_trace_streams():
+    """Trace streams carry per-arrival durations only; the BF-J/S engines
+    need the sequential-draw region, so replaying a trace through
+    policy="bfjs" must fail loudly instead of running with detached
+    durations."""
+    slots, sizes, durs = _random_trace(1, 50, 30)
+    st = streams_from_trace(slots, sizes, durs, horizon=50)
+    with pytest.raises(ValueError, match="sequential-draw region"):
+        run_policy_streams(st, policy="bfjs", L=4, K=6, Qcap=32,
+                           A_max=int(st.sizes.shape[1]))
+
+
+def test_policy_registry_contents():
+    assert "bfjs" in available_policies()
+    assert "vqs" in available_policies()
+    with pytest.raises(ValueError, match="unknown policy"):
+        run_policy(jax.random.PRNGKey(0), 1.0, 0.01,
+                   _uniform_sampler(0.1, 0.5), policy="nope")
+    with pytest.raises(ValueError, match="unknown engine"):
+        run_policy(jax.random.PRNGKey(0), 1.0, 0.01,
+                   _uniform_sampler(0.1, 0.5), engine="nope")
+
+
+def test_run_policy_bfjs_equals_run_bfjs_shim():
+    """The refactor kept the PR 1 contract: the `repro.core.jax_sched`
+    shim's run_bfjs and the registry's policy="bfjs" produce identical
+    trajectories on the same key, for both engines."""
+    from repro.core.jax_sched import run_bfjs as shim_run_bfjs
+    from repro.core.jax_sched import BFJSStreams, SchedStreams
+
+    assert BFJSStreams is SchedStreams  # alias, not a copy
+    sampler = _uniform_sampler(0.1, 0.6)
+    kw = dict(L=4, K=6, Qcap=48, A_max=5, horizon=200)
+    key = jax.random.PRNGKey(11)
+    for engine in ("reference", "scan"):
+        old = shim_run_bfjs(key, 1.0, 0.02, sampler, engine=engine, **kw)
+        new = run_policy(key, 1.0, 0.02, sampler, policy="bfjs",
+                         engine=engine, **kw)
+        for field in ("queue_len", "occupancy", "departed", "dropped",
+                      "truncated"):
+            np.testing.assert_array_equal(
+                np.asarray(getattr(old, field)),
+                np.asarray(getattr(new, field)))
+    assert run_bfjs is shim_run_bfjs
+
+
+def test_run_policy_vqs_all_engines_agree():
+    """reference == scan == pallas(interpret) member-for-member through the
+    public entry points."""
+    sampler = _uniform_sampler(0.08, 0.7)
+    kw = dict(J=3, L=4, K=8, Qcap=64, A_max=5, horizon=120)
+    key = jax.random.PRNGKey(2)
+    ref = run_policy(key, 1.0, 0.03, sampler, policy="vqs",
+                     engine="reference", **kw)
+    scn = run_policy(key, 1.0, 0.03, sampler, policy="vqs",
+                     engine="scan", **kw)
+    pal = run_policy(key, 1.0, 0.03, sampler, policy="vqs",
+                     engine="pallas", **kw)
+    assert int(scn.truncated) == 0
+    for res in (scn, pal):
+        np.testing.assert_array_equal(np.asarray(res.queue_len),
+                                      np.asarray(ref.queue_len))
+        np.testing.assert_array_equal(np.asarray(res.departed),
+                                      np.asarray(ref.departed))
+
+
+def test_monte_carlo_policy_vqs_vmaps():
+    keys = jax.random.split(jax.random.PRNGKey(3), 3)
+    res = monte_carlo_policy(keys, 0.8, 0.02, _uniform_sampler(0.1, 0.6),
+                             policy="vqs", engine="scan", J=2, L=3, K=8,
+                             Qcap=64, A_max=4, horizon=100)
+    assert res.queue_len.shape == (3, 100)
+    assert res.truncated.shape == (3,)
+
+
+def test_estimate_capacity_policy_knob():
+    from repro.serving.engine import estimate_capacity
+    out = estimate_capacity(3, 0.5, 50.0, ensembles=2, horizon=300,
+                            policy="vqs", J=2, K=8, Qcap=64, A_max=4)
+    assert out["policy"] == "vqs"
+    assert out["slots_simulated"] == 600
+    assert out["truncated"] == 0
