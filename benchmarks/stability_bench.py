@@ -1,9 +1,15 @@
 """Theorem-1 machinery: rho-bar*/rho-lower* convergence table + the
 Proposition-2 2/3-tightness example, as a benchmark artifact — plus the
 Monte-Carlo ensemble throughput of the accelerator engines (BF-J/S and
-VQS, via the policy-generic run_policy stack) at a stability-study
-operating point (the workload the jax engines exist for)."""
+VQS, via the policy-generic Workload/run_policy stack) at a
+stability-study operating point (the workload the jax engines exist for).
+
+An engine comparison whose scan member reports ``truncated != 0`` is a
+bogus speedup (the trajectories diverged); main() FAILS LOUDLY (nonzero
+exit) instead of silently recording it."""
 from __future__ import annotations
+
+import sys
 
 import numpy as np
 
@@ -12,7 +18,11 @@ from common import SMOKE, row, timed, timed_best
 import jax
 
 from repro.core import Uniform, rho_bounds, rho_star_discrete
-from repro.core.engine import monte_carlo_policy
+from repro.core.engine import Workload, monte_carlo_policy
+
+#: (row name, truncated count) per scan-engine comparison; checked by
+#: main() — any nonzero count aborts the benchmark run with exit code 1.
+_TRUNCATIONS: list[tuple[str, int]] = []
 
 
 def _mc_ensemble_throughput(policy: str, Qcap: int | None = None,
@@ -31,10 +41,11 @@ def _mc_ensemble_throughput(policy: str, Qcap: int | None = None,
         return jax.random.uniform(key, (n,), minval=0.1, maxval=0.6)
 
     keys = jax.random.split(jax.random.PRNGKey(7), G)
+    wl = Workload(lam=lam, mu=mu, sampler=sampler)
     us_ref = None
     for engine in ("reference", "scan"):
         def fn():
-            r = monte_carlo_policy(keys, lam, mu, sampler, policy=policy,
+            r = monte_carlo_policy(wl, keys, policy=policy,
                                    engine=engine, **policy_kw, **kw)
             r.queue_len.block_until_ready()
             return r
@@ -43,13 +54,15 @@ def _mc_ensemble_throughput(policy: str, Qcap: int | None = None,
         meta = (f"ensembles={G};ensemble_slots_per_sec="
                 f"{G * T / (us / 1e6):.0f};tail_queue={tail_q:.2f};"
                 f"dropped={int(np.asarray(res.dropped).sum())}")
+        suffix = "" if policy == "bfjs" else f"_{policy}"
+        name = f"stability/mc_ensemble{suffix}_{engine}"
         if engine == "reference":
             us_ref = us
         else:
-            meta += (f";speedup_vs_ref={us_ref / us:.2f}x"
-                     f";trunc={int(np.asarray(res.truncated).sum())}")
-        suffix = "" if policy == "bfjs" else f"_{policy}"
-        row(f"stability/mc_ensemble{suffix}_{engine}", us / (G * T), meta)
+            trunc = int(np.asarray(res.truncated).sum())
+            meta += f";speedup_vs_ref={us_ref / us:.2f}x;trunc={trunc}"
+            _TRUNCATIONS.append((name, trunc))
+        row(name, us / (G * T), meta)
 
 
 def main():
@@ -71,6 +84,13 @@ def main():
     _mc_ensemble_throughput("bfjs")
     # VQS: sizes in U(0.1, 0.6) live above 2^-3, K=16 >= 2^3 packing bound
     _mc_ensemble_throughput("vqs", Qcap=2048, J=3)
+
+    bad = [(name, t) for name, t in _TRUNCATIONS if t != 0]
+    if bad:
+        print("ERROR: engine comparisons reported truncation (trajectories "
+              f"diverged from the reference): {bad}", file=sys.stderr,
+              flush=True)
+        raise SystemExit(1)
 
 
 if __name__ == "__main__":

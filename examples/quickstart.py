@@ -1,8 +1,14 @@
 """Quickstart: the paper's schedulers in 60 seconds.
 
-Simulates a 5-server cluster under uniform random job sizes at 92% of the
-theoretical maximum load and compares all five schedulers, then reproduces
-the paper's headline stability result (Fig. 3a).
+Three stops:
+
+  1. the event-driven numpy engine: a 5-server cluster under uniform random
+     job sizes at 92% of the theoretical maximum load, all schedulers;
+  2. the accelerator engine stack through the canonical ``Workload`` API —
+     the same cluster as a typed workload spec dispatched to the
+     policy-generic engines (``run_policy`` / ``monte_carlo_policy``);
+  3. the paper's headline 2/3-tightness result (Fig. 3a), plus a taste of
+     the Section-VIII multi-resource extension (``policy="bfjs-mr"``).
 
     PYTHONPATH=src python examples/quickstart.py
 """
@@ -11,14 +17,16 @@ import sys
 
 sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 
+import jax
 import numpy as np
 
 from repro.core import (BFJS, Discrete, FIFOFF, ServiceModel, Uniform, VQS,
                         VQSBF, rho_star_discrete, rho_star_upper_bound,
                         simulate)
+from repro.core.engine import Workload, monte_carlo_policy, run_policy
 
 # ---------------------------------------------------------------------------
-# 1. A cluster under continuous (infinite-type) job sizes
+# 1. A cluster under continuous (infinite-type) job sizes (numpy engine)
 # ---------------------------------------------------------------------------
 L, mu = 5, 0.01
 dist = Uniform(0.1, 0.9)                      # job sizes: unknown to policies
@@ -35,7 +43,34 @@ for policy in (BFJS(), VQSBF(J=4), VQS(J=4), FIFOFF()):
     print(f"  {res.summary()}")
 
 # ---------------------------------------------------------------------------
-# 2. Paper Fig. 3a: the 2/3 bound of VQS is real
+# 2. The same cluster on the accelerator stack: one Workload, any policy
+# ---------------------------------------------------------------------------
+# A Workload is the typed spec every engine entry point dispatches on:
+# arrival rate, service rate, size sampler, resource count, capacity.
+workload = Workload(
+    lam=lam, mu=mu,
+    sampler=lambda key, n: jax.random.uniform(key, (n,), minval=0.1,
+                                              maxval=0.9))
+
+print("\naccelerator engines (scan), same workload:")
+for policy in ("bfjs", "vqs"):
+    res = run_policy(workload, policy=policy, engine="scan",
+                     key=jax.random.PRNGKey(0), L=L, K=16, Qcap=512,
+                     A_max=8, horizon=20_000,
+                     **({"J": 4} if policy == "vqs" else {}))
+    tail_q = float(np.asarray(res.queue_len)[-5_000:].mean())
+    print(f"  {policy:8s}: tail queue {tail_q:7.1f}  "
+          f"(dropped={int(res.dropped)}, truncated={int(res.truncated)})")
+
+# Monte-Carlo ensembles are one call: a batch of keys, one cluster each.
+keys = jax.random.split(jax.random.PRNGKey(1), 8)
+mc = monte_carlo_policy(workload, keys, policy="bfjs", engine="scan",
+                        L=L, K=16, Qcap=512, A_max=8, horizon=5_000)
+print(f"  bfjs x{len(keys)} ensembles: mean tail queue "
+      f"{float(np.asarray(mc.queue_len)[:, -1_000:].mean()):.1f}")
+
+# ---------------------------------------------------------------------------
+# 3a. Paper Fig. 3a: the 2/3 bound of VQS is real
 # ---------------------------------------------------------------------------
 print("\nFig 3a: sizes {0.4, 0.6}, rate 0.014 > (2/3) * 0.02:")
 d2 = Discrete([0.4, 0.6], [0.5, 0.5])
@@ -47,3 +82,18 @@ for policy in (BFJS(), VQS(J=2), VQSBF(J=2)):
                    horizon=150_000, seed=1)
     verdict = "UNSTABLE" if res.mean_queue_tail > 30 else "stable"
     print(f"  {policy.name:8s}: tail queue {res.mean_queue_tail:7.1f}  [{verdict}]")
+
+# ---------------------------------------------------------------------------
+# 3b. Section VIII: vector requirements — (cpu, mem) without max-collapse
+# ---------------------------------------------------------------------------
+mr = Workload(
+    lam=0.3, mu=0.05, num_resources=2, capacity=(1.0, 1.0),
+    sampler=lambda key, n: jax.random.uniform(key, (n, 2), minval=0.05,
+                                              maxval=0.5))
+res = run_policy(mr, policy="bfjs-mr", engine="scan",
+                 key=jax.random.PRNGKey(2), L=4, K=16, Qcap=256, A_max=6,
+                 horizon=5_000, work_steps=24)
+occ = np.asarray(res.occupancy)[-1_000:].mean(axis=0)
+print(f"\nbfjs-mr (Tetris alignment, R=2): tail queue "
+      f"{float(np.asarray(res.queue_len)[-1_000:].mean()):.1f}, "
+      f"per-resource occupancy cpu={occ[0]:.2f} mem={occ[1]:.2f} servers")

@@ -13,6 +13,13 @@ traffic scalings through
     driven by real-workload arrivals.  ``--check`` re-runs the numpy VQS
     engine and asserts the two queue trajectories are bit-identical.
 
+The same trace also replays UNCOLLAPSED: ``streams_from_trace(trace,
+collapse=False)`` keeps the (cpu, mem) vectors and drives
+``run_policy_streams(policy="bfjs-mr")`` — the Section-VIII Tetris
+alignment engine, no max-collapse preprocessing.  ``--check`` verifies a
+prefix of the trajectory bit-matches the event-driven MultiResourceBFJS
+oracle.
+
     PYTHONPATH=src python examples/trace_replay.py [--tasks 50000] [--check]
 """
 import argparse
@@ -66,6 +73,38 @@ def replay_vqs_jax(scaled, sizes, L, horizon, check=False):
     return row
 
 
+def replay_mr_jax(scaled, L, horizon, check=False):
+    """Replay the UNCOLLAPSED (cpu, mem) trace through the bfjs-mr scan
+    engine; --check bit-matches a prefix against the event-driven oracle."""
+    import jax
+
+    streams = streams_from_trace(scaled, collapse=False, horizon=horizon)
+    res = run_policy_streams(streams, policy="bfjs-mr", engine="scan",
+                             L=L, K=64, Qcap=1 << 13, work_steps=64)
+    qlen = np.asarray(res.queue_len)
+    occ = np.asarray(res.occupancy)
+    row = {
+        "mean_Q": float(qlen.mean()),
+        "util": float(occ.mean()) / L,   # mean over resources and slots
+        "done": int(res.departed[-1]),
+        "trunc": int(res.truncated),
+        "dropped": int(res.dropped),
+    }
+    if check:
+        assert row["trunc"] == 0 and row["dropped"] == 0, row
+        h = min(horizon, 3_000)
+        prefix = jax.tree.map(lambda x: x[:h], streams)
+        scan = run_policy_streams(prefix, policy="bfjs-mr", engine="scan",
+                                  L=L, K=64, Qcap=1 << 13, work_steps=64)
+        ref = run_policy_streams(prefix, policy="bfjs-mr",
+                                 engine="reference", L=L)
+        assert (np.asarray(scan.queue_len) == np.asarray(ref.queue_len)).all() \
+            and (np.asarray(scan.occupancy) == np.asarray(ref.occupancy)).all(), \
+            "bfjs-mr scan diverged from the MultiResourceBFJS oracle"
+        row["bitmatch"] = 1
+    return row
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--tasks", type=int, default=50_000)
@@ -99,6 +138,11 @@ def main():
         extra = " bitmatch=1" if args.check else \
             f" trunc={row['trunc']} dropped={row['dropped']}"
         print(f"{scaling:>8} {'vqs[scan]':>12} {row['mean_Q']:>9.1f} "
+              f"{row['util']:>6.3f} {row['done']:>8}{extra}")
+        row = replay_mr_jax(scaled, args.servers, h, check=args.check)
+        extra = " bitmatch=1(prefix)" if args.check else \
+            f" trunc={row['trunc']} dropped={row['dropped']}"
+        print(f"{scaling:>8} {'mr[scan]':>12} {row['mean_Q']:>9.1f} "
               f"{row['util']:>6.3f} {row['done']:>8}{extra}")
 
 

@@ -17,7 +17,8 @@ from .simulator import SimResult, simulate, simulate_trace
 from .stability import (enumerate_configs, maximal_configs, rho_bounds,
                         rho_star_discrete, rho_star_upper_bound)
 from .trace import (Trace, collapse_resources, empirical_size_stats,
-                    scale_arrivals, synthesize_google_like_trace)
+                    load_trace_csv, scale_arrivals,
+                    synthesize_google_like_trace)
 from .vqs import VQS
 from .vqs_bf import VQSBF
 
@@ -30,6 +31,6 @@ __all__ = [
     "VirtualQueues", "SimResult", "simulate", "simulate_trace",
     "enumerate_configs", "maximal_configs", "rho_bounds",
     "rho_star_discrete", "rho_star_upper_bound", "Trace",
-    "collapse_resources", "empirical_size_stats", "scale_arrivals",
-    "synthesize_google_like_trace", "VQS", "VQSBF",
+    "collapse_resources", "empirical_size_stats", "load_trace_csv",
+    "scale_arrivals", "synthesize_google_like_trace", "VQS", "VQSBF",
 ]

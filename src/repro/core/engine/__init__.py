@@ -4,39 +4,52 @@ The event-driven numpy engine (core/simulator.py) is exact and fast on
 hosts; this package re-expresses the paper's schedulers as fixed-shape,
 branch-free programs that run ON the accelerator:
 
+  * ``workload`` — the first-class :class:`Workload` spec (arrival rate,
+    size sampler, service rate, ``num_resources``, per-resource capacity)
+    every entry point dispatches on;
   * ``streams``  — pre-generated randomness (``SchedStreams``), from PRNG
-    keys (``make_streams``) or workload traces (``streams_from_trace``);
+    keys (``make_streams``) or workload traces (``streams_from_trace``),
+    with ``(T, A_max, R)`` requirement vectors when R > 1;
   * ``ops``      — jit/vmap-friendly primitive ops (Best-Fit placement,
-    max-weight configurations, exact partition-I classification);
-  * ``bfjs``     — the BF-J/S engines (PR 1);
+    max-weight configurations, exact partition-I classification, the f32
+    Tetris alignment score);
+  * ``bfjs``     — the single-resource BF-J/S engines (PR 1);
   * ``vqs``      — the VQS engines (paper Section V);
-  * ``api``      — the policy registry behind ``run_policy(...)``.
+  * ``bfjs_mr``  — the multi-resource Tetris-alignment BF-J/S engines
+    (paper Section VIII), ``policy="bfjs-mr"``;
+  * ``api``      — the policy registry behind ``run_policy(workload, ...)``
+    (the PR 2 loose-argument forms remain as deprecation shims).
 
 Engine contract (DESIGN.md §1): per policy, ``"scan"`` bit-matches
 ``"reference"`` while ``truncated == 0``, and ``"pallas"`` bit-matches
-``"scan"`` — asserted by tests/test_jax_sched.py, tests/test_vqs_engine.py
-and tests/test_kernels.py.
+``"scan"`` — asserted by tests/test_jax_sched.py, tests/test_vqs_engine.py,
+tests/test_mr_engine.py and tests/test_kernels.py.
 """
 from .api import (ENGINES, PolicySpec, available_policies, get_policy,
                   monte_carlo_policy, register_policy, run_policy,
                   run_policy_streams)
 from .bfjs import (BFJSResult, BFJSState, monte_carlo_bfjs, run_bfjs,
                    run_bfjs_streams, run_bfjs_trace)
-from .ops import (best_fit_place, best_fit_server, k_red_jnp,
-                  largest_fitting_job, max_weight_config_jax, vq_type_of,
-                  vq_type_of_grid)
+from .bfjs_mr import (monte_carlo_bfjs_mr_workload, run_bfjs_mr_streams,
+                      run_bfjs_mr_trace, run_bfjs_mr_workload)
+from .ops import (alignment_scores_jnp, best_fit_place, best_fit_server,
+                  k_red_jnp, largest_fitting_job, max_weight_config_jax,
+                  vq_type_of, vq_type_of_grid)
 from .streams import (BFJSStreams, INF_SLOT, PolicyResult, SchedStreams,
                       make_streams, resolve_work_steps, streams_from_trace)
 from .vqs import (monte_carlo_vqs, run_vqs, run_vqs_streams, run_vqs_trace)
+from .workload import Workload
 
 __all__ = [
     "ENGINES", "PolicySpec", "available_policies", "get_policy",
     "monte_carlo_policy", "register_policy", "run_policy",
     "run_policy_streams", "BFJSResult", "BFJSState", "monte_carlo_bfjs",
-    "run_bfjs", "run_bfjs_streams", "run_bfjs_trace", "best_fit_place",
-    "best_fit_server", "k_red_jnp", "largest_fitting_job",
+    "run_bfjs", "run_bfjs_streams", "run_bfjs_trace",
+    "monte_carlo_bfjs_mr_workload", "run_bfjs_mr_streams",
+    "run_bfjs_mr_trace", "run_bfjs_mr_workload", "alignment_scores_jnp",
+    "best_fit_place", "best_fit_server", "k_red_jnp", "largest_fitting_job",
     "max_weight_config_jax", "vq_type_of", "vq_type_of_grid", "BFJSStreams",
     "INF_SLOT", "PolicyResult", "SchedStreams", "make_streams",
     "resolve_work_steps", "streams_from_trace", "monte_carlo_vqs",
-    "run_vqs", "run_vqs_streams", "run_vqs_trace",
+    "run_vqs", "run_vqs_streams", "run_vqs_trace", "Workload",
 ]

@@ -1,43 +1,66 @@
-"""Policy-generic entry points for the accelerator engines.
+"""Workload-first policy-generic entry points for the accelerator engines.
 
 One registry maps policy names to their engine implementations so every
 caller — serving capacity planner, benchmarks, examples, later sharded /
-multi-resource fleets — dispatches through the same three calls:
+admission-control fleets — dispatches through the same three calls, all
+keyed on a first-class :class:`~repro.core.engine.workload.Workload`:
 
-    run_policy(key, lam, mu, sampler, policy="vqs", engine="scan", ...)
-    run_policy_streams(streams, policy="vqs", engine="scan", ...)   # traces
-    monte_carlo_policy(keys, ..., policy="bfjs", engine="pallas")
+    wl = Workload(lam=1.5, mu=0.01, sampler=sampler)        # R = 1
+    run_policy(wl, policy="vqs", engine="scan", key=key, L=8, ...)
+    run_policy_streams(streams, policy="vqs", engine="scan", ...)  # traces
+    monte_carlo_policy(wl, keys, policy="bfjs", engine="pallas", ...)
 
 ``engine`` is always one of ``"reference" | "scan" | "pallas"`` with the
-same contract as PR 1's BF-J/S stack: "scan" bit-matches "reference" while
+same contract as the BF-J/S stack: "scan" bit-matches "reference" while
 ``truncated == 0``, and "pallas" bit-matches "scan".  Policy-specific
 configuration (``J`` for VQS, ``work_steps`` bounds, ...) passes through as
 keyword arguments; unknown keys are rejected by the policy's runner.
 
+Multi-resource workloads (``num_resources=R > 1``, per-resource
+``capacity``) route to ``policy="bfjs-mr"`` — the Tetris-alignment BF-J/S
+of paper Section VIII; the single-resource policies reject them loudly.
+
+The PR 2 loose-argument signatures, ``run_policy(key, lam, mu, sampler,
+...)`` / ``monte_carlo_policy(keys, lam, mu, sampler, ...)``, remain as
+deprecation shims that build a ``Workload`` internally — bit-match
+regression tested (``tests/test_workload_api.py``), so existing callers
+keep their exact trajectories while migrating.
+
 New policies register with ``register_policy`` — the hook the roadmap's
-multi-resource and admission-control engines plug into.
+sharded-ensemble and admission-control engines plug into.
 """
 from __future__ import annotations
 
+import warnings
 from dataclasses import dataclass
 from typing import Callable
 
 import jax
 
-from .bfjs import monte_carlo_bfjs, run_bfjs, run_bfjs_trace
+from .bfjs import (monte_carlo_bfjs_workload, run_bfjs_trace,
+                   run_bfjs_workload)
+from .bfjs_mr import (monte_carlo_bfjs_mr_workload, run_bfjs_mr_trace,
+                      run_bfjs_mr_workload)
 from .streams import PolicyResult, SchedStreams
-from .vqs import monte_carlo_vqs, run_vqs, run_vqs_trace
+from .vqs import monte_carlo_vqs_workload, run_vqs_trace, run_vqs_workload
+from .workload import Workload
 
 ENGINES = ("reference", "scan", "pallas")
 
 
 @dataclass(frozen=True)
 class PolicySpec:
-    """Engine implementations of one scheduling policy."""
+    """Engine implementations of one scheduling policy.
+
+    ``run``/``monte_carlo`` are workload-first: they take a ``Workload``
+    and the PRNG key(s); ``run_streams`` takes pre-materialized
+    ``SchedStreams`` (randomness already drawn or trace-built), so it needs
+    no workload.
+    """
     name: str
-    run: Callable[..., PolicyResult]          # (key, lam, mu, sampler, ...)
+    run: Callable[..., PolicyResult]          # (workload, key, ...)
     run_streams: Callable[..., PolicyResult]  # (streams, ...)
-    monte_carlo: Callable[..., PolicyResult]  # (keys, lam, mu, sampler, ...)
+    monte_carlo: Callable[..., PolicyResult]  # (workload, keys, ...)
 
 
 _POLICIES: dict[str, PolicySpec] = {}
@@ -71,46 +94,110 @@ def _check_engine(engine: str) -> None:
 
 register_policy(PolicySpec(
     name="bfjs",
-    run=run_bfjs,
+    run=run_bfjs_workload,
     run_streams=run_bfjs_trace,
-    monte_carlo=monte_carlo_bfjs,
+    monte_carlo=monte_carlo_bfjs_workload,
 ))
 
 register_policy(PolicySpec(
     name="vqs",
-    run=run_vqs,
+    run=run_vqs_workload,
     run_streams=run_vqs_trace,
-    monte_carlo=monte_carlo_vqs,
+    monte_carlo=monte_carlo_vqs_workload,
+))
+
+register_policy(PolicySpec(
+    name="bfjs-mr",
+    run=run_bfjs_mr_workload,
+    run_streams=run_bfjs_mr_trace,
+    monte_carlo=monte_carlo_bfjs_mr_workload,
 ))
 
 
-def run_policy(key: jax.Array, lam: float, mu: float, sampler,
-               *, policy: str = "bfjs", engine: str = "scan",
+def _legacy_workload(fn_name: str, legacy: tuple) -> Workload:
+    """Build a Workload from the deprecated (lam, mu, sampler) tail."""
+    if len(legacy) != 3:
+        raise TypeError(
+            f"{fn_name} takes a Workload (new API) or the deprecated "
+            f"(key, lam, mu, sampler) form; got {1 + len(legacy)} "
+            "positional arguments")
+    lam, mu, sampler = legacy
+    warnings.warn(
+        f"{fn_name}(key, lam, mu, sampler, ...) is deprecated; pass a "
+        f"Workload: {fn_name}(Workload(lam=lam, mu=mu, sampler=sampler), "
+        "key=key, ...)", DeprecationWarning, stacklevel=3)
+    return Workload(lam=float(lam), mu=float(mu), sampler=sampler)
+
+
+def run_policy(workload, *legacy, policy: str = "bfjs",
+               engine: str = "scan", key: jax.Array | None = None,
                **config) -> PolicyResult:
     """Simulate one cluster under ``policy`` with the chosen ``engine``.
 
-    ``sampler(key, n) -> (n,)`` float job sizes in (0, 1].  ``config``
-    passes through to the policy runner (``L``, ``K``, ``Qcap``, ``A_max``,
+    ``workload`` is a :class:`Workload` (arrival rate, size sampler,
+    service rate, resource count, per-resource capacity); ``key`` — passed
+    positionally (``run_policy(wl, key, ...)``, mirroring
+    ``monte_carlo_policy``) or as ``key=`` — seeds the pre-generated
+    randomness streams (default ``PRNGKey(0)``).  ``config`` passes
+    through to the policy runner (``L``, ``K``, ``Qcap``, ``A_max``,
     ``horizon``, ``work_steps``; ``J``/``drain`` for VQS).
+
+    The deprecated positional form ``run_policy(key, lam, mu, sampler,
+    ...)`` builds the same Workload internally (bit-identical results) and
+    emits a ``DeprecationWarning``.
     """
     _check_engine(engine)
-    return get_policy(policy).run(key, lam, mu, sampler, engine=engine,
-                                  **config)
+    if not isinstance(workload, Workload):
+        legacy_key = workload
+        workload = _legacy_workload("run_policy", legacy)
+        return get_policy(policy).run(workload, legacy_key, engine=engine,
+                                      **config)
+    if legacy:
+        if len(legacy) != 1 or key is not None:
+            raise TypeError(
+                "run_policy(workload, key, ...) takes exactly one extra "
+                "positional argument (the PRNG key)")
+        key = legacy[0]
+    if key is None:
+        key = jax.random.PRNGKey(0)
+    return get_policy(policy).run(workload, key, engine=engine, **config)
 
 
 def run_policy_streams(streams: SchedStreams, *, policy: str = "bfjs",
                        engine: str = "scan", **config) -> PolicyResult:
     """Replay explicit streams (e.g. ``streams_from_trace``) through a
-    policy engine — the trace-driven path of the stack."""
+    policy engine — the trace-driven path of the stack.  Multi-resource
+    streams (``(T, A_max, R)`` sizes, e.g. ``streams_from_trace(trace,
+    collapse=False)``) replay through ``policy="bfjs-mr"``."""
     _check_engine(engine)
     return get_policy(policy).run_streams(streams, engine=engine, **config)
 
 
-def monte_carlo_policy(keys: jax.Array, lam: float, mu: float, sampler,
-                       *, policy: str = "bfjs", engine: str = "scan",
+def monte_carlo_policy(workload, *legacy, policy: str = "bfjs",
+                       engine: str = "scan",
+                       keys: jax.Array | None = None,
                        **config) -> PolicyResult:
     """One simulated cluster per key; "pallas" runs the ensemble as the
-    kernel grid, other engines vmap."""
+    kernel grid, other engines vmap (the host-side oracles loop).
+
+    New API: ``monte_carlo_policy(workload, keys, policy=..., ...)`` (or
+    ``keys=`` by keyword).  The deprecated ``monte_carlo_policy(keys, lam,
+    mu, sampler, ...)`` form is a bit-match shim.
+    """
     _check_engine(engine)
-    return get_policy(policy).monte_carlo(keys, lam, mu, sampler,
-                                          engine=engine, **config)
+    if not isinstance(workload, Workload):
+        legacy_keys = workload
+        workload = _legacy_workload("monte_carlo_policy", legacy)
+        return get_policy(policy).monte_carlo(workload, legacy_keys,
+                                              engine=engine, **config)
+    if legacy:
+        if len(legacy) != 1 or keys is not None:
+            raise TypeError(
+                "monte_carlo_policy(workload, keys, ...) takes exactly one "
+                "extra positional argument (the key batch)")
+        keys = legacy[0]
+    if keys is None:
+        raise TypeError("monte_carlo_policy needs keys= (one PRNG key per "
+                        "ensemble member)")
+    return get_policy(policy).monte_carlo(workload, keys, engine=engine,
+                                          **config)

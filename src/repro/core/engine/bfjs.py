@@ -395,6 +395,27 @@ def run_bfjs_trace(streams: SchedStreams, *, L: int, K: int, Qcap: int,
     raise ValueError(f"unknown engine {engine!r}")
 
 
+def run_bfjs_workload(workload, key: jax.Array, *, engine: str = "scan",
+                      **config) -> PolicyResult:
+    """Workload-first adapter: the registry entry behind
+    ``run_policy(workload, policy="bfjs", ...)``.  BF-J/S is
+    single-resource with unit servers; vector workloads are rejected
+    loudly (use ``policy="bfjs-mr"``)."""
+    workload.require_scalar("bfjs")
+    workload.check_sampler()
+    return run_bfjs(key, workload.lam, workload.mu, workload.sampler,
+                    engine=engine, **config)
+
+
+def monte_carlo_bfjs_workload(workload, keys: jax.Array, *,
+                              engine: str = "scan", **config) -> PolicyResult:
+    """Workload-first adapter for ``monte_carlo_policy(policy="bfjs")``."""
+    workload.require_scalar("bfjs")
+    workload.check_sampler()
+    return monte_carlo_bfjs(keys, workload.lam, workload.mu,
+                            workload.sampler, engine=engine, **config)
+
+
 def monte_carlo_bfjs(keys: jax.Array, lam: float, mu: float, sampler,
                      engine: str = "scan", work_steps: int | None = None,
                      L: int = 8, K: int = 16, Qcap: int = 512,

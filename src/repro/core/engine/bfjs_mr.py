@@ -1,0 +1,376 @@
+"""Multi-resource BF-J/S engines (paper Section VIII) on the scan stack.
+
+Ports ``core/multi_resource.py``'s Tetris-alignment BF-J/S — the paper's
+named future-work extension, cf. Yao et al. (*Throughput-Optimal
+Multiresource-Job Scheduling*) — onto the fixed-shape accelerator stack as
+``policy="bfjs-mr"``:
+
+  * ``engine="reference"`` — the event-driven ``MultiResourceBFJS`` numpy
+    oracle driven slot-by-slot from the same ``SchedStreams`` (host-side,
+    not jittable): the behavioural anchor;
+  * ``engine="scan"``      — a branch-free ``lax.scan`` over slots with a
+    bounded early-exit placement work list, the same program shape as the
+    single-resource BF-J/S scan engine, generalized to ``(L, R)`` integer
+    occupancy planes and ``(Qcap, R)`` queued demand vectors.
+
+Semantics (one slot, identical to the oracle's ``step``):
+
+  1. departures free their demand vectors;
+  2. arrivals join the queue (first-empty positions, arrival-order seq ids);
+  3. BF-S over freed servers in ascending order: repeatedly place the
+     queued job with the LARGEST total demand that fits (ties: lowest seq,
+     i.e. earliest arrival — the oracle's insertion-order tie-break);
+  4. BF-J over the slot's arrivals in order: place each still-queued job on
+     the feasible server with the LOWEST alignment score
+     ``<demand, available>`` (ties: lowest server index).
+
+Exactness: demands and occupancies are ``quantize.RES`` grid integers, so
+every feasibility and total-demand comparison is exact; the alignment
+score is the canonical float32 left-to-right form (``alignment_scores``),
+identical bit-for-bit between numpy and XLA — so ``"scan"`` bit-matches
+``"reference"`` whenever ``truncated == 0``.
+
+Durations attach to jobs at arrival (like VQS), so trace-built streams
+(``streams_from_trace(trace, collapse=False)`` — per-arrival duration
+lanes only) replay directly: the path that runs the synthesized Google-like
+(cpu, mem) trace uncollapsed, the preprocessing step the paper's Section
+VIII wants removed.
+
+Fixed-shape deviations (counted, never silent): queue overflow beyond
+``Qcap`` drops arrivals (``dropped``); a placement onto a server whose
+``K`` job slots are full is skipped and counted (``truncated``), as are
+slots that exhaust the ``work_steps`` bound with placements still pending.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..quantize import RES
+from .ops import alignment_scores_jnp
+from .streams import (INF_SLOT, PolicyResult, SchedStreams, make_streams,
+                      resolve_work_steps)
+
+INT32_MAX = jnp.iinfo(jnp.int32).max
+
+
+def _norm_capacity(capacity, R: int) -> tuple[float, ...]:
+    if not isinstance(capacity, tuple):
+        capacity = (float(capacity),) * R
+    if len(capacity) != R:
+        raise ValueError(
+            f"capacity has {len(capacity)} entries for R={R} resources")
+    if any(c <= 0 for c in capacity):
+        raise ValueError(f"capacity entries must be > 0, got {capacity}")
+    return tuple(float(c) for c in capacity)
+
+
+def _lift_sizes(streams: SchedStreams) -> SchedStreams:
+    """bfjs-mr consumes (T, A_max, R) sizes; lift squeezed R=1 streams."""
+    if streams.sizes.ndim == streams.durs.ndim:
+        return streams._replace(sizes=streams.sizes[..., None])
+    return streams
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("L", "K", "Qcap", "A_max", "work_steps", "capacity"))
+def run_bfjs_mr_streams(streams: SchedStreams, L: int, K: int, Qcap: int,
+                        A_max: int, work_steps: int | None = None,
+                        capacity: tuple[float, ...] | float = 1.0
+                        ) -> PolicyResult:
+    """Branch-free multi-resource BF-J/S slot engine over streams.
+
+    One ``lax.scan`` over slots; inside each slot the BF-S refill and BF-J
+    placement passes are a bounded early-exit work list
+    (``lax.while_loop`` capped at ``work_steps``).  Each step either
+    performs the BF-S placement for the lowest-index freed server that
+    still has a fitting queued job, or attempts the next arrival's BF-J
+    placement — the same dynamic dispatch as the single-resource engine,
+    with vector feasibility (``all_r  dem_r <= avail_r``) and the f32
+    alignment score replacing scalar residual comparisons.  Placements
+    only consume queue entries and only shrink availability, so the
+    lowest-index-first order reproduces the oracle's nested loops exactly.
+    """
+    streams = _lift_sizes(streams)
+    horizon, _, R = streams.sizes.shape
+    capacity = _norm_capacity(capacity, R)
+    CAP = jnp.asarray([round(c * RES) for c in capacity], jnp.int32)
+    W = resolve_work_steps(work_steps, A_max)
+    a_iota = jnp.arange(A_max)
+    l_iota = jnp.arange(L)
+    q_iota = jnp.arange(Qcap)
+    k_iota = jnp.arange(K)
+    dur_off = streams.durs.shape[-1] - A_max
+
+    def slot_step(state, inp):
+        dem, dep, occ, qdem, qdur, qseq, t, q_cnt, seq0, dropped, trunc = \
+            state
+        n, sizes, durs = inp
+
+        # 1. departures
+        leaving = dep == t
+        freed = leaving.any(axis=1)
+        n_dep = leaving.sum()
+        occ = occ - (dem * leaving[..., None]).sum(axis=1)
+        dem = jnp.where(leaving[..., None], 0, dem)
+        dep = jnp.where(leaving, INF_SLOT, dep)
+
+        # 2. arrivals -> first empty queue positions (grid-quantized)
+        g = jnp.maximum(jnp.round(sizes * RES), 1.0).astype(jnp.int32)
+        n_empty = jnp.cumsum((qseq < 0).astype(jnp.int32))
+        pos_a = jnp.searchsorted(n_empty, a_iota + 1)
+        landed = (a_iota < n) & (pos_a < Qcap)
+        n_landed = landed.sum()
+        dropped = dropped + n - n_landed
+        q_cnt = q_cnt + n_landed
+        wpos = jnp.where(landed, pos_a, Qcap)
+        qdem = qdem.at[wpos].set(jnp.where(landed[:, None], g, 0),
+                                 mode="drop")
+        qdur = qdur.at[wpos].set(durs[dur_off + a_iota], mode="drop")
+        qseq = qseq.at[wpos].set(seq0 + a_iota, mode="drop")
+        seq0 = seq0 + n
+        new_pos = jnp.where(landed, pos_a, -1)
+        rank = jnp.cumsum(landed.astype(jnp.int32)) - 1
+        landed_list = jnp.full((A_max,), A_max - 1, jnp.int32).at[
+            jnp.where(landed, rank, A_max)].set(a_iota.astype(jnp.int32),
+                                                mode="drop")
+        pos_list = new_pos[landed_list]
+
+        def fits_matrix(occ, qdem, qseq, freed_mask):
+            """(L, Qcap) — job j fits on server i (static unroll over R)."""
+            avail = CAP[None, :] - occ
+            fits = freed_mask[:, None] & (qseq >= 0)[None, :]
+            for r in range(R):
+                fits = fits & (qdem[:, r][None, :] <= avail[:, r][:, None])
+            return fits
+
+        # 3+4. BF-S then BF-J as one bounded early-exit work list
+        def work(carry):
+            (dem, dep, occ, qdem, qdur, qseq, q_cnt, blocked, a_ptr,
+             trunc, done, n_steps) = carry
+            avail = CAP[None, :] - occ
+
+            # BF-S candidate: lowest-index freed, unblocked server with a
+            # fitting job; its job = largest total demand, earliest seq.
+            fits = fits_matrix(occ, qdem, qseq, freed & ~blocked)
+            has_fit = fits.any(axis=1)
+            cur = jnp.min(jnp.where(has_fit, l_iota, L))
+            any_bfs = cur < L
+            cur_c = jnp.minimum(cur, L - 1)
+            fit_cur = fits[cur_c]
+            tot = qdem.sum(axis=-1)
+            best_tot = jnp.max(jnp.where(fit_cur, tot, -1))
+            cand = fit_cur & (tot == best_tot)
+            best_seq = jnp.min(jnp.where(cand, qseq, INT32_MAX))
+            j_bfs = jnp.min(jnp.where(cand & (qseq == best_seq), q_iota,
+                                      Qcap))
+            j_bfs = jnp.minimum(j_bfs, Qcap - 1)
+
+            # BF-J candidate: next landed arrival still in the queue, on
+            # the min-alignment feasible server (any server, not just
+            # freed — the oracle's _best_server scans all L).
+            is_bfj = (~any_bfs) & (a_ptr < n_landed)
+            ap = jnp.minimum(a_ptr, A_max - 1)
+            pos = pos_list[ap]
+            posc = jnp.maximum(pos, 0)
+            present = is_bfj & (pos >= 0) & (qseq[posc] >= 0)
+            d_bfj = qdem[posc]
+            feas = jnp.ones((L,), bool)
+            for r in range(R):
+                feas = feas & (d_bfj[r] <= avail[:, r])
+            scores = alignment_scores_jnp(avail, d_bfj)
+            masked = jnp.where(feas, scores, jnp.inf)
+            best = jnp.min(masked)
+            s_bfj = jnp.min(jnp.where(feas & (masked == best), l_iota, L))
+            s_bfj_c = jnp.minimum(s_bfj, L - 1)
+            ok_bfj = present & feas.any()
+
+            do = any_bfs | ok_bfj
+            tgt = jnp.where(any_bfs, cur_c, s_bfj_c)
+            qidx = jnp.where(any_bfs, j_bfs, posc)
+            d_place = qdem[qidx]
+            dur = qdur[qidx]
+
+            row_dep = dep[tgt]
+            slot = jnp.min(jnp.where(row_dep == INF_SLOT, k_iota, K))
+            ok_slot = slot < K
+            place = do & ok_slot
+            slot_w = jnp.where(place, jnp.minimum(slot, K - 1), K)
+            dem = dem.at[tgt, slot_w].set(d_place, mode="drop")
+            dep = dep.at[tgt, slot_w].set(t + dur, mode="drop")
+            occ = occ.at[jnp.where(place, tgt, L)].add(d_place, mode="drop")
+            qclear = jnp.where(place, qidx, Qcap)
+            qseq = qseq.at[qclear].set(-1, mode="drop")
+            qdem = qdem.at[qclear].set(0, mode="drop")
+            q_cnt = q_cnt - place.astype(jnp.int32)
+            # K-full server: the oracle would place; count, don't spin.
+            trunc = trunc + (do & ~ok_slot).astype(jnp.int32)
+            blocked = blocked | (any_bfs & ~ok_slot)
+            a_ptr = a_ptr + is_bfj.astype(jnp.int32)
+            # BF-S fits only shrink and each arrival is attempted once, so
+            # once neither exists the slot is finished for good.
+            done = (~any_bfs) & (a_ptr >= n_landed)
+            return (dem, dep, occ, qdem, qdur, qseq, q_cnt, blocked,
+                    a_ptr, trunc, done, n_steps + 1)
+
+        def unfinished(carry):
+            done, n_steps = carry[10], carry[11]
+            return (~done) & (n_steps < W)
+
+        zero = jnp.zeros((), jnp.int32)
+        carry = (dem, dep, occ, qdem, qdur, qseq, q_cnt,
+                 jnp.zeros((L,), bool), zero, trunc,
+                 jnp.zeros((), bool), zero)
+        carry = jax.lax.while_loop(unfinished, work, carry)
+        (dem, dep, occ, qdem, qdur, qseq, q_cnt, blocked, a_ptr, trunc,
+         done, _) = carry
+
+        # saturation check: work the oracle would still do => the bounded
+        # list diverged this slot (K-full blocks were already counted).
+        fits = fits_matrix(occ, qdem, qseq, freed & ~blocked)
+        pend_bfs = fits.any()
+        left = (a_iota >= a_ptr) & (a_iota < n_landed)
+        posb = jnp.maximum(pos_list, 0)
+        present_l = left & (pos_list >= 0) & (qseq[posb] >= 0)
+        avail = CAP[None, :] - occ
+        feas_l = jnp.ones((A_max, L), bool)
+        for r in range(R):
+            feas_l = feas_l & (qdem[posb][:, r][:, None]
+                               <= avail[:, r][None, :])
+        pend_bfj = (present_l & feas_l.any(axis=1)).any()
+        trunc = trunc + (pend_bfs | pend_bfj).astype(jnp.int32)
+
+        out = (q_cnt, occ.sum(axis=0).astype(jnp.float32) / RES,
+               n_dep.astype(jnp.int32))
+        state = (dem, dep, occ, qdem, qdur, qseq, t + 1, q_cnt, seq0,
+                 dropped, trunc)
+        return state, out
+
+    zero = jnp.zeros((), jnp.int32)
+    state0 = (
+        jnp.zeros((L, K, R), jnp.int32),
+        jnp.full((L, K), INF_SLOT, jnp.int32),
+        jnp.zeros((L, R), jnp.int32),
+        jnp.zeros((Qcap, R), jnp.int32),
+        jnp.ones((Qcap,), jnp.int32),
+        jnp.full((Qcap,), -1, jnp.int32),
+        zero, zero, zero, zero, zero,
+    )
+    state, (qlen, occ, ndep) = jax.lax.scan(
+        slot_step, state0, (streams.n, streams.sizes, streams.durs))
+    return PolicyResult(qlen, occ, jnp.cumsum(ndep), state[9], state[10])
+
+
+def _run_bfjs_mr_reference(streams: SchedStreams, *, L: int,
+                           capacity: tuple[float, ...] | float = 1.0
+                           ) -> PolicyResult:
+    """The event-driven ``MultiResourceBFJS`` oracle driven from streams.
+
+    Host-side numpy, slot by slot — not jittable, kept as the behavioural
+    anchor the scan engine is parity-tested against.  Demands are the same
+    grid quantization the scan engine applies (``max(round(s * RES), 1)``)
+    replayed as exact dyadics ``g / RES``; the capacity is quantized to the
+    grid too, so every feasibility comparison is exact and agrees with the
+    integer engine.  The oracle has no fixed-size buffers: ``dropped`` and
+    ``truncated`` are always 0.
+    """
+    from ..multi_resource import MRJob, MultiResourceBFJS
+
+    streams = _lift_sizes(streams)
+    n = np.asarray(streams.n)
+    sizes = np.asarray(streams.sizes, dtype=np.float64)
+    durs = np.asarray(streams.durs)
+    T, A_max, R = sizes.shape
+    capacity = _norm_capacity(capacity, R)
+    cap_dyadic = tuple(round(c * RES) / RES for c in capacity)
+    g = np.maximum(np.rint(sizes * RES), 1.0)
+    dem = g / RES
+    dur_off = durs.shape[-1] - A_max
+
+    policy = MultiResourceBFJS(L, R, capacity=cap_dyadic)
+    qlen = np.zeros(T, dtype=np.int32)
+    occ = np.zeros((T, R), dtype=np.float64)
+    dep_cum = np.zeros(T, dtype=np.int32)
+    jid = 0
+    for t in range(T):
+        jobs = []
+        for a in range(int(n[t])):
+            jobs.append(MRJob(jid, dem[t, a], t, int(durs[t, dur_off + a])))
+            jid += 1
+        policy.step(t, jobs)
+        q = policy.queue_len()
+        qlen[t] = q
+        occ[t] = policy.occupied.sum(axis=0)
+        in_service = sum(len(s) for s in policy.jobs)
+        dep_cum[t] = jid - in_service - q
+    return PolicyResult(
+        jnp.asarray(qlen), jnp.asarray(occ.astype(np.float32)),
+        jnp.asarray(dep_cum), jnp.zeros((), jnp.int32),
+        jnp.zeros((), jnp.int32))
+
+
+def run_bfjs_mr_trace(streams: SchedStreams, *, L: int, K: int = 16,
+                      Qcap: int = 512, A_max: int | None = None,
+                      engine: str = "scan", work_steps: int | None = None,
+                      capacity: tuple[float, ...] | float = 1.0
+                      ) -> PolicyResult:
+    """Run one multi-resource BF-J/S simulation over explicit streams.
+
+    Accepts both trace-built streams (per-arrival duration lanes only —
+    the ``streams_from_trace(trace, collapse=False)`` path) and
+    ``make_streams`` full-width streams (the engine consumes the last
+    ``A_max`` per-arrival lanes; durations attach at arrival).
+    """
+    streams = _lift_sizes(streams)
+    if A_max is None:
+        A_max = int(streams.sizes.shape[1])
+    if engine == "reference":
+        return _run_bfjs_mr_reference(streams, L=L, capacity=capacity)
+    if engine == "scan":
+        if not isinstance(capacity, tuple):
+            capacity = _norm_capacity(capacity, int(streams.sizes.shape[-1]))
+        return run_bfjs_mr_streams(streams, L=L, K=K, Qcap=Qcap,
+                                   A_max=A_max, work_steps=work_steps,
+                                   capacity=capacity)
+    if engine == "pallas":
+        raise ValueError(
+            "policy \"bfjs-mr\" has no Pallas kernel yet (ROADMAP item); "
+            "use engine=\"scan\" or \"reference\"")
+    raise ValueError(f"unknown engine {engine!r}")
+
+
+def run_bfjs_mr_workload(workload, key, *, engine: str = "scan",
+                         L: int = 8, K: int = 16, Qcap: int = 512,
+                         A_max: int = 8, horizon: int = 10_000,
+                         work_steps: int | None = None) -> PolicyResult:
+    """Simulate multi-resource BF-J/S for one ``Workload`` and key."""
+    workload.check_sampler()
+    streams = make_streams(key, workload.lam, workload.mu, workload.sampler,
+                           L=L, K=K, A_max=A_max, horizon=horizon,
+                           num_resources=workload.num_resources)
+    return run_bfjs_mr_trace(streams, L=L, K=K, Qcap=Qcap, A_max=A_max,
+                             engine=engine, work_steps=work_steps,
+                             capacity=workload.capacity)
+
+
+def monte_carlo_bfjs_mr_workload(workload, keys, *, engine: str = "scan",
+                                 L: int = 8, K: int = 16, Qcap: int = 512,
+                                 A_max: int = 8, horizon: int = 10_000,
+                                 work_steps: int | None = None
+                                 ) -> PolicyResult:
+    """One simulated cluster per key ("scan" vmaps; "reference" loops the
+    host-side oracle and stacks)."""
+    workload.check_sampler()
+    if engine == "reference":
+        res = [run_bfjs_mr_workload(workload, k, engine=engine, L=L, K=K,
+                                    Qcap=Qcap, A_max=A_max, horizon=horizon,
+                                    work_steps=work_steps) for k in keys]
+        return jax.tree.map(lambda *xs: jnp.stack(xs), *res)
+    fn = functools.partial(run_bfjs_mr_workload, workload, engine=engine,
+                           L=L, K=K, Qcap=Qcap, A_max=A_max,
+                           horizon=horizon, work_steps=work_steps)
+    return jax.vmap(fn)(keys)

@@ -40,6 +40,25 @@ def best_fit_place(residuals: jax.Array, sizes: jax.Array) -> tuple[jax.Array, j
     return assign.astype(jnp.int32), new_resid
 
 
+def alignment_scores_jnp(avail: jax.Array, demand: jax.Array) -> jax.Array:
+    """Tetris alignment <demand, avail> per server (paper §VIII), the jnp
+    twin of ``core.multi_resource.alignment_scores``.
+
+    ``avail`` is (L, R) grid-integer availability, ``demand`` is (R,) grid
+    integers.  Each product and each accumulating add is an explicit
+    float32 op, accumulated left-to-right over the (static) resource axis —
+    the identical IEEE-754 rounding sequence as the numpy oracle, so argmin
+    tie-breaks bit-match.  (int32 products of two 16-bit grid values would
+    overflow, and float64 is off by default under jit; canonical-f32 is the
+    portable exact-comparison contract.)
+    """
+    prods = avail.astype(jnp.float32) * demand.astype(jnp.float32)[None, :]
+    acc = prods[:, 0]
+    for r in range(1, prods.shape[1]):
+        acc = acc + prods[:, r]
+    return acc
+
+
 def largest_fitting_job(queue: jax.Array, cap: jax.Array) -> jax.Array:
     """Index of the largest queued job with size <= cap (BF-S step);
     -1 if none. Zero entries mean empty queue slots."""

@@ -40,10 +40,26 @@ class SchedStreams(NamedTuple):
     engines consuming these streams reproduce ``engine="reference"``
     bit-for-bit.  (Known historically as ``BFJSStreams`` — the layout is
     policy-generic and the old name remains as an alias.)
+
+    The canonical size layout is ``(T, A_max, R)`` — one requirement vector
+    per arrival.  Single-resource streams (``R == 1``) squeeze the resource
+    axis away and keep the historical ``(T, A_max)`` plane, so every
+    existing engine, kernel and test consumes exactly the layout it always
+    did; ``num_resources`` reads R off the shape.
     """
     n: jax.Array       # (T,) int32 arrival counts, already clipped to A_max
-    sizes: jax.Array   # (T, A_max) float32 job sizes in (0, 1]
+    sizes: jax.Array   # (T, A_max) f32 sizes in (0,1] — (T, A_max, R) if R>1
     durs: jax.Array    # (T, L*K + A_max) int32 geometric service durations
+
+    @property
+    def num_resources(self) -> int:
+        """R: 1 for the squeezed legacy layout, trailing dim otherwise.
+
+        Anchored on ``durs``'s rank (always one axis fewer than an
+        R-carrying ``sizes``) so it also reads correctly on ensemble-batched
+        streams with a leading G axis."""
+        return 1 if self.sizes.ndim == self.durs.ndim \
+            else int(self.sizes.shape[-1])
 
 
 #: Back-compat alias (PR 1 public name).
@@ -51,9 +67,15 @@ BFJSStreams = SchedStreams
 
 
 class PolicyResult(NamedTuple):
-    """Per-slot trajectory of one simulated cluster (any policy/engine)."""
+    """Per-slot trajectory of one simulated cluster (any policy/engine).
+
+    Single-resource policies keep ``occupancy`` as the historical ``(T,)``
+    plane; multi-resource policies (``bfjs-mr``) report one occupancy plane
+    per resource, ``(T, R)`` — total occupied capacity in servers, per
+    resource, exact on the ``quantize.RES`` grid."""
     queue_len: jax.Array   # (T,) int32
-    occupancy: jax.Array   # (T,) float32 total occupied capacity (servers)
+    occupancy: jax.Array   # (T,) f32 occupied capacity (servers); (T, R)
+    #                        per-resource planes for multi-resource policies
     departed: jax.Array    # (T,) int32 cumulative departures
     dropped: jax.Array     # () int32 arrivals dropped by fixed-size buffers
     truncated: jax.Array   # () int32 slots where a fixed bound cut the
@@ -70,10 +92,13 @@ def _geometric(key: jax.Array, mu: float, shape=()) -> jax.Array:
 
 
 @functools.partial(
-    jax.jit, static_argnames=("sampler", "L", "K", "A_max", "horizon"))
+    jax.jit,
+    static_argnames=("sampler", "L", "K", "A_max", "horizon",
+                     "num_resources"))
 def make_streams(key: jax.Array, lam: float, mu: float,
                  sampler: Callable[[jax.Array, int], jax.Array],
-                 L: int, K: int, A_max: int, horizon: int) -> SchedStreams:
+                 L: int, K: int, A_max: int, horizon: int,
+                 num_resources: int = 1) -> SchedStreams:
     """Pre-generate all per-slot randomness for one cluster simulation.
 
     Replicates the reference engine's per-slot key chain
@@ -81,6 +106,12 @@ def make_streams(key: jax.Array, lam: float, mu: float,
     Poisson count / sizes / durations under ``vmap`` — bitwise identical to
     the in-loop draws, but issued as three large batched RNG calls instead
     of ``5 * horizon`` tiny ones.
+
+    With ``num_resources == 1`` (the default) the sampler returns ``(n,)``
+    scalar sizes and the stream keeps the historical ``(T, A_max)`` layout.
+    With R > 1 the sampler returns ``(n, R)`` requirement vectors and the
+    size stream is ``(T, A_max, R)``; the key chain is unchanged, so the
+    non-size streams stay bitwise identical across R.
     """
 
     def chain(k, _):
@@ -91,29 +122,48 @@ def make_streams(key: jax.Array, lam: float, mu: float,
     n = jnp.minimum(jax.vmap(lambda k: jax.random.poisson(k, lam))(ks[:, 1]),
                     A_max).astype(jnp.int32)
     sizes = jax.vmap(lambda k: sampler(k, A_max))(ks[:, 2])
+    expect = (horizon, A_max) if num_resources == 1 \
+        else (horizon, A_max, num_resources)
+    if tuple(sizes.shape) != expect:
+        raise ValueError(
+            f"sampler produced sizes of shape {tuple(sizes.shape)} for "
+            f"num_resources={num_resources}: expected {expect} "
+            "(sampler(key, n) must return (n,) for R == 1, (n, R) "
+            "otherwise)")
     durs = jax.vmap(lambda k: _geometric(k, mu, (L * K + A_max,)))(ks[:, 3])
     return SchedStreams(n, sizes, durs)
 
 
-def streams_from_trace(arrival_slots, sizes, durations, *,
+def streams_from_trace(trace_or_slots, sizes=None, durations=None, *,
                        horizon: int | None = None,
-                       A_max: int | None = None) -> SchedStreams:
+                       A_max: int | None = None,
+                       collapse: bool = True) -> SchedStreams:
     """Build ``SchedStreams`` that replay a workload trace exactly.
+
+    Accepts either raw arrays ``(arrival_slots, sizes, durations)`` — with
+    ``sizes`` of shape ``(N,)`` for scalar jobs or ``(N, R)`` for
+    requirement vectors — or a ``core.trace.Trace`` directly:
+
+        streams_from_trace(trace)                  # max(cpu, mem), paper's
+                                                   # collapse preprocessing
+        streams_from_trace(trace, collapse=False)  # (cpu, mem) uncollapsed,
+                                                   # (T, A_max, 2) sizes for
+                                                   # policy="bfjs-mr"
 
     Mirrors ``core.simulator.simulate_trace`` preprocessing bit-for-bit:
     jobs are stably sorted by arrival slot, float sizes are quantized with
-    ``quantize.to_grid`` (the stream stores the exact grid value ``g/RES``,
-    which float32 represents exactly for ``RES = 2**16``, so the engines'
-    in-loop quantization recovers ``g`` verbatim) and durations are clamped
-    to >= 1 slot.
+    ``quantize.to_grid`` per resource (the stream stores the exact grid
+    value ``g/RES``, which float32 represents exactly for ``RES = 2**16``,
+    so the engines' in-loop quantization recovers ``g`` verbatim) and
+    durations are clamped to >= 1 slot.
 
     The duration stream holds ONLY the per-arrival lanes (``(T, A_max)``):
     every job's duration travels with the job, which is exactly the
-    semantics of policies that attach durations at arrival (VQS).  The
-    BF-J/S engines additionally need a sequential-draw region that a trace
-    cannot provide (their BF-S refills would detach durations from job
-    identities), so they reject trace-shaped streams with a ValueError at
-    trace time instead of replaying them wrong.
+    semantics of policies that attach durations at arrival (VQS, bfjs-mr).
+    The single-resource BF-J/S engines additionally need a sequential-draw
+    region that a trace cannot provide (their BF-S refills would detach
+    durations from job identities), so they reject trace-shaped streams
+    with a ValueError at trace time instead of replaying them wrong.
 
     ``A_max`` defaults to the trace's actual max arrivals-per-slot so no
     arrival is ever silently dropped; passing a smaller ``A_max`` is an
@@ -121,10 +171,27 @@ def streams_from_trace(arrival_slots, sizes, durations, *,
     """
     from ..quantize import RES, to_grid
 
+    if sizes is None or hasattr(trace_or_slots, "arrival_slots"):
+        trace = trace_or_slots
+        if sizes is not None or durations is not None:
+            raise TypeError(
+                "pass either a Trace or (arrival_slots, sizes, durations), "
+                "not both")
+        arrival_slots = np.asarray(trace.arrival_slots)
+        durations = np.asarray(trace.durations)
+        if collapse:
+            sizes = np.maximum(trace.cpu, trace.mem)
+        else:
+            sizes = np.stack([trace.cpu, trace.mem], axis=1)
+    else:
+        arrival_slots = np.asarray(trace_or_slots)
+
     arrival_slots = np.asarray(arrival_slots)
     order = np.argsort(arrival_slots, kind="stable")
     arrival_slots = arrival_slots[order].astype(np.int64)
-    g = to_grid(np.asarray(sizes)[order])
+    sizes = np.asarray(sizes)
+    R = 1 if sizes.ndim == 1 else int(sizes.shape[1])
+    g = to_grid(sizes[order])
     durations = np.maximum(np.asarray(durations)[order].astype(np.int64), 1)
     if horizon is None:
         if len(arrival_slots) == 0:
@@ -142,7 +209,8 @@ def streams_from_trace(arrival_slots, sizes, durations, *,
             f"trace has {peak} arrivals in one slot > A_max={A_max}; "
             "raise A_max (streams never drop trace jobs silently)")
 
-    size_arr = np.zeros((horizon, A_max), dtype=np.float32)
+    size_shape = (horizon, A_max) if R == 1 else (horizon, A_max, R)
+    size_arr = np.zeros(size_shape, dtype=np.float32)
     dur_arr = np.ones((horizon, A_max), dtype=np.int32)
     slot = arrival_slots[in_h]
     # lane[i] = index of job i within its slot (jobs are slot-sorted)

@@ -494,6 +494,26 @@ def run_vqs(key: jax.Array, lam: float, mu: float,
                          engine=engine, work_steps=work_steps, drain=drain)
 
 
+def run_vqs_workload(workload, key: jax.Array, *, engine: str = "scan",
+                     **config) -> PolicyResult:
+    """Workload-first adapter: the registry entry behind
+    ``run_policy(workload, policy="vqs", ...)``.  VQS partitions scalar
+    sizes; vector workloads are rejected loudly."""
+    workload.require_scalar("vqs")
+    workload.check_sampler()
+    return run_vqs(key, workload.lam, workload.mu, workload.sampler,
+                   engine=engine, **config)
+
+
+def monte_carlo_vqs_workload(workload, keys: jax.Array, *,
+                             engine: str = "scan", **config) -> PolicyResult:
+    """Workload-first adapter for ``monte_carlo_policy(policy="vqs")``."""
+    workload.require_scalar("vqs")
+    workload.check_sampler()
+    return monte_carlo_vqs(keys, workload.lam, workload.mu,
+                           workload.sampler, engine=engine, **config)
+
+
 def monte_carlo_vqs(keys: jax.Array, lam: float, mu: float, sampler,
                     engine: str = "scan", work_steps: int | None = None,
                     drain: int | None = None, J: int = 4, L: int = 8,

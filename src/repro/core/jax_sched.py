@@ -12,12 +12,13 @@ from __future__ import annotations
 
 from .engine import (  # noqa: F401
     BFJSResult, BFJSState, BFJSStreams, ENGINES, INF_SLOT, PolicyResult,
-    PolicySpec, SchedStreams, available_policies, best_fit_place,
+    PolicySpec, SchedStreams, Workload, available_policies, best_fit_place,
     best_fit_server, get_policy, k_red_jnp, largest_fitting_job,
     make_streams, max_weight_config_jax, monte_carlo_bfjs,
     monte_carlo_policy, monte_carlo_vqs, register_policy,
-    resolve_work_steps, run_bfjs, run_bfjs_streams, run_bfjs_trace,
-    run_policy, run_policy_streams, run_vqs, run_vqs_streams, run_vqs_trace,
-    streams_from_trace, vq_type_of, vq_type_of_grid,
+    resolve_work_steps, run_bfjs, run_bfjs_mr_streams, run_bfjs_mr_trace,
+    run_bfjs_streams, run_bfjs_trace, run_policy, run_policy_streams,
+    run_vqs, run_vqs_streams, run_vqs_trace, streams_from_trace,
+    vq_type_of, vq_type_of_grid,
 )
 from .engine.streams import _geometric, _resolve_work_steps  # noqa: F401

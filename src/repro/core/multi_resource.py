@@ -18,12 +18,38 @@ job's resource-requirement vector and the server's occupied-resource vector"
 Event-driven engine mirroring core.simulator at O(L) per placement — the
 multi-dimensional score has no total order to index, so no Fenwick fast
 path; L up to a few thousand is fine.
+
+This module is also the behavioural ORACLE of the accelerator-resident
+``policy="bfjs-mr"`` scan engine (``core/engine/bfjs_mr.py``).  To make
+bit-match testable across numpy and XLA, the alignment score is defined
+canonically in float32 with left-to-right accumulation over resources
+(``alignment_scores``): products and sums of float32 values round
+identically under IEEE-754 in both runtimes, so argmin tie-breaks agree
+exactly.  Feasibility and job-size comparisons stay exact: on grid-quantized
+demands (``simulate_mr_trace``, ``quantize.to_grid``) every occupancy is a
+dyadic rational ``k/2**16`` that float64 adds and compares without
+rounding.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 
 import numpy as np
+
+
+def alignment_scores(avail: np.ndarray, demand: np.ndarray) -> np.ndarray:
+    """Tetris alignment <demand, avail> per server, canonical float32 form.
+
+    ``avail`` is (L, R), ``demand`` is (R,).  Each product and each of the
+    R-1 accumulating adds is rounded to float32, accumulated left-to-right
+    over resources — the exact expression (and rounding sequence) the jnp
+    engine evaluates, so score comparisons bit-match across numpy and XLA.
+    """
+    prods = avail.astype(np.float32) * demand.astype(np.float32)[None, :]
+    acc = prods[:, 0]
+    for r in range(1, prods.shape[1]):
+        acc = (acc + prods[:, r]).astype(np.float32)
+    return acc
 
 
 @dataclass
@@ -56,9 +82,12 @@ class MultiResourceBFJS:
 
     name = "mr-bf-js"
 
-    def __init__(self, L: int, num_resources: int):
+    def __init__(self, L: int, num_resources: int,
+                 capacity: float | tuple[float, ...] = 1.0):
         self.L = L
         self.R = num_resources
+        self.capacity = np.broadcast_to(
+            np.asarray(capacity, dtype=np.float64), (num_resources,)).copy()
         self.occupied = np.zeros((L, num_resources))
         self.jobs: list[dict[int, MRJob]] = [dict() for _ in range(L)]
         self.queue: dict[int, MRJob] = {}
@@ -66,14 +95,17 @@ class MultiResourceBFJS:
 
     # -- scores -------------------------------------------------------------
     def _feasible(self, demand: np.ndarray) -> np.ndarray:
-        return (self.occupied + demand[None, :] <= 1.0 + 1e-12).all(axis=1)
+        return (self.occupied + demand[None, :]
+                <= self.capacity[None, :] + 1e-12).all(axis=1)
 
     def _best_server(self, demand: np.ndarray) -> int:
         feas = self._feasible(demand)
         if not feas.any():
             return -1
-        avail = 1.0 - self.occupied
-        scores = avail @ demand          # tightest-in-needed-dims = argmin
+        avail = self.capacity[None, :] - self.occupied
+        # tightest-in-needed-dims = argmin of the f32 alignment score
+        # (canonical rounding — see alignment_scores)
+        scores = alignment_scores(avail, demand)
         scores[~feas] = np.inf
         return int(np.argmin(scores))
 
@@ -85,7 +117,7 @@ class MultiResourceBFJS:
         occ = self.occupied[server]
         best, best_s = None, -np.inf
         for job in self.queue.values():
-            if np.all(occ + job.demand <= 1.0 + 1e-12):
+            if np.all(occ + job.demand <= self.capacity + 1e-12):
                 s = float(job.demand.sum())
                 if s > best_s:
                     best, best_s = job, s
@@ -165,6 +197,69 @@ def simulate_mr(policy: MultiResourceBFJS, lam: float,
         mean_queue_tail=qsum_tail / max(horizon - tail, 1),
         final_queue=policy.queue_len(),
         utilization=occ_sum / horizon,
+    )
+
+
+def simulate_mr_trace(policy: MultiResourceBFJS, arrival_slots, demands,
+                      durations, horizon: int | None = None,
+                      record_every: int = 1) -> MRResult:
+    """Replay a trace of (R,)-vector demands through the event-driven
+    oracle — the parity bridge for the ``policy="bfjs-mr"`` scan engine.
+
+    Mirrors ``simulator.simulate_trace`` preprocessing: stable sort by
+    arrival slot, demands quantized to the ``quantize.RES`` grid (the
+    replayed values are the exact dyadics ``g / RES``, so every occupancy
+    comparison is exact in float64), durations clamped to >= 1.  Records
+    the queue length every ``record_every`` slots and the per-resource
+    occupancy plane every slot (``extras["occupancy"]``, shape (T, R), in
+    servers) plus cumulative departures (``extras["departed_cum"]``).
+    """
+    from .quantize import RES, to_grid
+
+    arrival_slots = np.asarray(arrival_slots)
+    order = np.argsort(arrival_slots, kind="stable")
+    arrival_slots = arrival_slots[order].astype(np.int64)
+    demands = np.asarray(demands)[order]
+    if demands.ndim != 2 or demands.shape[1] != policy.R:
+        raise ValueError(
+            f"demands must be (N, R={policy.R}), got {demands.shape}")
+    dem_g = to_grid(demands).astype(np.float64) / RES
+    durations = np.maximum(np.asarray(durations)[order].astype(np.int64), 1)
+    n_jobs = len(arrival_slots)
+    if horizon is None:
+        horizon = int(arrival_slots[-1]) + 1
+
+    records: list[int] = []
+    occ_plane = np.zeros((horizon, policy.R))
+    dep_cum = np.zeros(horizon, dtype=np.int64)
+    qsum = qsum_tail = 0.0
+    tail = horizon // 2
+    ptr = 0
+    for t in range(horizon):
+        jobs = []
+        while ptr < n_jobs and arrival_slots[ptr] <= t:
+            jobs.append(MRJob(ptr, dem_g[ptr], t, int(durations[ptr])))
+            ptr += 1
+        policy.step(t, jobs)
+        q = policy.queue_len()
+        qsum += q
+        if t >= tail:
+            qsum_tail += q
+        in_service = sum(len(s) for s in policy.jobs)
+        dep_cum[t] = ptr - in_service - q
+        occ_plane[t] = policy.occupied.sum(axis=0)
+        if t % record_every == 0:
+            records.append(q)
+
+    return MRResult(
+        queue_lens=np.asarray(records),
+        arrived=ptr,
+        departed=int(dep_cum[-1]) if horizon else 0,
+        mean_queue=qsum / max(horizon, 1),
+        mean_queue_tail=qsum_tail / max(horizon - tail, 1),
+        final_queue=policy.queue_len(),
+        utilization=occ_plane.mean(axis=0) / max(policy.L, 1),
+        extras={"occupancy": occ_plane, "departed_cum": dep_cum},
     )
 
 

@@ -15,6 +15,7 @@ times are multiplied by beta (larger 1/beta => more jobs per slot).
 """
 from __future__ import annotations
 
+import csv
 from dataclasses import dataclass
 
 import numpy as np
@@ -66,6 +67,106 @@ def synthesize_google_like_trace(n_tasks: int,
     dur = np.clip(dur, 1, mean_duration * 50).astype(np.int64)
 
     return Trace(arrival_slots.astype(np.int64), cpu, mem, dur)
+
+
+#: Accepted spellings per column, lowercase (Google-2019 / Alibaba style).
+#: A job-id column may be present (it is ignored — arrival order is the
+#: identity the engines use) but is not required.
+_COLUMN_ALIASES = {
+    "submit_time": ("submit_time", "submit", "time", "arrival_time",
+                    "start_time"),
+    "cpu": ("cpu", "cpu_request", "request_cpu", "plan_cpu", "cpus"),
+    "mem": ("mem", "memory", "mem_request", "request_mem", "plan_mem"),
+    "duration": ("duration", "runtime", "duration_slots", "run_time"),
+}
+
+
+def load_trace_csv(path, *, slot_seconds: float = 1.0,
+                   normalize: bool = True) -> Trace:
+    """Load a Google-2019 / Alibaba-style CSV into a :class:`Trace`.
+
+    Expects a header row naming (in any order, any of the usual spellings)
+    submit time, cpu, mem and duration columns — see ``_COLUMN_ALIASES``;
+    a job-id column may be present but is ignored (arrival order is the
+    identity the engines use).  Submit times and durations are in seconds
+    and land on the slot grid via ``slot_seconds`` (floor for arrivals,
+    ceil with a 1-slot minimum for durations — a job never serves zero
+    slots).  Arrival slots are re-based so the earliest job arrives at
+    slot 0, and jobs are stably sorted (submit order preserved within a
+    slot).
+
+    ``normalize=True`` (default) rescales cpu/mem to machine fractions by
+    their column maxima when any value exceeds 1 (public traces report
+    absolute core counts / bytes); values are then clipped into (0, 1] —
+    the engines' job-size domain.  ``normalize=False`` takes the values as
+    already-normalized fractions and REJECTS anything outside (0, 1]
+    instead of silently saturating it.  Rows with non-positive cpu AND
+    mem, or non-positive duration, are skipped.
+
+    Returns the trace sorted by arrival slot — directly consumable by
+    ``streams_from_trace(trace, collapse=False)`` (uncollapsed (cpu, mem)
+    for ``policy="bfjs-mr"``) or with the paper's max-collapse.
+    """
+    with open(path, newline="") as f:
+        reader = csv.reader(f)
+        try:
+            header = next(reader)
+        except StopIteration:
+            raise ValueError(f"{path}: empty trace file") from None
+        names = [h.strip().lower() for h in header]
+        cols = {}
+        for field, aliases in _COLUMN_ALIASES.items():
+            for a in aliases:
+                if a in names:
+                    cols[field] = names.index(a)
+                    break
+            else:
+                raise ValueError(
+                    f"{path}: no column for {field!r} (looked for "
+                    f"{', '.join(aliases)}; header: {', '.join(names)})")
+        submit, cpu, mem, dur = [], [], [], []
+        for ln, rec in enumerate(reader, start=2):
+            if not rec or not "".join(rec).strip():
+                continue
+            try:
+                s = float(rec[cols["submit_time"]])
+                c = float(rec[cols["cpu"]])
+                m = float(rec[cols["mem"]])
+                d = float(rec[cols["duration"]])
+            except (ValueError, IndexError) as e:
+                raise ValueError(f"{path}:{ln}: bad row {rec!r}") from e
+            if d <= 0 or (c <= 0 and m <= 0):
+                continue
+            submit.append(s)
+            cpu.append(c)
+            mem.append(m)
+            dur.append(d)
+    if not submit:
+        raise ValueError(f"{path}: no usable rows")
+
+    submit = np.asarray(submit)
+    cpu = np.asarray(cpu)
+    mem = np.asarray(mem)
+    dur = np.asarray(dur)
+    if normalize:
+        if cpu.max() > 1.0:
+            cpu = cpu / cpu.max()
+        if mem.max() > 1.0:
+            mem = mem / mem.max()
+        cpu = np.clip(cpu, 1e-6, 1.0)
+        mem = np.clip(mem, 1e-6, 1.0)
+    elif cpu.max() > 1.0 or mem.max() > 1.0:
+        raise ValueError(
+            f"{path}: cpu/mem values exceed 1 (max cpu={cpu.max():g}, "
+            f"mem={mem.max():g}) but normalize=False — these look like "
+            "absolute units; pass normalize=True or rescale first")
+    else:
+        cpu = np.maximum(cpu, 1e-6)
+        mem = np.maximum(mem, 1e-6)
+    slots = np.floor((submit - submit.min()) / slot_seconds).astype(np.int64)
+    dur_slots = np.maximum(np.ceil(dur / slot_seconds), 1).astype(np.int64)
+    order = np.argsort(slots, kind="stable")
+    return Trace(slots[order], cpu[order], mem[order], dur_slots[order])
 
 
 def collapse_resources(trace: Trace) -> np.ndarray:

@@ -134,37 +134,47 @@ def estimate_capacity(num_replicas: int, lam: float,
                       mean_service_slots: float, size_sampler=None, *,
                       ensembles: int = 8, horizon: int = 2_000,
                       policy: str = "bfjs", engine: str = "scan",
-                      seed: int = 0, K: int = 16, Qcap: int = 512,
-                      A_max: int = 8, **policy_config) -> dict:
+                      workload=None, seed: int = 0, K: int = 16,
+                      Qcap: int = 512, A_max: int = 8,
+                      **policy_config) -> dict:
     """Monte-Carlo what-if sizing for a serving fleet.
 
     Simulates admission under ``policy`` ("bfjs" — the controller this
     engine runs — or any policy registered with ``repro.core.engine``, e.g.
-    "vqs" for the paper's guaranteed-throughput scheduler) on
-    ``num_replicas`` replicas under Poisson(``lam``) request arrivals whose
-    KV-cache fractions come from ``size_sampler(key, n)`` and whose decode
-    lengths are geometric with mean ``mean_service_slots`` — on-device via
-    the accelerated engines in core/engine (``engine=`` "scan" |
-    "reference" | "pallas").  Extra keyword arguments (``J=...`` for VQS)
-    pass through to the policy runner.  Returns tail-queue / drop
-    statistics to answer "how many replicas do I need for this traffic?"
-    before any model is loaded.
+    "vqs" for the paper's guaranteed-throughput scheduler, "bfjs-mr" for
+    vector requests) on ``num_replicas`` replicas under Poisson(``lam``)
+    request arrivals whose KV-cache fractions come from
+    ``size_sampler(key, n)`` and whose decode lengths are geometric with
+    mean ``mean_service_slots`` — on-device via the accelerated engines in
+    core/engine, with the ``engine=`` knob ("scan" | "reference" |
+    "pallas") selecting the implementation exactly as ``policy=`` selects
+    the scheduler.  The what-if is packaged as a
+    :class:`repro.core.engine.Workload` internally; pass ``workload=`` to
+    size an explicit spec (e.g. a multi-resource one with per-replica
+    (kv-mem, compute) capacities) instead of the loose knobs, which are
+    then ignored.  Extra keyword arguments (``J=...`` for VQS) pass through
+    to the policy runner.  Returns tail-queue / drop statistics to answer
+    "how many replicas do I need for this traffic?" before any model is
+    loaded.
     """
-    from repro.core.engine import monte_carlo_policy
+    from repro.core.engine import Workload, monte_carlo_policy
 
-    if size_sampler is None:
-        def size_sampler(key, n):
-            return jax.random.uniform(key, (n,), minval=0.05, maxval=0.5)
+    if workload is None:
+        if size_sampler is None:
+            def size_sampler(key, n):
+                return jax.random.uniform(key, (n,), minval=0.05, maxval=0.5)
+        workload = Workload(lam=lam, mu=1.0 / mean_service_slots,
+                            sampler=size_sampler)
 
     keys = jax.random.split(jax.random.PRNGKey(seed), ensembles)
-    res = monte_carlo_policy(keys, lam, 1.0 / mean_service_slots,
-                             size_sampler, policy=policy, engine=engine,
+    res = monte_carlo_policy(workload, keys, policy=policy, engine=engine,
                              L=num_replicas, K=K, Qcap=Qcap, A_max=A_max,
                              horizon=horizon, **policy_config)
     tail = np.asarray(res.queue_len)[:, -max(horizon // 4, 1):]
     return {
         "replicas": num_replicas,
         "policy": policy,
+        "engine": engine,
         "mean_tail_queue": float(tail.mean()),
         "p95_tail_queue": float(np.percentile(tail, 95)),
         "mean_occupancy": float(np.asarray(res.occupancy).mean()),

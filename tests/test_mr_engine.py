@@ -1,0 +1,190 @@
+"""Multi-resource BF-J/S scan engine: bit-parity with the event-driven
+MultiResourceBFJS oracle (random streams and the uncollapsed synthesized
+Google-like trace), counted truncation, R-dimensional stream layout."""
+import jax
+import numpy as np
+import pytest
+
+from repro.core import synthesize_google_like_trace
+from repro.core.engine import (Workload, make_streams, run_policy,
+                               run_policy_streams, streams_from_trace)
+from repro.core.engine.bfjs_mr import run_bfjs_mr_streams
+from repro.core.multi_resource import (MultiResourceBFJS, alignment_scores,
+                                       simulate_mr_trace)
+
+
+def _vec_sampler(lo, hi, R):
+    def sampler(key, n):
+        return jax.random.uniform(key, (n, R), minval=lo, maxval=hi)
+    return sampler
+
+
+def _assert_bitmatch(res, ref, trunc_free=True):
+    if trunc_free:
+        assert int(res.truncated) == 0
+        assert int(res.dropped) == 0
+    np.testing.assert_array_equal(np.asarray(res.queue_len),
+                                  np.asarray(ref.queue_len))
+    np.testing.assert_array_equal(np.asarray(res.occupancy),
+                                  np.asarray(ref.occupancy))
+    np.testing.assert_array_equal(np.asarray(res.departed),
+                                  np.asarray(ref.departed))
+
+
+# ---------------------------------------------------------------------------
+# stream layout: (T, A_max, R) with R = 1 squeezing to the legacy plane
+# ---------------------------------------------------------------------------
+def test_streams_r_dimension():
+    st1 = make_streams(jax.random.PRNGKey(0), 1.0, 0.02,
+                       lambda k, n: jax.random.uniform(k, (n,)),
+                       L=2, K=4, A_max=3, horizon=20)
+    assert st1.sizes.shape == (20, 3) and st1.num_resources == 1
+    st2 = make_streams(jax.random.PRNGKey(0), 1.0, 0.02,
+                       _vec_sampler(0.1, 0.5, 2), L=2, K=4, A_max=3,
+                       horizon=20, num_resources=2)
+    assert st2.sizes.shape == (20, 3, 2) and st2.num_resources == 2
+    # non-size streams share the key chain across R — bitwise equal
+    np.testing.assert_array_equal(np.asarray(st1.n), np.asarray(st2.n))
+    np.testing.assert_array_equal(np.asarray(st1.durs), np.asarray(st2.durs))
+    with pytest.raises(ValueError, match="expected"):
+        make_streams(jax.random.PRNGKey(0), 1.0, 0.02,
+                     _vec_sampler(0.1, 0.5, 2), L=2, K=4, A_max=3,
+                     horizon=20, num_resources=3)
+
+
+def test_streams_from_trace_collapse_modes():
+    trace = synthesize_google_like_trace(300, 300, seed=1)
+    st_c = streams_from_trace(trace)
+    st_u = streams_from_trace(trace, collapse=False)
+    assert st_c.num_resources == 1 and st_c.sizes.ndim == 2
+    assert st_u.num_resources == 2 and st_u.sizes.shape[-1] == 2
+    np.testing.assert_array_equal(np.asarray(st_c.n), np.asarray(st_u.n))
+    # collapsed sizes == elementwise max of the uncollapsed planes (both on
+    # the quantization grid)
+    np.testing.assert_array_equal(
+        np.asarray(st_c.sizes),
+        np.asarray(st_u.sizes).max(axis=-1))
+
+
+# ---------------------------------------------------------------------------
+# alignment score: canonical f32 agrees between numpy and XLA
+# ---------------------------------------------------------------------------
+def test_alignment_score_numpy_jnp_agree():
+    from repro.core.quantize import RES
+    from repro.core.engine.ops import alignment_scores_jnp
+    rng = np.random.default_rng(0)
+    for R in (2, 3, 5):
+        avail = rng.integers(0, RES + 1, size=(17, R))
+        dem = rng.integers(1, RES + 1, size=(R,))
+        a = alignment_scores(avail.astype(np.float64),
+                             dem.astype(np.float64))
+        b = np.asarray(alignment_scores_jnp(jax.numpy.asarray(avail),
+                                            jax.numpy.asarray(dem)))
+        np.testing.assert_array_equal(a, b)
+        # the oracle scores on normalized dyadics (k/RES), the engine on
+        # grid integers: exactly a 2^-32 rescale (power of two => identical
+        # mantissas and rounding), so comparison order is identical too
+        an = alignment_scores(avail / RES, dem / RES)
+        np.testing.assert_array_equal(an.astype(np.float64) * 2.0 ** 32,
+                                      a.astype(np.float64))
+
+
+# ---------------------------------------------------------------------------
+# parity with the oracle
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("seed,lam,R", [(0, 0.2, 2), (1, 0.35, 2),
+                                        (2, 0.25, 3)])
+def test_mr_scan_bitmatches_oracle_on_random_streams(seed, lam, R):
+    wl = Workload(lam=lam, mu=0.05, sampler=_vec_sampler(0.05, 0.5, R),
+                  num_resources=R)
+    key = jax.random.PRNGKey(seed)
+    kw = dict(L=4, K=8, Qcap=256, A_max=5, horizon=500)
+    scan = run_policy(wl, policy="bfjs-mr", engine="scan", key=key,
+                      work_steps=24, **kw)
+    ref = run_policy(wl, policy="bfjs-mr", engine="reference", key=key, **kw)
+    _assert_bitmatch(scan, ref)
+
+
+def test_mr_scan_bitmatches_oracle_nonunit_capacity():
+    wl = Workload(lam=0.25, mu=0.05, sampler=_vec_sampler(0.05, 0.45, 2),
+                  num_resources=2, capacity=(1.0, 0.75))
+    key = jax.random.PRNGKey(4)
+    kw = dict(L=4, K=8, Qcap=256, A_max=5, horizon=400)
+    scan = run_policy(wl, policy="bfjs-mr", engine="scan", key=key,
+                      work_steps=24, **kw)
+    ref = run_policy(wl, policy="bfjs-mr", engine="reference", key=key, **kw)
+    _assert_bitmatch(scan, ref)
+
+
+def test_mr_google_like_trace_uncollapsed_bitmatch():
+    """The ISSUE acceptance path: the synthesized Google-like (cpu, mem)
+    trace replays UNCOLLAPSED through run_policy_streams(policy="bfjs-mr",
+    engine="scan") and bit-matches the event-driven oracle, truncated == 0.
+    """
+    trace = synthesize_google_like_trace(1200, 1200, seed=4)
+    streams = streams_from_trace(trace, collapse=False, horizon=2000)
+    scan = run_policy_streams(streams, policy="bfjs-mr", engine="scan",
+                              L=24, K=24, Qcap=512, work_steps=48)
+    ref = run_policy_streams(streams, policy="bfjs-mr", engine="reference",
+                             L=24)
+    _assert_bitmatch(scan, ref)
+    assert int(scan.departed[-1]) > 0
+    assert scan.occupancy.shape == (2000, 2)
+
+    # the same replay agrees with the simulate_mr_trace bridge (quantized
+    # demands, record_every=1) — oracle, bridge and engine tell one story
+    dem = np.stack([trace.cpu, trace.mem], axis=1)
+    bridge = simulate_mr_trace(MultiResourceBFJS(24, 2),
+                               trace.arrival_slots, dem, trace.durations,
+                               horizon=2000)
+    np.testing.assert_array_equal(np.asarray(scan.queue_len),
+                                  bridge.queue_lens)
+    np.testing.assert_array_equal(
+        np.asarray(scan.occupancy),
+        bridge.extras["occupancy"].astype(np.float32))
+    np.testing.assert_array_equal(np.asarray(scan.departed),
+                                  bridge.extras["departed_cum"])
+
+
+def test_mr_truncation_counted_not_silent():
+    """A starved work list and an undersized K must both show up in
+    `truncated`, and ample bounds must restore the exact trajectory."""
+    wl = Workload(lam=1.2, mu=0.1, sampler=_vec_sampler(0.05, 0.25, 2),
+                  num_resources=2)
+    key = jax.random.PRNGKey(9)
+    kw = dict(L=3, Qcap=256, A_max=6, horizon=300)
+    tiny = run_policy(wl, policy="bfjs-mr", engine="scan", key=key,
+                      K=16, work_steps=1, **kw)
+    small_k = run_policy(wl, policy="bfjs-mr", engine="scan", key=key,
+                         K=2, work_steps=32, **kw)
+    ample = run_policy(wl, policy="bfjs-mr", engine="scan", key=key,
+                       K=16, work_steps=32, **kw)
+    ref = run_policy(wl, policy="bfjs-mr", engine="reference", key=key,
+                     K=16, **kw)
+    assert int(tiny.truncated) > 0
+    assert int(small_k.truncated) > 0
+    _assert_bitmatch(ample, ref)
+
+
+def test_mr_engine_lifts_scalar_streams():
+    """R=1 streams replay through bfjs-mr (trivially vector-valued) — the
+    squeeze/lift contract of the (T, A_max, R) layout."""
+    rng = np.random.default_rng(3)
+    slots = np.sort(rng.integers(0, 120, 80))
+    sizes = rng.integers(1, 64, 80) / 64.0
+    durs = rng.integers(1, 30, 80)
+    st = streams_from_trace(slots, sizes, durs, horizon=160)
+    assert st.num_resources == 1
+    res = run_bfjs_mr_streams(st, L=4, K=8, Qcap=128,
+                              A_max=int(st.sizes.shape[1]), work_steps=24,
+                              capacity=(1.0,))
+    ref = run_policy_streams(st, policy="bfjs-mr", engine="reference", L=4)
+    _assert_bitmatch(res, ref)
+
+
+def test_mr_pallas_engine_rejected_loudly():
+    st = streams_from_trace(np.array([0, 1]), np.array([[0.3, 0.2],
+                                                        [0.4, 0.1]]),
+                            np.array([5, 5]), horizon=10)
+    with pytest.raises(ValueError, match="no Pallas kernel"):
+        run_policy_streams(st, policy="bfjs-mr", engine="pallas", L=2)

@@ -1,0 +1,91 @@
+"""core.trace.load_trace_csv: Google-2019/Alibaba-style CSV ingestion into
+Trace, on the checked-in 50-row fixture."""
+import os
+
+import numpy as np
+import pytest
+
+from repro.core import Trace, load_trace_csv
+from repro.core.engine import run_policy_streams, streams_from_trace
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "data",
+                       "google_like_50.csv")
+
+
+def test_load_fixture_shapes_and_domains():
+    trace = load_trace_csv(FIXTURE)
+    assert isinstance(trace, Trace)
+    assert len(trace) == 50
+    assert trace.arrival_slots.dtype == np.int64
+    assert int(trace.arrival_slots[0]) == 0        # re-based to slot 0
+    assert (np.diff(trace.arrival_slots) >= 0).all()
+    # normalized into the engines' (0, 1] job-size domain
+    for plane in (trace.cpu, trace.mem):
+        assert plane.min() > 0 and plane.max() <= 1.0
+    assert plane.max() == 1.0                      # rescaled by column max
+    assert (trace.durations >= 1).all()
+
+
+def test_load_fixture_values_round_trip():
+    """Spot-check the first data row of the fixture: job 4000 submits at
+    t=2.13s with 11.75 cores / 6.94 GiB for 216.4s."""
+    trace = load_trace_csv(FIXTURE, slot_seconds=1.0)
+    raw = np.loadtxt(FIXTURE, delimiter=",", skiprows=1)
+    assert np.isclose(trace.cpu[0], 11.75 / raw[:, 2].max())
+    assert np.isclose(trace.mem[0], 6.94 / raw[:, 3].max())
+    assert int(trace.durations[0]) == int(np.ceil(216.4))
+    # coarser slots compress arrivals and durations consistently
+    coarse = load_trace_csv(FIXTURE, slot_seconds=60.0)
+    assert coarse.arrival_slots.max() < trace.arrival_slots.max()
+    assert (coarse.durations >= 1).all()
+
+
+def test_loaded_trace_feeds_engines():
+    """Loader half of the real-trace-ingestion item: CSV -> Trace ->
+    streams_from_trace(collapse=False) -> bfjs-mr scan engine."""
+    trace = load_trace_csv(FIXTURE, slot_seconds=10.0)
+    # pad the horizon past the longest possible backlog (sum of durations)
+    # so every job departs inside the window
+    pad = int(trace.durations.sum()) + 10
+    streams = streams_from_trace(trace, collapse=False,
+                                 horizon=int(trace.arrival_slots[-1]) + pad)
+    assert streams.num_resources == 2
+    res = run_policy_streams(streams, policy="bfjs-mr", engine="scan",
+                             L=8, K=16, Qcap=128, work_steps=32)
+    ref = run_policy_streams(streams, policy="bfjs-mr", engine="reference",
+                             L=8)
+    assert int(res.truncated) == 0 and int(res.dropped) == 0
+    np.testing.assert_array_equal(np.asarray(res.queue_len),
+                                  np.asarray(ref.queue_len))
+    assert int(res.departed[-1]) == 50      # every job eventually served
+
+
+def test_loader_job_id_optional_and_normalize_false_strict(tmp_path):
+    p = tmp_path / "fractions.csv"
+    p.write_text("submit_time,cpu,mem,duration\n"      # no job_id column
+                 "0.0,0.25,0.5,10\n3.0,0.5,0.125,5\n")
+    trace = load_trace_csv(p, normalize=False)
+    assert len(trace) == 2
+    np.testing.assert_allclose(trace.cpu, [0.25, 0.5])
+    # absolute units under normalize=False must be rejected, not saturated
+    with pytest.raises(ValueError, match="normalize"):
+        load_trace_csv(FIXTURE, normalize=False)
+
+
+def test_loader_error_paths(tmp_path):
+    p = tmp_path / "bad.csv"
+    p.write_text("job_id,submit_time,cpu\n1,0.0,0.5\n")
+    with pytest.raises(ValueError, match="no column for 'mem'"):
+        load_trace_csv(p)
+    p2 = tmp_path / "empty.csv"
+    p2.write_text("")
+    with pytest.raises(ValueError, match="empty trace"):
+        load_trace_csv(p2)
+    p3 = tmp_path / "norows.csv"
+    p3.write_text("job_id,submit_time,cpu,mem,duration\n")
+    with pytest.raises(ValueError, match="no usable rows"):
+        load_trace_csv(p3)
+    p4 = tmp_path / "badrow.csv"
+    p4.write_text("job_id,submit_time,cpu,mem,duration\n1,x,0.5,0.5,10\n")
+    with pytest.raises(ValueError, match="bad row"):
+        load_trace_csv(p4)

@@ -1,0 +1,189 @@
+"""Workload-first engine API: spec validation, registry error paths, and
+the bit-match contract of the deprecated loose-argument shims."""
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.core.engine import (PolicySpec, Workload, available_policies,
+                               get_policy, monte_carlo_policy,
+                               register_policy, run_policy)
+
+
+def _uniform_sampler(lo, hi):
+    def sampler(key, n):
+        return jax.random.uniform(key, (n,), minval=lo, maxval=hi)
+    return sampler
+
+
+def _vec_sampler(lo, hi, R):
+    def sampler(key, n):
+        return jax.random.uniform(key, (n, R), minval=lo, maxval=hi)
+    return sampler
+
+
+# ---------------------------------------------------------------------------
+# Workload validation
+# ---------------------------------------------------------------------------
+def test_workload_normalizes_capacity():
+    wl = Workload(lam=1.0, mu=0.01, sampler=_uniform_sampler(0.1, 0.5))
+    assert wl.capacity == (1.0,)
+    wl2 = Workload(lam=1.0, mu=0.01, sampler=_vec_sampler(0.1, 0.5, 2),
+                   num_resources=2, capacity=0.5)
+    assert wl2.capacity == (0.5, 0.5)
+    assert wl2.mean_service == 100.0
+
+
+@pytest.mark.parametrize("kw,match", [
+    (dict(lam=-1.0), "lam"),
+    (dict(mu=0.0), "mu"),
+    (dict(mu=1.5), "mu"),
+    (dict(num_resources=0), "num_resources"),
+    (dict(capacity=(1.0, 1.0)), "capacity"),
+    (dict(capacity=0.0), "capacity"),
+    (dict(capacity=-2.0), "capacity"),
+])
+def test_workload_rejects_bad_fields(kw, match):
+    base = dict(lam=1.0, mu=0.01, sampler=_uniform_sampler(0.1, 0.5))
+    base.update(kw)
+    with pytest.raises(ValueError, match=match):
+        Workload(**base)
+
+
+def test_workload_sampler_shape_mismatch_caught():
+    """A scalar sampler on an R=2 workload (and vice versa) fails at the
+    API boundary with a shape message, not deep inside a scan."""
+    wl = Workload(lam=1.0, mu=0.01, sampler=_uniform_sampler(0.1, 0.5),
+                  num_resources=2, capacity=(1.0, 1.0))
+    with pytest.raises(ValueError, match="does not match num_resources"):
+        wl.check_sampler()
+    wl2 = Workload(lam=1.0, mu=0.01, sampler=_vec_sampler(0.1, 0.5, 2))
+    with pytest.raises(ValueError, match="does not match num_resources"):
+        wl2.check_sampler()
+    # the entry points call check_sampler themselves
+    with pytest.raises(ValueError, match="does not match num_resources"):
+        run_policy(wl2, policy="bfjs", key=jax.random.PRNGKey(0),
+                   L=2, K=4, Qcap=16, A_max=3, horizon=10)
+
+
+def test_single_resource_policies_reject_vector_workloads():
+    wl = Workload(lam=1.0, mu=0.01, sampler=_vec_sampler(0.1, 0.5, 2),
+                  num_resources=2)
+    for policy in ("bfjs", "vqs"):
+        with pytest.raises(ValueError, match="bfjs-mr"):
+            run_policy(wl, policy=policy, key=jax.random.PRNGKey(0),
+                       L=2, K=4, Qcap=16, A_max=3, horizon=10)
+
+
+# ---------------------------------------------------------------------------
+# registry error paths
+# ---------------------------------------------------------------------------
+def test_register_policy_rejects_duplicates():
+    spec = get_policy("bfjs")
+    with pytest.raises(ValueError, match="already registered"):
+        register_policy(spec)
+    # a fresh name registers fine and is then also a duplicate
+    tmp = PolicySpec(name="_test_tmp_policy", run=spec.run,
+                     run_streams=spec.run_streams,
+                     monte_carlo=spec.monte_carlo)
+    register_policy(tmp)
+    try:
+        assert "_test_tmp_policy" in available_policies()
+        with pytest.raises(ValueError, match="already registered"):
+            register_policy(tmp)
+    finally:
+        from repro.core.engine.api import _POLICIES
+        del _POLICIES["_test_tmp_policy"]
+
+
+def test_unknown_policy_and_engine_names():
+    wl = Workload(lam=1.0, mu=0.01, sampler=_uniform_sampler(0.1, 0.5))
+    with pytest.raises(ValueError, match="unknown policy"):
+        run_policy(wl, policy="nope", key=jax.random.PRNGKey(0))
+    with pytest.raises(ValueError, match="unknown engine"):
+        run_policy(wl, engine="nope", key=jax.random.PRNGKey(0))
+    assert set(available_policies()) >= {"bfjs", "bfjs-mr", "vqs"}
+
+
+def test_run_policy_rejects_mixed_forms():
+    wl = Workload(lam=1.0, mu=0.01, sampler=_uniform_sampler(0.1, 0.5))
+    with pytest.raises(TypeError, match="positional"):
+        run_policy(wl, 1.0, 0.01, wl.sampler)
+    with pytest.raises(TypeError, match="keys"):
+        monte_carlo_policy(wl, policy="bfjs")
+
+
+def test_run_policy_positional_key_mirrors_keyword():
+    """run_policy(wl, key, ...) and run_policy(wl, key=key, ...) are the
+    same call — positional key parity with monte_carlo_policy(wl, keys)."""
+    wl = Workload(lam=1.0, mu=0.02, sampler=_uniform_sampler(0.1, 0.6))
+    key = jax.random.PRNGKey(13)
+    kw = dict(L=4, K=6, Qcap=48, A_max=5, horizon=100)
+    a = run_policy(wl, key, policy="bfjs", **kw)
+    b = run_policy(wl, policy="bfjs", key=key, **kw)
+    for field in a._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(a, field)),
+                                      np.asarray(getattr(b, field)))
+    with pytest.raises(TypeError, match="exactly one"):
+        run_policy(wl, key, key=key)
+
+
+# ---------------------------------------------------------------------------
+# deprecation shims: warn AND bit-match
+# ---------------------------------------------------------------------------
+def test_legacy_run_policy_warns_and_bitmatches():
+    sampler = _uniform_sampler(0.1, 0.6)
+    key = jax.random.PRNGKey(11)
+    kw = dict(L=4, K=6, Qcap=48, A_max=5, horizon=150)
+    with pytest.warns(DeprecationWarning, match="Workload"):
+        old = run_policy(key, 1.0, 0.02, sampler, policy="bfjs",
+                         engine="scan", **kw)
+    wl = Workload(lam=1.0, mu=0.02, sampler=sampler)
+    new = run_policy(wl, policy="bfjs", engine="scan", key=key, **kw)
+    for field in old._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(old, field)),
+                                      np.asarray(getattr(new, field)))
+
+
+def test_legacy_monte_carlo_policy_warns_and_bitmatches():
+    sampler = _uniform_sampler(0.1, 0.6)
+    keys = jax.random.split(jax.random.PRNGKey(7), 3)
+    kw = dict(J=2, L=3, K=8, Qcap=64, A_max=4, horizon=100)
+    with pytest.warns(DeprecationWarning, match="Workload"):
+        old = monte_carlo_policy(keys, 0.8, 0.02, sampler, policy="vqs",
+                                 engine="scan", **kw)
+    wl = Workload(lam=0.8, mu=0.02, sampler=sampler)
+    new = monte_carlo_policy(wl, keys, policy="vqs", engine="scan", **kw)
+    for field in old._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(old, field)),
+                                      np.asarray(getattr(new, field)))
+
+
+# ---------------------------------------------------------------------------
+# serving planner: engine= knob mirrors policy=
+# ---------------------------------------------------------------------------
+def test_estimate_capacity_engine_knob():
+    from repro.serving.engine import estimate_capacity
+
+    kw = dict(ensembles=2, horizon=200, K=8, Qcap=64, A_max=4)
+    scan = estimate_capacity(3, 0.2, 20.0, engine="scan", seed=5, **kw)
+    ref = estimate_capacity(3, 0.2, 20.0, engine="reference", seed=5, **kw)
+    assert scan["engine"] == "scan" and ref["engine"] == "reference"
+    # same seed, same streams contract: the planner's numbers agree
+    assert scan["mean_tail_queue"] == ref["mean_tail_queue"]
+    assert scan["mean_occupancy"] == ref["mean_occupancy"]
+    assert scan["dropped"] == ref["dropped"] == 0
+    assert scan["truncated"] == 0
+
+
+def test_estimate_capacity_explicit_workload():
+    from repro.serving.engine import estimate_capacity
+
+    wl = Workload(lam=0.4, mu=0.02, sampler=_vec_sampler(0.05, 0.4, 2),
+                  num_resources=2)
+    out = estimate_capacity(3, lam=999.0, mean_service_slots=1.0,
+                            workload=wl, policy="bfjs-mr", ensembles=2,
+                            horizon=150, K=8, Qcap=64, A_max=4)
+    assert out["policy"] == "bfjs-mr"
+    assert out["slots_simulated"] == 300
