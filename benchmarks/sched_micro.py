@@ -247,6 +247,55 @@ def _bench_mr_engines():
         f"trunc={int(scan_res.truncated)}")
 
 
+def _bench_mr_ensemble():
+    """Multi-resource Monte-Carlo ensemble: the fused kernels/bfjs_mr
+    Pallas kernel (interpret mode off-TPU: correctness-grade wall clock)
+    vs the vmapped scan engine on the SAME pre-generated streams — the
+    tracked micro/mr_ensemble vs micro/mr_ensemble_scan pair.
+
+    Timed INTERLEAVED (see _bench_engines) and verified IN-PROCESS: the
+    kernel trajectory must be bit-identical to the vmapped scan engine
+    (bitmatch_vs_ref=1, trunc=0) for the comparison to count.
+    """
+    from repro.kernels.bfjs_mr.ops import bfjs_mr_simulate
+
+    if SMOKE:
+        G, L, K, Qcap, A_max, T = 2, 4, 8, 64, 5, 120
+    else:
+        G, L, K, Qcap, A_max, T = 4, 8, 16, 256, 6, 600
+    keys = jax.random.split(jax.random.PRNGKey(3), G)
+    streams = jax.vmap(lambda k: make_streams(
+        k, 0.5, 0.05, _mr_sampler, L=L, K=K, A_max=A_max, horizon=T,
+        num_resources=2))(keys)
+    kw = dict(L=L, K=K, Qcap=Qcap, A_max=A_max, work_steps=24)
+    results = {}
+
+    def run_pallas():
+        results["pallas"] = bfjs_mr_simulate(streams, **kw)
+        return results["pallas"].queue_len.block_until_ready()
+
+    def run_scan():
+        results["scan"] = bfjs_mr_simulate(streams, use_pallas=False, **kw)
+        return results["scan"].queue_len.block_until_ready()
+
+    best = timed_interleaved({"scan": run_scan, "pallas": run_pallas})
+
+    us_scan = best["scan"]
+    row("micro/mr_ensemble_scan", us_scan / (G * T),
+        f"engine=scan-vmap;R=2;ensembles={G};"
+        f"ensemble_slots_per_sec={G * T / (us_scan / 1e6):.0f}")
+    pal, ref = results["pallas"], results["scan"]
+    match = int(all(
+        (np.asarray(getattr(pal, f)) == np.asarray(getattr(ref, f))).all()
+        for f in pal._fields))
+    us = best["pallas"]
+    row("micro/mr_ensemble", us / (G * T),
+        f"engine=pallas-interp;R=2;ensembles={G};"
+        f"ensemble_slots_per_sec={G * T / (us / 1e6):.0f};"
+        f"bitmatch_vs_ref={match};"
+        f"trunc={int(np.asarray(pal.truncated).sum())}")
+
+
 def _bench_pallas_vqs():
     """Fused VQS slot-step kernel, interpret mode: correctness-grade
     timing."""
@@ -298,6 +347,7 @@ def main():
     _bench_vqs_ensemble()
     _bench_pallas_vqs()
     _bench_mr_engines()
+    _bench_mr_ensemble()
 
     # best-fit placement kernels: jnp scan vs Pallas(interpret)
     Lbf, Nbf = (128, 32) if SMOKE else (1024, 256)

@@ -26,8 +26,13 @@ _TRUNCATIONS: list[tuple[str, int]] = []
 
 
 def _mc_ensemble_throughput(policy: str, Qcap: int | None = None,
+                            workload: Workload | None = None,
+                            engines: tuple[str, ...] = ("reference", "scan"),
                             **policy_kw):
-    """Reference vs scan engine on a stable (rho < rho*) ensemble study."""
+    """Reference vs accelerator engines on a stable (rho < rho*) ensemble
+    study.  ``workload`` overrides the default scalar U(0.1, 0.6) workload
+    (multi-resource policies pass their vector sampler); every
+    non-reference engine's trunc count feeds the loud exit-code gate."""
     if SMOKE:
         G, kw = 2, dict(L=4, K=8, Qcap=64, A_max=6, horizon=150)
     else:
@@ -41,9 +46,10 @@ def _mc_ensemble_throughput(policy: str, Qcap: int | None = None,
         return jax.random.uniform(key, (n,), minval=0.1, maxval=0.6)
 
     keys = jax.random.split(jax.random.PRNGKey(7), G)
-    wl = Workload(lam=lam, mu=mu, sampler=sampler)
+    wl = workload if workload is not None \
+        else Workload(lam=lam, mu=mu, sampler=sampler)
     us_ref = None
-    for engine in ("reference", "scan"):
+    for engine in engines:
         def fn():
             r = monte_carlo_policy(wl, keys, policy=policy,
                                    engine=engine, **policy_kw, **kw)
@@ -65,6 +71,14 @@ def _mc_ensemble_throughput(policy: str, Qcap: int | None = None,
         row(name, us / (G * T), meta)
 
 
+def _mr_workload() -> Workload:
+    """Vector (cpu, mem) workload at the same operating point: U(0.1, 0.6)
+    per-resource demands, rho ~ 0.9 of capacity on the binding resource."""
+    def sampler(key, n):
+        return jax.random.uniform(key, (n, 2), minval=0.1, maxval=0.6)
+    return Workload(lam=0.4, mu=0.02, sampler=sampler, num_resources=2)
+
+
 def main():
     d = Uniform(0.2, 0.9)
     for n in (0, 1, 2):
@@ -84,6 +98,12 @@ def main():
     _mc_ensemble_throughput("bfjs")
     # VQS: sizes in U(0.1, 0.6) live above 2^-3, K=16 >= 2^3 packing bound
     _mc_ensemble_throughput("vqs", Qcap=2048, J=3)
+    # multi-resource BF-J/S: the scan engine AND the fused Pallas kernel
+    # (interpret off-TPU) against the event-driven oracle — both trunc
+    # counts feed the exit-code gate, so a diverging kernel fails the run
+    _mc_ensemble_throughput("bfjs-mr", workload=_mr_workload(),
+                            engines=("reference", "scan", "pallas"),
+                            work_steps=24)
 
     bad = [(name, t) for name, t in _TRUNCATIONS if t != 0]
     if bad:

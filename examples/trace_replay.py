@@ -73,13 +73,16 @@ def replay_vqs_jax(scaled, sizes, L, horizon, check=False):
     return row
 
 
-def replay_mr_jax(scaled, L, horizon, check=False):
+def replay_mr_jax(scaled, L, horizon, check=False, engine="scan"):
     """Replay the UNCOLLAPSED (cpu, mem) trace through the bfjs-mr scan
-    engine; --check bit-matches a prefix against the event-driven oracle."""
+    engine or the fused Pallas kernel (``engine="pallas"``, interpret mode
+    off-TPU); --check bit-matches a prefix against the event-driven
+    oracle."""
     import jax
 
-    streams = streams_from_trace(scaled, collapse=False, horizon=horizon)
-    res = run_policy_streams(streams, policy="bfjs-mr", engine="scan",
+    streams = streams_from_trace(scaled, collapse=False, horizon=horizon,
+                                 num_resources=2)
+    res = run_policy_streams(streams, policy="bfjs-mr", engine=engine,
                              L=L, K=64, Qcap=1 << 13, work_steps=64)
     qlen = np.asarray(res.queue_len)
     occ = np.asarray(res.occupancy)
@@ -92,15 +95,16 @@ def replay_mr_jax(scaled, L, horizon, check=False):
     }
     if check:
         assert row["trunc"] == 0 and row["dropped"] == 0, row
+        # trajectories are causal (slot t depends on slots <= t only), so
+        # the first h slots of the full run ARE the prefix trajectory — no
+        # second engine run needed, just the oracle on the prefix.
         h = min(horizon, 3_000)
         prefix = jax.tree.map(lambda x: x[:h], streams)
-        scan = run_policy_streams(prefix, policy="bfjs-mr", engine="scan",
-                                  L=L, K=64, Qcap=1 << 13, work_steps=64)
         ref = run_policy_streams(prefix, policy="bfjs-mr",
                                  engine="reference", L=L)
-        assert (np.asarray(scan.queue_len) == np.asarray(ref.queue_len)).all() \
-            and (np.asarray(scan.occupancy) == np.asarray(ref.occupancy)).all(), \
-            "bfjs-mr scan diverged from the MultiResourceBFJS oracle"
+        assert (qlen[:h] == np.asarray(ref.queue_len)).all() \
+            and (occ[:h] == np.asarray(ref.occupancy)).all(), \
+            f"bfjs-mr {engine} diverged from the MultiResourceBFJS oracle"
         row["bitmatch"] = 1
     return row
 
@@ -111,6 +115,12 @@ def main():
     ap.add_argument("--servers", type=int, default=100)
     ap.add_argument("--check", action="store_true",
                     help="assert the jax replay bit-matches numpy VQS")
+    ap.add_argument("--engine", choices=("scan", "pallas"), default="scan",
+                    help="accelerator engine for the uncollapsed bfjs-mr "
+                         "replay.  pallas = the fused kernels/bfjs_mr "
+                         "ensemble kernel; off-TPU it runs in interpret "
+                         "mode (correctness-grade, ~30x slower than scan "
+                         "— pair it with a smaller --tasks)")
     args = ap.parse_args()
 
     horizon = args.tasks  # ~1 task/slot on average
@@ -139,10 +149,12 @@ def main():
             f" trunc={row['trunc']} dropped={row['dropped']}"
         print(f"{scaling:>8} {'vqs[scan]':>12} {row['mean_Q']:>9.1f} "
               f"{row['util']:>6.3f} {row['done']:>8}{extra}")
-        row = replay_mr_jax(scaled, args.servers, h, check=args.check)
+        row = replay_mr_jax(scaled, args.servers, h, check=args.check,
+                            engine=args.engine)
         extra = " bitmatch=1(prefix)" if args.check else \
             f" trunc={row['trunc']} dropped={row['dropped']}"
-        print(f"{scaling:>8} {'mr[scan]':>12} {row['mean_Q']:>9.1f} "
+        print(f"{scaling:>8} {'mr[' + args.engine + ']':>12} "
+              f"{row['mean_Q']:>9.1f} "
               f"{row['util']:>6.3f} {row['done']:>8}{extra}")
 
 

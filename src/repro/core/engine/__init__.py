@@ -23,7 +23,8 @@ branch-free programs that run ON the accelerator:
 Engine contract (DESIGN.md §1): per policy, ``"scan"`` bit-matches
 ``"reference"`` while ``truncated == 0``, and ``"pallas"`` bit-matches
 ``"scan"`` — asserted by tests/test_jax_sched.py, tests/test_vqs_engine.py,
-tests/test_mr_engine.py and tests/test_kernels.py.
+tests/test_mr_engine.py, tests/test_kernels.py and, for every registered
+(policy, engine) cell at once, tests/test_engine_parity_matrix.py.
 """
 from .api import (ENGINES, PolicySpec, available_policies, get_policy,
                   monte_carlo_policy, register_policy, run_policy,

@@ -11,7 +11,11 @@ Multiresource-Job Scheduling*) — onto the fixed-shape accelerator stack as
   * ``engine="scan"``      — a branch-free ``lax.scan`` over slots with a
     bounded early-exit placement work list, the same program shape as the
     single-resource BF-J/S scan engine, generalized to ``(L, R)`` integer
-    occupancy planes and ``(Qcap, R)`` queued demand vectors.
+    occupancy planes and ``(Qcap, R)`` queued demand vectors;
+  * ``engine="pallas"``    — the fused slot-step kernel in
+    ``kernels/bfjs_mr`` (occupancy planes, queue state and counters stay
+    resident in VMEM; the Monte-Carlo ensemble is the kernel grid), which
+    bit-matches "scan" whenever ``truncated == 0``.
 
 Semantics (one slot, identical to the oracle's ``step``):
 
@@ -316,14 +320,16 @@ def _run_bfjs_mr_reference(streams: SchedStreams, *, L: int,
 def run_bfjs_mr_trace(streams: SchedStreams, *, L: int, K: int = 16,
                       Qcap: int = 512, A_max: int | None = None,
                       engine: str = "scan", work_steps: int | None = None,
-                      capacity: tuple[float, ...] | float = 1.0
-                      ) -> PolicyResult:
+                      capacity: tuple[float, ...] | float = 1.0,
+                      window: int | None = None) -> PolicyResult:
     """Run one multi-resource BF-J/S simulation over explicit streams.
 
     Accepts both trace-built streams (per-arrival duration lanes only —
     the ``streams_from_trace(trace, collapse=False)`` path) and
     ``make_streams`` full-width streams (the engine consumes the last
-    ``A_max`` per-arrival lanes; durations attach at arrival).
+    ``A_max`` per-arrival lanes; durations attach at arrival).  ``window``
+    is the Pallas engine's VMEM time-window length (must divide the
+    horizon; ignored by the other engines).
     """
     streams = _lift_sizes(streams)
     if A_max is None:
@@ -337,16 +343,20 @@ def run_bfjs_mr_trace(streams: SchedStreams, *, L: int, K: int = 16,
                                    A_max=A_max, work_steps=work_steps,
                                    capacity=capacity)
     if engine == "pallas":
-        raise ValueError(
-            "policy \"bfjs-mr\" has no Pallas kernel yet (ROADMAP item); "
-            "use engine=\"scan\" or \"reference\"")
+        from repro.kernels.bfjs_mr.ops import bfjs_mr_simulate
+        batched = jax.tree.map(lambda x: x[None], streams)
+        res = bfjs_mr_simulate(batched, L=L, K=K, Qcap=Qcap, A_max=A_max,
+                               work_steps=work_steps, capacity=capacity,
+                               window=window)
+        return jax.tree.map(lambda x: x[0], res)
     raise ValueError(f"unknown engine {engine!r}")
 
 
 def run_bfjs_mr_workload(workload, key, *, engine: str = "scan",
                          L: int = 8, K: int = 16, Qcap: int = 512,
                          A_max: int = 8, horizon: int = 10_000,
-                         work_steps: int | None = None) -> PolicyResult:
+                         work_steps: int | None = None,
+                         window: int | None = None) -> PolicyResult:
     """Simulate multi-resource BF-J/S for one ``Workload`` and key."""
     workload.check_sampler()
     streams = make_streams(key, workload.lam, workload.mu, workload.sampler,
@@ -354,22 +364,34 @@ def run_bfjs_mr_workload(workload, key, *, engine: str = "scan",
                            num_resources=workload.num_resources)
     return run_bfjs_mr_trace(streams, L=L, K=K, Qcap=Qcap, A_max=A_max,
                              engine=engine, work_steps=work_steps,
-                             capacity=workload.capacity)
+                             capacity=workload.capacity, window=window)
 
 
 def monte_carlo_bfjs_mr_workload(workload, keys, *, engine: str = "scan",
                                  L: int = 8, K: int = 16, Qcap: int = 512,
                                  A_max: int = 8, horizon: int = 10_000,
-                                 work_steps: int | None = None
-                                 ) -> PolicyResult:
+                                 work_steps: int | None = None,
+                                 window: int | None = None) -> PolicyResult:
     """One simulated cluster per key ("scan" vmaps; "reference" loops the
-    host-side oracle and stacks)."""
+    host-side oracle and stacks; "pallas" pre-generates every member's
+    streams and runs the fused kernel with the ensemble as the grid)."""
     workload.check_sampler()
     if engine == "reference":
         res = [run_bfjs_mr_workload(workload, k, engine=engine, L=L, K=K,
                                     Qcap=Qcap, A_max=A_max, horizon=horizon,
                                     work_steps=work_steps) for k in keys]
         return jax.tree.map(lambda *xs: jnp.stack(xs), *res)
+    if engine == "pallas":
+        from repro.kernels.bfjs_mr.ops import bfjs_mr_simulate
+        streams = jax.vmap(
+            lambda k: make_streams(k, workload.lam, workload.mu,
+                                   workload.sampler, L=L, K=K, A_max=A_max,
+                                   horizon=horizon,
+                                   num_resources=workload.num_resources)
+        )(keys)
+        return bfjs_mr_simulate(streams, L=L, K=K, Qcap=Qcap, A_max=A_max,
+                                work_steps=work_steps,
+                                capacity=workload.capacity, window=window)
     fn = functools.partial(run_bfjs_mr_workload, workload, engine=engine,
                            L=L, K=K, Qcap=Qcap, A_max=A_max,
                            horizon=horizon, work_steps=work_steps)

@@ -137,7 +137,8 @@ def make_streams(key: jax.Array, lam: float, mu: float,
 def streams_from_trace(trace_or_slots, sizes=None, durations=None, *,
                        horizon: int | None = None,
                        A_max: int | None = None,
-                       collapse: bool = True) -> SchedStreams:
+                       collapse: bool = True,
+                       num_resources: int | None = None) -> SchedStreams:
     """Build ``SchedStreams`` that replay a workload trace exactly.
 
     Accepts either raw arrays ``(arrival_slots, sizes, durations)`` — with
@@ -168,6 +169,11 @@ def streams_from_trace(trace_or_slots, sizes=None, durations=None, *,
     ``A_max`` defaults to the trace's actual max arrivals-per-slot so no
     arrival is ever silently dropped; passing a smaller ``A_max`` is an
     error rather than a truncation.
+
+    ``num_resources`` pins the R the caller's engine config expects
+    (``Workload.num_resources``): a trace whose resource count disagrees
+    raises with both shapes named instead of letting a squeezed or
+    truncated plane broadcast into the wrong engine downstream.
     """
     from ..quantize import RES, to_grid
 
@@ -191,6 +197,17 @@ def streams_from_trace(trace_or_slots, sizes=None, durations=None, *,
     arrival_slots = arrival_slots[order].astype(np.int64)
     sizes = np.asarray(sizes)
     R = 1 if sizes.ndim == 1 else int(sizes.shape[1])
+    if num_resources is not None and R != num_resources:
+        hint = ""
+        if num_resources == 1 and R > 1:
+            hint = " (or pass collapse=True)"
+        elif R == 1 and num_resources == 2:
+            hint = " (or pass collapse=False)"
+        raise ValueError(
+            f"trace carries R={R} resource plane(s) (sizes shape "
+            f"{tuple(sizes.shape)}) but the target workload expects "
+            f"num_resources={num_resources}; pass a matching trace"
+            f"{hint} instead of broadcasting")
     g = to_grid(sizes[order])
     durations = np.maximum(np.asarray(durations)[order].astype(np.int64), 1)
     if horizon is None:

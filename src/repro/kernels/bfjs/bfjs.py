@@ -28,6 +28,8 @@ import jax.numpy as jnp
 from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
+from repro.kernels.common import resolve_windows
+
 INF_SLOT = jnp.iinfo(jnp.int32).max
 BIG = 3.4e38  # ~f32 max; infeasibility sentinel (matches kernels/best_fit)
 
@@ -204,10 +206,7 @@ def bfjs_pallas(n: jax.Array, sizes: jax.Array, durs: jax.Array,
     horizon in one window).
     """
     G, T = n.shape
-    TW = T if window is None else window
-    if T % TW:
-        raise ValueError(f"window {TW} must divide horizon {T}")
-    NW = T // TW
+    TW, NW = resolve_windows(T, window)
     D = L * K + A_max
     kernel = functools.partial(
         _bfjs_kernel, L=L, K=K, Qcap=Qcap, A_max=A_max, W=work_steps, TW=TW)

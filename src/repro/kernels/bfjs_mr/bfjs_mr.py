@@ -1,0 +1,319 @@
+"""Pallas TPU kernel: fused multi-resource BF-J/S slot-step engine
+(DESIGN.md §8).
+
+One program instance simulates one independent cluster of the Monte-Carlo
+ensemble: the grid is ``(G, NW)`` — ensemble member x time window — and the
+whole mutable simulation state (the ``(L, K, R)`` per-slot demand vectors,
+departure slots, the ``(Qcap, R)`` queued-demand buffer with its
+duration/seq metadata and the running counters) lives in VMEM scratch that
+persists across the sequentially-executed time windows of a member.  Every
+slot step (departures -> enqueue -> BF-S refill -> alignment BF-J) runs
+inside the kernel with no HBM round-trips; only the pre-generated
+randomness streams are streamed in per window and only the per-slot
+outputs (queue length, per-resource occupancy, departures) stream out.
+
+The placement logic transcribes the bounded early-exit work list of
+``repro.core.engine.bfjs_mr.run_bfjs_mr_streams`` with broadcasted-iota
+masks and reductions in place of every dynamic index, and the resource
+axis STATICALLY UNROLLED: vector state is stored as R stacked 2D planes
+(demands ``(L, R*K)`` — plane r in columns ``[r*K, (r+1)*K)`` — and queue
+demands ``(R, Qcap)``), so every per-resource feasibility comparison is a
+plain 2D vector op.  The Tetris alignment score is accumulated in exactly
+the canonical float32 left-to-right order of
+``engine.ops.alignment_scores_jnp`` (product per resource, then adds in
+resource order), so argmin tie-breaks bit-match the scan engine and,
+through it, the event-driven ``MultiResourceBFJS`` oracle.  Trajectories
+are bit-compatible with the scan engine whenever ``truncated`` stays 0 —
+asserted by the interpret-mode parity + hypothesis suites in
+tests/test_mr_kernel.py and tests/test_engine_parity_matrix.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.quantize import RES
+from repro.kernels.common import resolve_windows
+
+INF_SLOT = jnp.iinfo(jnp.int32).max
+INT32_MAX = jnp.iinfo(jnp.int32).max
+
+
+def _bfjs_mr_kernel(n_ref, sizes_ref, durs_ref,
+                    qlen_ref, occ_out_ref, ndep_ref, dropped_ref, trunc_ref,
+                    dem_ref, dep_ref, occ_ref, qdem_ref, qmeta_ref, acc_ref,
+                    *, L, K, R, Qcap, A_max, W, TW, CAP, D):
+    w = pl.program_id(1)
+
+    @pl.when(w == 0)
+    def _init():
+        dem_ref[...] = jnp.zeros((L, R * K), jnp.int32)
+        dep_ref[...] = jnp.full((L, K), INF_SLOT, jnp.int32)
+        occ_ref[...] = jnp.zeros((L, R), jnp.int32)
+        qdem_ref[...] = jnp.zeros((R, Qcap), jnp.int32)
+        meta = jnp.ones((2, Qcap), jnp.int32)       # row 0: qdur (init 1)
+        qmeta_ref[...] = meta.at[1].set(-1)         # row 1: qseq (init -1)
+        acc_ref[...] = jnp.zeros((1, 4), jnp.int32)
+
+    l_col = jax.lax.broadcasted_iota(jnp.int32, (L, 1), 0)
+    k_row = jax.lax.broadcasted_iota(jnp.int32, (1, K), 1)
+    q_row = jax.lax.broadcasted_iota(jnp.int32, (1, Qcap), 1)
+    a_row = jax.lax.broadcasted_iota(jnp.int32, (1, A_max), 1)
+    aa = jax.lax.broadcasted_iota(jnp.int32, (A_max, A_max), 0)
+    aq = jax.lax.broadcasted_iota(jnp.int32, (A_max, Qcap), 1)
+
+    def slot_step(tt, carry):
+        q_cnt, seq0, dropped, trunc = carry
+        t = w * TW + tt
+
+        # 1. departures free their demand vectors
+        dep = dep_ref[...]
+        dem = dem_ref[...]
+        occ = occ_ref[...]
+        leaving = dep == t                                   # (L, K)
+        freed = leaving.any(axis=1, keepdims=True)           # (L, 1)
+        n_dep = leaving.sum()
+        occ = occ - jnp.concatenate(
+            [jnp.sum(jnp.where(leaving, dem[:, r * K:(r + 1) * K], 0),
+                     axis=1, keepdims=True) for r in range(R)], axis=1)
+        dem = jnp.where(jnp.concatenate([leaving] * R, axis=1), 0, dem)
+        dem_ref[...] = dem
+        occ_ref[...] = occ
+        dep_ref[...] = jnp.where(leaving, INF_SLOT, dep)
+
+        # 2. arrivals -> first empty queue positions (sequential masked
+        # insert: identical landing positions to the engine's
+        # cumsum/searchsorted; arrival a gets seq id seq0 + a)
+        n_t = n_ref[0, tt]
+        qdem = qdem_ref[...]
+        qmeta = qmeta_ref[...]
+        qdur, qseq = qmeta[0:1], qmeta[1:2]                  # (1, Qcap)
+        new_pos = jnp.full((1, A_max), -1, jnp.int32)
+        for a in range(A_max):
+            empty = qseq < 0
+            first = jnp.min(jnp.where(empty, q_row, Qcap))
+            valid = a < n_t
+            land = valid & (first < Qcap)
+            wm = land & (q_row == first)                     # (1, Qcap)
+            qdem = jnp.concatenate(
+                [jnp.where(wm, jnp.maximum(
+                    jnp.round(sizes_ref[0, tt, a * R + r] * RES),
+                    1.0).astype(jnp.int32), qdem[r:r + 1])
+                 for r in range(R)], axis=0)
+            qdur = jnp.where(wm, durs_ref[0, tt, D - A_max + a], qdur)
+            qseq = jnp.where(wm, seq0 + a, qseq)
+            new_pos = jnp.where(land & (a_row == a), first, new_pos)
+            dropped = dropped + jnp.where(valid & ~land, 1, 0)
+            q_cnt = q_cnt + jnp.where(land, 1, 0)
+        seq0 = seq0 + n_t
+        qdem_ref[...] = qdem
+        qmeta_ref[...] = jnp.concatenate([qdur, qseq], axis=0)
+        landed = new_pos >= 0                                # (1, A_max)
+        n_landed = landed.sum()
+        # landed arrival indices, compacted ascending, + their positions
+        rank = jnp.cumsum(landed.astype(jnp.int32), axis=1) - 1
+        comp = landed & (rank == aa)                         # (A, A)
+        pos_list = jnp.max(jnp.where(comp, new_pos, -1),
+                           axis=1)[None, :]                  # (1, A_max)
+
+        # 3+4. BF-S then BF-J as one bounded placement work list: each step
+        # does the BF-S placement for the lowest-index freed, unblocked
+        # server that still has a fitting queued job (job = largest total
+        # demand, earliest seq), else attempts the next landed arrival on
+        # the min-alignment feasible server.
+        def work(_, wcarry):
+            a_ptr, blocked, q_cnt, trunc = wcarry
+            dem = dem_ref[...]
+            dep = dep_ref[...]
+            occ = occ_ref[...]
+            qdem = qdem_ref[...]
+            qmeta = qmeta_ref[...]
+            qdur, qseq = qmeta[0:1], qmeta[1:2]
+            avail = [CAP[r] - occ[:, r:r + 1] for r in range(R)]  # (L, 1)
+
+            # BF-S candidate
+            fits = (freed & ~blocked) & (qseq >= 0)          # (L, Qcap)
+            for r in range(R):
+                fits = fits & (qdem[r:r + 1] <= avail[r])
+            has_fit = fits.any(axis=1, keepdims=True)
+            cur = jnp.min(jnp.where(has_fit, l_col, L))
+            any_bfs = cur < L
+            fit_cur = ((l_col == cur) & fits).any(axis=0,
+                                                  keepdims=True)  # (1, Qcap)
+            tot = jnp.zeros((1, Qcap), jnp.int32)
+            for r in range(R):
+                tot = tot + qdem[r:r + 1]
+            best_tot = jnp.max(jnp.where(fit_cur, tot, -1))
+            cand = fit_cur & (tot == best_tot)
+            best_seq = jnp.min(jnp.where(cand, qseq, INT32_MAX))
+            j_bfs = jnp.min(jnp.where(cand & (qseq == best_seq), q_row,
+                                      Qcap))
+            j_bfs = jnp.minimum(j_bfs, Qcap - 1)
+
+            # BF-J candidate: next landed arrival still in the queue, on
+            # the min-alignment feasible server (any server, not just
+            # freed — the oracle's _best_server scans all L).
+            is_bfj = (~any_bfs) & (a_ptr < n_landed)
+            ap = jnp.minimum(a_ptr, A_max - 1)
+            pos = jnp.max(jnp.where(a_row == ap, pos_list, -1))
+            posc = jnp.maximum(pos, 0)
+            seq_pos = jnp.sum(jnp.where(q_row == posc, qseq, 0))
+            present = is_bfj & (pos >= 0) & (seq_pos >= 0)
+            d_bfj = [jnp.sum(jnp.where(q_row == posc, qdem[r:r + 1], 0))
+                     for r in range(R)]
+            feas = jnp.ones((L, 1), bool)
+            for r in range(R):
+                feas = feas & (d_bfj[r] <= avail[r])
+            # canonical-f32 alignment score, left-to-right over resources
+            # (identical op sequence to engine.ops.alignment_scores_jnp)
+            scores = avail[0].astype(jnp.float32) \
+                * d_bfj[0].astype(jnp.float32)
+            for r in range(1, R):
+                scores = scores + avail[r].astype(jnp.float32) \
+                    * d_bfj[r].astype(jnp.float32)
+            masked = jnp.where(feas, scores, jnp.inf)
+            best = jnp.min(masked)
+            s_bfj = jnp.min(jnp.where(feas & (masked == best), l_col, L))
+            s_bfj = jnp.minimum(s_bfj, L - 1)
+            ok_bfj = present & feas.any()
+
+            do = any_bfs | ok_bfj
+            tgt = jnp.where(any_bfs, jnp.minimum(cur, L - 1), s_bfj)
+            qidx = jnp.where(any_bfs, j_bfs, posc)
+            d_place = [jnp.sum(jnp.where(q_row == qidx, qdem[r:r + 1], 0))
+                       for r in range(R)]
+            dur = jnp.sum(jnp.where(q_row == qidx, qdur, 0))
+
+            # first empty slot of the target server
+            dep_row = jnp.sum(jnp.where(l_col == tgt, dep, 0),
+                              axis=0, keepdims=True)         # (1, K)
+            slot = jnp.min(jnp.where(dep_row == INF_SLOT, k_row, K))
+            ok_slot = slot < K
+            place = do & ok_slot
+            wm = (l_col == tgt) & (k_row == jnp.minimum(slot, K - 1)) \
+                & place                                      # (L, K)
+            dem_ref[...] = jnp.concatenate(
+                [jnp.where(wm, d_place[r], dem[:, r * K:(r + 1) * K])
+                 for r in range(R)], axis=1)
+            dep_ref[...] = jnp.where(wm, t + dur, dep)
+            add_vec = jnp.concatenate(
+                [d.reshape(1, 1) for d in d_place], axis=1)  # (1, R)
+            occ_ref[...] = occ + jnp.where((l_col == tgt) & place,
+                                           add_vec, 0)
+            clr = (q_row == qidx) & place
+            qdem_ref[...] = jnp.concatenate(
+                [jnp.where(clr, 0, qdem[r:r + 1]) for r in range(R)],
+                axis=0)
+            qmeta_ref[...] = jnp.concatenate(
+                [qdur, jnp.where(clr, -1, qseq)], axis=0)
+            q_cnt = q_cnt - place.astype(jnp.int32)
+            # K-full server: the oracle would place; count, don't spin.
+            trunc = trunc + (do & ~ok_slot).astype(jnp.int32)
+            blocked = blocked | (any_bfs & ~ok_slot)
+            a_ptr = a_ptr + is_bfj.astype(jnp.int32)
+            return a_ptr, blocked, q_cnt, trunc
+
+        a_ptr, blocked, q_cnt, trunc = jax.lax.fori_loop(
+            0, W, work, (jnp.int32(0), jnp.zeros((L, 1), bool), q_cnt,
+                         trunc))
+
+        # saturation check (same rule as the scan engine): work the oracle
+        # would still do => the bounded list diverged this slot.
+        occ = occ_ref[...]
+        qdem = qdem_ref[...]
+        qseq = qmeta_ref[...][1:2]
+        avail = [CAP[r] - occ[:, r:r + 1] for r in range(R)]
+        fits = (freed & ~blocked) & (qseq >= 0)
+        for r in range(R):
+            fits = fits & (qdem[r:r + 1] <= avail[r])
+        pend_bfs = fits.any()
+        left = (a_row >= a_ptr) & (a_row < n_landed)
+        gmask = aq == jnp.maximum(pos_list, 0).T             # (A_max, Qcap)
+        seq_at = jnp.sum(jnp.where(gmask, qseq, 0), axis=1)[None, :]
+        present_l = left & (pos_list >= 0) & (seq_at >= 0)
+        feas_l = jnp.ones((A_max, L), bool)
+        for r in range(R):
+            d_l = jnp.sum(jnp.where(gmask, qdem[r:r + 1], 0),
+                          axis=1)[:, None]                   # (A_max, 1)
+            feas_l = feas_l & (d_l <= avail[r].T)
+        pend_bfj = (present_l & feas_l.any(axis=1)[None, :]).any()
+        trunc = trunc + (pend_bfs | pend_bfj).astype(jnp.int32)
+
+        qlen_ref[0, tt] = q_cnt
+        occ_out_ref[0, tt] = occ_ref[...].sum(axis=0).astype(
+            jnp.float32) / RES
+        ndep_ref[0, tt] = n_dep.astype(jnp.int32)
+        return q_cnt, seq0, dropped, trunc
+
+    acc = acc_ref[...]
+    q_cnt, seq0, dropped, trunc = jax.lax.fori_loop(
+        0, TW, slot_step, (acc[0, 0], acc[0, 1], acc[0, 2], acc[0, 3]))
+    acc_ref[...] = jnp.stack([q_cnt, seq0, dropped, trunc])[None, :]
+    dropped_ref[0, 0] = dropped
+    trunc_ref[0, 0] = trunc
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("L", "K", "Qcap", "A_max", "work_steps", "capacity",
+                     "window", "interpret"))
+def bfjs_mr_pallas(n: jax.Array, sizes: jax.Array, durs: jax.Array,
+                   L: int, K: int, Qcap: int, A_max: int,
+                   work_steps: int, capacity: tuple[float, ...],
+                   window: int | None = None, interpret: bool = False):
+    """Run the fused multi-resource BF-J/S slot engine on an ensemble.
+
+    n (G, T) int32, sizes (G, T, A_max, R) f32, durs (G, T, D) int32 with
+    the per-arrival durations in the last A_max lanes (D = A_max for
+    streams_from_trace, D = L*K+A_max for make_streams) — one pre-generated
+    stream set per ensemble member.  ``capacity`` is the per-resource
+    server capacity tuple (length R).  Returns per-slot (queue_len (G, T),
+    occupancy (G, T, R), departures (G, T)) plus (dropped, truncated) of
+    shape (G,).
+
+    ``window`` splits the horizon into VMEM-sized chunks: the grid is
+    (G, T//window) and simulation state persists in scratch across a
+    member's sequentially-executed windows.  Must divide T (default: whole
+    horizon in one window).
+    """
+    G, T, A_sz, R = sizes.shape
+    if A_sz != A_max:
+        raise ValueError(f"sizes carry A_max={A_sz}, expected {A_max}")
+    if len(capacity) != R:
+        raise ValueError(
+            f"capacity has {len(capacity)} entries for R={R} resources")
+    TW, NW = resolve_windows(T, window)
+    D = durs.shape[-1]
+    CAP = tuple(round(c * RES) for c in capacity)
+    kernel = functools.partial(
+        _bfjs_mr_kernel, L=L, K=K, R=R, Qcap=Qcap, A_max=A_max,
+        W=work_steps, TW=TW, CAP=CAP, D=D)
+    qlen, occ, ndep, dropped, trunc = pl.pallas_call(
+        kernel,
+        grid=(G, NW),
+        out_shape=(jax.ShapeDtypeStruct((G, T), jnp.int32),
+                   jax.ShapeDtypeStruct((G, T, R), jnp.float32),
+                   jax.ShapeDtypeStruct((G, T), jnp.int32),
+                   jax.ShapeDtypeStruct((G, 1), jnp.int32),
+                   jax.ShapeDtypeStruct((G, 1), jnp.int32)),
+        in_specs=[pl.BlockSpec((1, TW), lambda g, w: (g, w)),
+                  pl.BlockSpec((1, TW, A_max * R), lambda g, w: (g, w, 0)),
+                  pl.BlockSpec((1, TW, D), lambda g, w: (g, w, 0))],
+        out_specs=(pl.BlockSpec((1, TW), lambda g, w: (g, w)),
+                   pl.BlockSpec((1, TW, R), lambda g, w: (g, w, 0)),
+                   pl.BlockSpec((1, TW), lambda g, w: (g, w)),
+                   pl.BlockSpec((1, 1), lambda g, w: (g, 0)),
+                   pl.BlockSpec((1, 1), lambda g, w: (g, 0))),
+        scratch_shapes=[pltpu.VMEM((L, R * K), jnp.int32),
+                        pltpu.VMEM((L, K), jnp.int32),
+                        pltpu.VMEM((L, R), jnp.int32),
+                        pltpu.VMEM((R, Qcap), jnp.int32),
+                        pltpu.VMEM((2, Qcap), jnp.int32),
+                        pltpu.VMEM((1, 4), jnp.int32)],
+        interpret=interpret,
+    )(n, sizes.reshape(G, T, A_max * R), durs)
+    return qlen, occ, ndep, dropped[:, 0], trunc[:, 0]

@@ -1,0 +1,46 @@
+"""Public entry point: Pallas on TPU, interpret-mode elsewhere."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.engine.bfjs_mr import _norm_capacity
+from repro.core.engine.streams import PolicyResult, SchedStreams, \
+    resolve_work_steps
+from repro.kernels.common import interpret_default
+
+from .bfjs_mr import bfjs_mr_pallas
+from .ref import bfjs_mr_ref
+
+
+def _lift_batched_sizes(streams: SchedStreams) -> SchedStreams:
+    """The kernel consumes (G, T, A_max, R) sizes; lift squeezed R=1
+    ensemble streams (same contract as engine.bfjs_mr._lift_sizes)."""
+    if streams.sizes.ndim == streams.durs.ndim:
+        return streams._replace(sizes=streams.sizes[..., None])
+    return streams
+
+
+def bfjs_mr_simulate(streams: SchedStreams, L: int, K: int, Qcap: int,
+                     A_max: int, work_steps: int | None = None,
+                     capacity: tuple[float, ...] | float = 1.0,
+                     window: int | None = None,
+                     use_pallas: bool = True) -> PolicyResult:
+    """Fused-kernel Monte-Carlo multi-resource BF-J/S: one grid cell per
+    ensemble member.
+
+    streams holds (G, ...)-shaped pre-generated randomness
+    (engine.streams.make_streams vmapped over the ensemble keys, or a
+    trace-built stream batched with a leading axis)."""
+    streams = _lift_batched_sizes(streams)
+    R = int(streams.sizes.shape[-1])
+    capacity = _norm_capacity(capacity, R)
+    work_steps = resolve_work_steps(work_steps, A_max)
+    if not use_pallas:
+        return bfjs_mr_ref(streams.n, streams.sizes, streams.durs, L=L,
+                           K=K, Qcap=Qcap, A_max=A_max,
+                           work_steps=work_steps, capacity=capacity)
+    qlen, occ, ndep, dropped, trunc = bfjs_mr_pallas(
+        streams.n, streams.sizes, streams.durs, L=L, K=K, Qcap=Qcap,
+        A_max=A_max, work_steps=work_steps, capacity=capacity,
+        window=window, interpret=interpret_default())
+    return PolicyResult(qlen, occ, jnp.cumsum(ndep, axis=1), dropped, trunc)

@@ -17,3 +17,18 @@ BIG = 3.4e38
 def interpret_default() -> bool:
     """Pallas interpret mode everywhere but real TPUs (correctness-grade)."""
     return jax.default_backend() != "tpu"
+
+
+def resolve_windows(T: int, window: int | None) -> tuple[int, int]:
+    """Split a horizon into equal VMEM-sized time windows.
+
+    Every fused slot-step kernel runs on a ``(G, NW)`` grid — ensemble
+    member x time window — with simulation state persisting in VMEM scratch
+    across a member's sequentially-executed windows.  Returns ``(TW, NW)``
+    (window length, window count); ``window=None`` means the whole horizon
+    in one window, and a window that does not divide the horizon is an
+    error (a ragged tail would replay slots twice)."""
+    TW = T if window is None else window
+    if T % TW:
+        raise ValueError(f"window {TW} must divide horizon {T}")
+    return TW, T // TW

@@ -32,6 +32,7 @@ from jax.experimental import pallas as pl
 from jax.experimental.pallas import tpu as pltpu
 
 from repro.core.quantize import RES, TWO_THIRDS
+from repro.kernels.common import resolve_windows
 
 INF_SLOT = jnp.iinfo(jnp.int32).max
 CAP = RES
@@ -294,10 +295,7 @@ def vqs_pallas(n: jax.Array, sizes: jax.Array, durs: jax.Array,
     from repro.core.engine.ops import k_red_jnp
 
     G, T = n.shape
-    TW = T if window is None else window
-    if T % TW:
-        raise ValueError(f"window {TW} must divide horizon {T}")
-    NW = T // TW
+    TW, NW = resolve_windows(T, window)
     D = durs.shape[-1]
     confs = k_red_jnp(J)
     C = confs.shape[0]

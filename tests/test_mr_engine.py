@@ -2,12 +2,14 @@
 MultiResourceBFJS oracle (random streams and the uncollapsed synthesized
 Google-like trace), counted truncation, R-dimensional stream layout."""
 import jax
+import jax.numpy as jnp
 import numpy as np
 import pytest
 
 from repro.core import synthesize_google_like_trace
-from repro.core.engine import (Workload, make_streams, run_policy,
-                               run_policy_streams, streams_from_trace)
+from repro.core.engine import (SchedStreams, Workload, make_streams,
+                               run_policy, run_policy_streams,
+                               streams_from_trace)
 from repro.core.engine.bfjs_mr import run_bfjs_mr_streams
 from repro.core.multi_resource import (MultiResourceBFJS, alignment_scores,
                                        simulate_mr_trace)
@@ -182,9 +184,154 @@ def test_mr_engine_lifts_scalar_streams():
     _assert_bitmatch(res, ref)
 
 
-def test_mr_pallas_engine_rejected_loudly():
+def test_mr_pallas_engine_bitmatches_scan_on_trace_streams():
+    """engine="pallas" (interpret off-TPU) replays trace streams with the
+    exact scan-engine trajectory — the PR 3 NotImplementedError is gone."""
+    st = streams_from_trace(np.array([0, 1, 1, 3]),
+                            np.array([[0.3, 0.2], [0.4, 0.1],
+                                      [0.2, 0.6], [0.5, 0.5]]),
+                            np.array([5, 3, 4, 2]), horizon=12)
+    kw = dict(L=2, K=4, Qcap=8, work_steps=12)
+    pal = run_policy_streams(st, policy="bfjs-mr", engine="pallas", **kw)
+    scan = run_policy_streams(st, policy="bfjs-mr", engine="scan", **kw)
+    _assert_bitmatch(pal, scan)
+    with pytest.raises(ValueError, match="unknown engine"):
+        run_policy_streams(st, policy="bfjs-mr", engine="cuda", L=2)
+
+
+def test_mr_pallas_window_must_divide_horizon():
     st = streams_from_trace(np.array([0, 1]), np.array([[0.3, 0.2],
                                                         [0.4, 0.1]]),
                             np.array([5, 5]), horizon=10)
-    with pytest.raises(ValueError, match="no Pallas kernel"):
-        run_policy_streams(st, policy="bfjs-mr", engine="pallas", L=2)
+    with pytest.raises(ValueError, match="divide"):
+        run_policy_streams(st, policy="bfjs-mr", engine="pallas", L=2,
+                           window=3)
+
+
+def test_mr_monte_carlo_pallas_grid_matches_scan_vmap():
+    """monte_carlo_policy(engine="pallas"): the ensemble is the kernel
+    grid; trajectories equal the vmapped scan engine member by member."""
+    from repro.core.engine import monte_carlo_policy
+
+    wl = Workload(lam=0.4, mu=0.1, sampler=_vec_sampler(0.05, 0.5, 2),
+                  num_resources=2)
+    keys = jax.random.split(jax.random.PRNGKey(2), 3)
+    kw = dict(L=3, K=8, Qcap=64, A_max=4, horizon=120, work_steps=16)
+    pal = monte_carlo_policy(wl, keys, policy="bfjs-mr", engine="pallas",
+                             window=40, **kw)
+    scan = monte_carlo_policy(wl, keys, policy="bfjs-mr", engine="scan",
+                              **kw)
+    _assert_bitmatch(pal, scan, trunc_free=False)
+    np.testing.assert_array_equal(np.asarray(pal.dropped),
+                                  np.asarray(scan.dropped))
+    np.testing.assert_array_equal(np.asarray(pal.truncated),
+                                  np.asarray(scan.truncated))
+    assert int(np.asarray(scan.truncated).sum()) == 0
+
+
+# ---------------------------------------------------------------------------
+# edge-case regressions (exact counters, scan and pallas in lockstep)
+# ---------------------------------------------------------------------------
+def _both_engines(streams, **kw):
+    window = kw.pop("window", None)
+    scan = run_policy_streams(streams, policy="bfjs-mr", engine="scan", **kw)
+    pal = run_policy_streams(streams, policy="bfjs-mr", engine="pallas",
+                             window=window, **kw)
+    _assert_bitmatch(pal, scan, trunc_free=False)
+    assert int(pal.dropped) == int(scan.dropped)
+    assert int(pal.truncated) == int(scan.truncated)
+    return scan
+
+
+def test_mr_r1_squeeze_path_equals_plain_bfjs():
+    """With R = 1 the alignment score degenerates to Best-Fit: on streams
+    with globally distinct grid sizes (no tie-breaks to disagree on) and a
+    constant service duration (so the sequential-draw vs attach-at-arrival
+    duration layouts coincide), bfjs-mr reproduces plain bfjs exactly."""
+    from repro.core.engine import run_bfjs_streams
+
+    T, A_max, L, K, Qcap = 80, 3, 3, 8, 64
+    rng = np.random.default_rng(0)
+    n = rng.integers(0, A_max + 1, T).astype(np.int32)
+    sizes = (rng.permutation(np.arange(1, T * A_max + 1))
+             .reshape(T, A_max) / 512.0).astype(np.float32)
+    durs = np.full((T, L * K + A_max), 7, np.int32)
+    streams = SchedStreams(jnp.asarray(n), jnp.asarray(sizes),
+                           jnp.asarray(durs))
+    bfjs = run_bfjs_streams(streams, L=L, K=K, Qcap=Qcap, A_max=A_max,
+                            work_steps=24)
+    mr = _both_engines(streams, L=L, K=K, Qcap=Qcap, A_max=A_max,
+                       work_steps=24)
+    assert int(mr.truncated) == 0 and int(bfjs.truncated) == 0
+    np.testing.assert_array_equal(np.asarray(mr.queue_len),
+                                  np.asarray(bfjs.queue_len))
+    np.testing.assert_array_equal(np.asarray(mr.departed),
+                                  np.asarray(bfjs.departed))
+    np.testing.assert_array_equal(np.asarray(mr.occupancy)[:, 0],
+                                  np.asarray(bfjs.occupancy))
+    assert int(mr.departed[-1]) > 0
+
+
+def test_mr_zero_arrival_windows():
+    """All-empty slots: every per-slot output and counter is exactly 0."""
+    T, A_max = 40, 3
+    streams = SchedStreams(jnp.zeros(T, jnp.int32),
+                           jnp.full((T, A_max, 2), 0.3, jnp.float32),
+                           jnp.ones((T, A_max), jnp.int32))
+    res = _both_engines(streams, L=2, K=4, Qcap=8, work_steps=8,
+                        window=20)
+    assert np.asarray(res.queue_len).tolist() == [0] * T
+    np.testing.assert_array_equal(np.asarray(res.occupancy),
+                                  np.zeros((T, 2), np.float32))
+    assert np.asarray(res.departed).tolist() == [0] * T
+    assert int(res.dropped) == 0 and int(res.truncated) == 0
+
+
+def test_mr_all_jobs_oversized_everything_queues():
+    """Demands infeasible on one resource (cpu 0.8 > capacity 0.5): no job
+    ever places — the queue grows by exactly one per slot until Qcap, the
+    overflow is counted as dropped, and nothing departs or truncates."""
+    T, Qcap = 20, 8
+    streams = SchedStreams(
+        jnp.ones(T, jnp.int32),
+        jnp.tile(jnp.asarray([[0.8, 0.1]], jnp.float32)[None], (T, 1, 1)),
+        jnp.full((T, 1), 5, jnp.int32))
+    res = _both_engines(streams, L=4, K=4, Qcap=Qcap, work_steps=8,
+                        capacity=(0.5, 1.0))
+    np.testing.assert_array_equal(
+        np.asarray(res.queue_len), np.minimum(np.arange(1, T + 1), Qcap))
+    assert int(res.dropped) == T - Qcap
+    assert int(res.departed[-1]) == 0
+    np.testing.assert_array_equal(np.asarray(res.occupancy),
+                                  np.zeros((T, 2), np.float32))
+    assert int(res.truncated) == 0
+
+
+def test_mr_qcap_overflow_counted_as_dropped():
+    """A burst beyond Qcap drops the excess arrivals, counted exactly —
+    landed jobs keep first-empty positions and still place in order."""
+    T, A_max, Qcap = 4, 6, 5
+    n = jnp.asarray([6, 6, 0, 0], jnp.int32)
+    sizes = jnp.full((T, A_max, 2), 0.9, jnp.float32)  # 1 job per server
+    durs = jnp.full((T, A_max), 50, jnp.int32)         # nothing departs
+    res = _both_engines(SchedStreams(n, sizes, durs), L=2, K=4, Qcap=Qcap,
+                        work_steps=16)
+    # slot 0: 6 arrive, 5 land (1 dropped), 2 place -> 3 queued;
+    # slot 1: 6 arrive, 2 land in the freed buffer slots (4 dropped)
+    assert np.asarray(res.queue_len).tolist() == [3, 5, 5, 5]
+    assert int(res.dropped) == 1 + 4
+    assert int(res.departed[-1]) == 0
+    assert int(res.truncated) == 0
+
+
+def test_streams_from_trace_num_resources_mismatch_raises():
+    """An R=2 trace must not broadcast into an R=3 (or collapsed R=1)
+    engine config: both shapes are named in the error."""
+    trace = synthesize_google_like_trace(60, 60, seed=0)
+    with pytest.raises(ValueError, match=r"R=2.*num_resources=3"):
+        streams_from_trace(trace, collapse=False, num_resources=3)
+    with pytest.raises(ValueError, match=r"R=1.*num_resources=2"):
+        streams_from_trace(trace, collapse=True, num_resources=2)
+    # matching R passes through untouched
+    st = streams_from_trace(trace, collapse=False, num_resources=2)
+    assert st.num_resources == 2
