@@ -24,6 +24,11 @@ from repro.core.engine import Workload, monte_carlo_policy
 #: main() — any nonzero count aborts the benchmark run with exit code 1.
 _TRUNCATIONS: list[tuple[str, int]] = []
 
+#: (row name, violation) fault-accounting failures — scan ``lost``
+#: diverging from the reference oracle, or a broken ``preempted ==
+#: requeued + lost`` invariant; same nonzero-exit treatment.
+_FAULT_VIOLATIONS: list[tuple[str, str]] = []
+
 
 def _mc_ensemble_throughput(policy: str, Qcap: int | None = None,
                             workload: Workload | None = None,
@@ -71,6 +76,58 @@ def _mc_ensemble_throughput(policy: str, Qcap: int | None = None,
         row(name, us / (G * T), meta)
 
 
+def _faulted_mc_throughput():
+    """Fault-injected Monte-Carlo ensemble (DESIGN.md §9): reference vs
+    scan under a two-state Markov capacity-shock plane.  Beyond the trunc
+    gate, the fault accounting itself is gated — scan ``lost`` must equal
+    the oracle's and every engine must satisfy ``preempted == requeued +
+    lost`` — so a silently-dropped preemption fails the benchmark run."""
+    if SMOKE:
+        G, kw = 2, dict(L=4, K=8, Qcap=64, A_max=6, horizon=150)
+    else:
+        G, kw = 8, dict(L=8, K=16, Qcap=256, A_max=6, horizon=1_500)
+    T = kw["horizon"]
+
+    def sampler(key, n):
+        return jax.random.uniform(key, (n,), minval=0.1, maxval=0.6)
+
+    wl = Workload(lam=0.4, mu=0.02, sampler=sampler)
+    keys = jax.random.split(jax.random.PRNGKey(11), G)
+    fault = dict(fault_rate=0.01, repair_rate=0.2)
+    lost_by_engine = {}
+    us_ref = None
+    for engine in ("reference", "scan"):
+        def fn():
+            r = monte_carlo_policy(wl, keys, policy="bfjs", engine=engine,
+                                   **fault, **kw)
+            r.queue_len.block_until_ready()
+            return r
+        res, us = timed_best(fn, repeat=2)
+        pre = int(np.asarray(res.preempted).sum())
+        req = int(np.asarray(res.requeued).sum())
+        lost = int(np.asarray(res.lost).sum())
+        lost_by_engine[engine] = lost
+        name = f"stability/faulted_mc_{engine}"
+        meta = (f"ensembles={G};ensemble_slots_per_sec="
+                f"{G * T / (us / 1e6):.0f};preempted={pre};requeued={req};"
+                f"lost={lost}")
+        if engine == "reference":
+            us_ref = us
+        else:
+            trunc = int(np.asarray(res.truncated).sum())
+            meta += f";speedup_vs_ref={us_ref / us:.2f}x;trunc={trunc}"
+            _TRUNCATIONS.append((name, trunc))
+        if pre != req + lost:
+            _FAULT_VIOLATIONS.append(
+                (name, f"preempted {pre} != requeued {req} + lost {lost}"))
+        row(name, us / (G * T), meta)
+    if lost_by_engine["scan"] != lost_by_engine["reference"]:
+        _FAULT_VIOLATIONS.append(
+            ("stability/faulted_mc_scan",
+             f"lost {lost_by_engine['scan']} != reference lost "
+             f"{lost_by_engine['reference']}"))
+
+
 def _mr_workload() -> Workload:
     """Vector (cpu, mem) workload at the same operating point: U(0.1, 0.6)
     per-resource demands, rho ~ 0.9 of capacity on the binding resource."""
@@ -104,12 +161,18 @@ def main():
     _mc_ensemble_throughput("bfjs-mr", workload=_mr_workload(),
                             engines=("reference", "scan", "pallas"),
                             work_steps=24)
+    _faulted_mc_throughput()
 
     bad = [(name, t) for name, t in _TRUNCATIONS if t != 0]
     if bad:
         print("ERROR: engine comparisons reported truncation (trajectories "
               f"diverged from the reference): {bad}", file=sys.stderr,
               flush=True)
+        raise SystemExit(1)
+    if _FAULT_VIOLATIONS:
+        print("ERROR: fault accounting violated (scan vs reference lost, "
+              f"or preempted != requeued + lost): {_FAULT_VIOLATIONS}",
+              file=sys.stderr, flush=True)
         raise SystemExit(1)
 
 

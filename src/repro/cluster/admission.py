@@ -88,8 +88,26 @@ class AdmissionController:
         return placed
 
     def release(self, replica: int, size: int) -> None:
+        """Return ``size`` grid units to ``replica`` (request completed).
+
+        Guards the controller's capacity invariant: freeing more than the
+        replica ever lent out means double-release or a size-accounting
+        bug upstream — raise instead of silently corrupting residuals
+        (an ``assert`` would vanish under ``python -O``).
+        """
+        if not 0 <= replica < self.num_replicas:
+            raise ValueError(
+                f"release on unknown replica {replica} "
+                f"(controller has {self.num_replicas})")
+        if size < 0:
+            raise ValueError(f"release of negative size {size} on "
+                             f"replica {replica}")
+        if self.residual[replica] + size > RES:
+            raise ValueError(
+                f"release of {size} grid units on replica {replica} "
+                f"exceeds capacity: residual {int(self.residual[replica])} "
+                f"+ {size} > {RES} — double release or size mismatch")
         self.residual[replica] += size
-        assert self.residual[replica] <= RES
 
     def queue_len(self) -> int:
         return len(self.queue)

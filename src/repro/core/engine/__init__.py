@@ -29,28 +29,34 @@ tests/test_mr_engine.py, tests/test_kernels.py and, for every registered
 from .api import (ENGINES, PolicySpec, available_policies, get_policy,
                   monte_carlo_policy, register_policy, run_policy,
                   run_policy_streams)
-from .bfjs import (BFJSResult, BFJSState, monte_carlo_bfjs, run_bfjs,
-                   run_bfjs_streams, run_bfjs_trace)
+from .bfjs import (BFJSResult, BFJSState, DEFAULT_MAX_REQUEUE,
+                   monte_carlo_bfjs, run_bfjs, run_bfjs_streams,
+                   run_bfjs_trace)
 from .bfjs_mr import (monte_carlo_bfjs_mr_workload, run_bfjs_mr_streams,
                       run_bfjs_mr_trace, run_bfjs_mr_workload)
+from .chunked import run_chunked, streams_fingerprint
 from .ops import (alignment_scores_jnp, best_fit_place, best_fit_server,
                   k_red_jnp, largest_fitting_job, max_weight_config_jax,
                   vq_type_of, vq_type_of_grid)
 from .streams import (BFJSStreams, INF_SLOT, PolicyResult, SchedStreams,
-                      make_streams, resolve_work_steps, streams_from_trace)
+                      fault_plane_from_events, make_fault_plane,
+                      make_streams, resolve_work_steps, streams_from_trace,
+                      with_fault_plane)
 from .vqs import (monte_carlo_vqs, run_vqs, run_vqs_streams, run_vqs_trace)
 from .workload import Workload
 
 __all__ = [
     "ENGINES", "PolicySpec", "available_policies", "get_policy",
     "monte_carlo_policy", "register_policy", "run_policy",
-    "run_policy_streams", "BFJSResult", "BFJSState", "monte_carlo_bfjs",
-    "run_bfjs", "run_bfjs_streams", "run_bfjs_trace",
+    "run_policy_streams", "BFJSResult", "BFJSState", "DEFAULT_MAX_REQUEUE",
+    "monte_carlo_bfjs", "run_bfjs", "run_bfjs_streams", "run_bfjs_trace",
     "monte_carlo_bfjs_mr_workload", "run_bfjs_mr_streams",
-    "run_bfjs_mr_trace", "run_bfjs_mr_workload", "alignment_scores_jnp",
+    "run_bfjs_mr_trace", "run_bfjs_mr_workload", "run_chunked",
+    "streams_fingerprint", "alignment_scores_jnp",
     "best_fit_place", "best_fit_server", "k_red_jnp", "largest_fitting_job",
     "max_weight_config_jax", "vq_type_of", "vq_type_of_grid", "BFJSStreams",
-    "INF_SLOT", "PolicyResult", "SchedStreams", "make_streams",
-    "resolve_work_steps", "streams_from_trace", "monte_carlo_vqs",
+    "INF_SLOT", "PolicyResult", "SchedStreams", "fault_plane_from_events",
+    "make_fault_plane", "make_streams", "resolve_work_steps",
+    "streams_from_trace", "with_fault_plane", "monte_carlo_vqs",
     "run_vqs", "run_vqs_streams", "run_vqs_trace", "Workload",
 ]

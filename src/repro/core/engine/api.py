@@ -164,12 +164,39 @@ def run_policy(workload, *legacy, policy: str = "bfjs",
 
 
 def run_policy_streams(streams: SchedStreams, *, policy: str = "bfjs",
-                       engine: str = "scan", **config) -> PolicyResult:
+                       engine: str = "scan",
+                       checkpoint_dir: str | None = None,
+                       chunk: int | None = None, resume: bool = False,
+                       stop_after_chunks: int | None = None,
+                       **config) -> PolicyResult:
     """Replay explicit streams (e.g. ``streams_from_trace``) through a
     policy engine — the trace-driven path of the stack.  Multi-resource
     streams (``(T, A_max, R)`` sizes, e.g. ``streams_from_trace(trace,
-    collapse=False)``) replay through ``policy="bfjs-mr"``."""
+    collapse=False)``) replay through ``policy="bfjs-mr"``.
+
+    ``chunk=``/``checkpoint_dir=`` turn the sweep crash-safe: the scan
+    engine runs in ``chunk``-slot pieces, persisting its complete carry at
+    every boundary (atomic rename) so ``resume=True`` continues a killed
+    sweep BIT-EXACTLY where it stopped (see ``core.engine.chunked``).
+    Only ``engine="scan"`` supports this — reference keeps host-side
+    state, pallas keeps VMEM-resident state; both are rejected loudly.
+    """
     _check_engine(engine)
+    if chunk is not None or checkpoint_dir is not None or resume:
+        if engine != "scan":
+            raise ValueError(
+                f'checkpointed chunked sweeps need engine="scan" (its '
+                f"carry is the entire simulation state); got "
+                f"engine={engine!r}")
+        if chunk is None:
+            raise ValueError("checkpoint_dir=/resume= need chunk= (the "
+                             "boundary interval, in slots)")
+        from .chunked import run_chunked
+        config.pop("strict", None)
+        config.pop("window", None)
+        return run_chunked(streams, policy=policy, chunk=chunk,
+                           checkpoint_dir=checkpoint_dir, resume=resume,
+                           stop_after_chunks=stop_after_chunks, **config)
     return get_policy(policy).run_streams(streams, engine=engine, **config)
 
 

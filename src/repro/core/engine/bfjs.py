@@ -31,10 +31,44 @@ from typing import Callable, NamedTuple
 import jax
 import jax.numpy as jnp
 
+from .ops import first_empty_positions
 from .streams import (INF_SLOT, PolicyResult, SchedStreams, _geometric,
-                      make_streams, resolve_work_steps)
+                      make_fault_plane, make_streams, resolve_work_steps)
 
 BFJSResult = PolicyResult
+
+#: Default bound on fault-driven requeues: a job evicted by a server-down
+#: shock re-enters the queue until it has been preempted ``max_requeue``
+#: times, then it is counted ``lost``.
+DEFAULT_MAX_REQUEUE = 2
+
+
+def _preempt_grid(srv, dep, tries, queue, qtry, up_t, max_requeue):
+    """Evict every job resident on a down server (DESIGN.md §9).
+
+    Shared verbatim by the scan engine and the reference oracle, so faulted
+    trajectories bit-match for free.  Victims below the retry bound re-enter
+    the queue in row-major ``(server, slot)`` order through the same
+    first-empty admission rule as arrivals, carrying ``tries + 1``; the rest
+    (bound exhausted, or queue full) are lost.  Returns the updated planes
+    plus this slot's ``(n_preempted, n_requeued, n_lost)`` counts — always
+    ``n_preempted == n_requeued + n_lost``.
+    """
+    Qcap = queue.shape[0]
+    victim = (~up_t)[:, None] & (srv > 0.0)
+    elig = (victim & (tries < max_requeue)).reshape(-1)
+    pos, land = first_empty_positions(queue == 0.0, elig)
+    at = jnp.where(land, pos, Qcap)
+    queue = queue.at[at].set(jnp.where(land, srv.reshape(-1), 0.0),
+                             mode="drop")
+    qtry = qtry.at[at].set(jnp.where(land, tries.reshape(-1) + 1, 0),
+                           mode="drop")
+    n_vict = victim.sum().astype(jnp.int32)
+    n_req = land.sum().astype(jnp.int32)
+    srv = jnp.where(victim, 0.0, srv)
+    dep = jnp.where(victim, INF_SLOT, dep)
+    tries = jnp.where(victim, 0, tries)
+    return srv, dep, tries, queue, qtry, n_vict, n_req, n_vict - n_req
 
 
 def _check_sequential_durs(streams: SchedStreams, L: int, K: int,
@@ -60,13 +94,24 @@ class BFJSState(NamedTuple):
     queue: jax.Array     # (Qcap,) float32 queued sizes (0 = empty)
     dropped: jax.Array   # () int32 arrivals dropped by the fixed-size buffer
     key: jax.Array
+    # Fault-injection planes (zeros/ones on fault-free runs):
+    qtry: jax.Array      # (Qcap,) int32 retry counts riding with queued jobs
+    tries: jax.Array     # (L, K) int32 retry counts of resident jobs
+    preempted: jax.Array  # () int32
+    requeued: jax.Array   # () int32
+    lost: jax.Array       # () int32
+    up_last: jax.Array   # (L,) bool: previous slot's fault-plane row
 
 
 @functools.partial(
-    jax.jit, static_argnames=("L", "K", "Qcap", "A_max", "work_steps"))
+    jax.jit, static_argnames=("L", "K", "Qcap", "A_max", "work_steps",
+                              "max_requeue", "return_state"))
 def run_bfjs_streams(streams: SchedStreams,
                      L: int, K: int, Qcap: int, A_max: int,
-                     work_steps: int | None = None) -> PolicyResult:
+                     work_steps: int | None = None,
+                     max_requeue: int = DEFAULT_MAX_REQUEUE,
+                     state: tuple | None = None,
+                     return_state: bool = False):
     """Branch-free BF-J/S slot engine over pre-generated streams.
 
     One ``lax.scan`` over slots; inside each slot the BF-S refill and BF-J
@@ -85,8 +130,22 @@ def run_bfjs_streams(streams: SchedStreams,
     recomputes the target server's residual as ``1 - row.sum()`` over the
     slot-ordered row, the same expression the reference engine evaluates, so
     trajectories bit-match (as long as ``truncated`` stays 0).
+
+    Streams carrying a fault plane (``streams.up is not None``) run the
+    fault-injected variant: down servers evict their jobs (``_preempt_grid``
+    — requeue under the ``max_requeue`` bound, lost past it), leave every
+    placement-feasibility mask, and rejoin the BF-S freed set on recovery.
+    Fault-free streams compile to exactly the historical program.
+
+    ``state=`` / ``return_state=True`` thread the complete scan carry for
+    crash-safe chunked sweeps (DESIGN.md §9): running the horizon in slices,
+    feeding each slice the previous slice's returned state, reproduces the
+    straight-through trajectory bit-for-bit.  Per-chunk ``departed`` restarts
+    from 0 (the chunked driver offsets it); the scalar counters accumulate
+    inside the carry.
     """
     horizon = streams.n.shape[0]
+    faulted = streams.up is not None
     W = resolve_work_steps(work_steps, A_max)
     D = L * K + A_max
     _check_sequential_durs(streams, L, K, A_max)
@@ -96,8 +155,12 @@ def run_bfjs_streams(streams: SchedStreams,
     k_iota = jnp.arange(K)
 
     def slot_step(state, inp):
-        srv, dep, queue, t, q_cnt, dropped, trunc = state
-        n, sizes, durs = inp
+        (srv, dep, queue, t, q_cnt, dropped, trunc,
+         qtry, tries, preempted, requeued, lost, up_last) = state
+        if faulted:
+            n, sizes, durs, up_t = inp
+        else:
+            n, sizes, durs = inp
 
         # 1. departures
         leaving = dep == t
@@ -105,6 +168,20 @@ def run_bfjs_streams(streams: SchedStreams,
         n_dep = leaving.sum()
         srv = jnp.where(leaving, 0.0, srv)
         dep = jnp.where(leaving, INF_SLOT, dep)
+
+        # 1b. capacity shocks: evict jobs resident on down servers
+        # (requeue under the retry bound, lose the rest), drop down servers
+        # from every placement mask, and treat recoveries as freed.
+        if faulted:
+            tries = jnp.where(leaving, 0, tries)
+            srv, dep, tries, queue, qtry, n_p, n_r, n_l = _preempt_grid(
+                srv, dep, tries, queue, qtry, up_t, max_requeue)
+            preempted = preempted + n_p
+            requeued = requeued + n_r
+            lost = lost + n_l
+            q_cnt = q_cnt + n_r
+            freed = (freed | (up_t & ~up_last)) & up_t
+            up_last = up_t
         resid = 1.0 - srv.sum(axis=1)
 
         # 2. arrivals -> first empty queue slots (record where they landed)
@@ -131,7 +208,7 @@ def run_bfjs_streams(streams: SchedStreams,
         # (same first-index tie-breaks, but plain min/max reductions
         # vectorize on CPU where XLA's variadic arg-reduce does not).
         def work(carry):
-            srv, dep, queue, resid, q_cnt, dc, a_ptr = carry
+            srv, dep, queue, qtry, tries, resid, q_cnt, dc, a_ptr = carry
             occupied = queue > 0.0
             qmin = jnp.min(jnp.where(occupied, queue, jnp.inf))
             fits = freed & (resid >= qmin)
@@ -153,7 +230,10 @@ def run_bfjs_streams(streams: SchedStreams,
             ap = jnp.minimum(a_ptr, A_max - 1)
             pos = pos_list[ap]
             size_bfj = queue[jnp.maximum(pos, 0)]
-            masked_r = jnp.where(resid >= size_bfj, resid, jnp.inf)
+            feas = resid >= size_bfj
+            if faulted:
+                feas = feas & up_t
+            masked_r = jnp.where(feas, resid, jnp.inf)
             best_r = jnp.min(masked_r)
             s_bfj = jnp.min(jnp.where(masked_r == best_r, l_iota, L))
             s_bfj = jnp.minimum(s_bfj, L - 1)
@@ -175,19 +255,25 @@ def run_bfjs_streams(streams: SchedStreams,
             srv = srv.at[tgt].set(new_row)
             dep = dep.at[tgt].set(
                 dep[tgt].at[slot_w].set(t + dur, mode="drop"))
+            if faulted:
+                # retry count rides with the job: queue slot -> server slot
+                tr = qtry[jnp.minimum(qidx, Qcap - 1)]
+                tries = tries.at[tgt].set(
+                    tries[tgt].at[slot_w].set(tr, mode="drop"))
+                qtry = qtry.at[qidx].set(0, mode="drop")
             queue = queue.at[qidx].set(0.0, mode="drop")
             resid = resid.at[jnp.where(do, tgt, L)].set(
                 1.0 - new_row.sum(), mode="drop")
             q_cnt = q_cnt - do.astype(jnp.int32)
             dc = dc + any_bfs.astype(jnp.int32)
             a_ptr = a_ptr + is_bfj.astype(jnp.int32)
-            return srv, dep, queue, resid, q_cnt, dc, a_ptr
+            return srv, dep, queue, qtry, tries, resid, q_cnt, dc, a_ptr
 
         zero = jnp.zeros((), jnp.int32)
-        carry = (srv, dep, queue, resid, q_cnt, zero, zero)
+        carry = (srv, dep, queue, qtry, tries, resid, q_cnt, zero, zero)
         for _ in range(W):
             carry = work(carry)
-        srv, dep, queue, resid, q_cnt, _, a_ptr = carry
+        srv, dep, queue, qtry, tries, resid, q_cnt, _, a_ptr = carry
 
         # saturation check: a placement the reference engine would have made
         # is still possible => the bounded list diverged this slot.  (Missed
@@ -197,29 +283,45 @@ def run_bfjs_streams(streams: SchedStreams,
         pend_bfs = (freed & (resid >= qmin)).any()
         left = (a_iota >= a_ptr) & (a_iota < n_landed)
         sz_left = queue[jnp.maximum(pos_list, 0)]
-        pend_bfj = (left & (sz_left > 0) & (sz_left <= resid.max())).any()
+        cap_max = jnp.max(jnp.where(up_t, resid, -jnp.inf)) if faulted \
+            else resid.max()
+        pend_bfj = (left & (sz_left > 0) & (sz_left <= cap_max)).any()
         trunc = trunc + (pend_bfs | pend_bfj).astype(jnp.int32)
 
         out = (q_cnt, srv.sum(), n_dep.astype(jnp.int32))
-        return (srv, dep, queue, t + 1, q_cnt, dropped, trunc), out
+        return (srv, dep, queue, t + 1, q_cnt, dropped, trunc,
+                qtry, tries, preempted, requeued, lost, up_last), out
 
-    state0 = (
-        jnp.zeros((L, K), jnp.float32),
-        jnp.full((L, K), INF_SLOT, jnp.int32),
-        jnp.zeros(Qcap, jnp.float32),
-        jnp.zeros((), jnp.int32),
-        jnp.zeros((), jnp.int32),
-        jnp.zeros((), jnp.int32),
-        jnp.zeros((), jnp.int32),
-    )
-    state, (qlen, occ, ndep) = jax.lax.scan(
-        slot_step, state0, (streams.n, streams.sizes, streams.durs))
-    return PolicyResult(qlen, occ, jnp.cumsum(ndep), state[5], state[6])
+    if state is None:
+        zero = jnp.zeros((), jnp.int32)
+        state = (
+            jnp.zeros((L, K), jnp.float32),
+            jnp.full((L, K), INF_SLOT, jnp.int32),
+            jnp.zeros(Qcap, jnp.float32),
+            zero,                          # t
+            zero,                          # q_cnt
+            zero,                          # dropped
+            zero,                          # trunc
+            jnp.zeros(Qcap, jnp.int32),    # qtry
+            jnp.zeros((L, K), jnp.int32),  # tries
+            zero,                          # preempted
+            zero,                          # requeued
+            zero,                          # lost
+            jnp.ones((L,), bool),          # up_last
+        )
+    xs = (streams.n, streams.sizes, streams.durs)
+    if faulted:
+        xs = xs + (streams.up,)
+    state, (qlen, occ, ndep) = jax.lax.scan(slot_step, state, xs)
+    res = PolicyResult(qlen, occ, jnp.cumsum(ndep), state[5], state[6],
+                       state[9], state[10], state[11])
+    return (res, state) if return_state else res
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("sampler", "L", "K", "Qcap", "A_max", "horizon"),
+    static_argnames=("sampler", "L", "K", "Qcap", "A_max", "horizon",
+                     "fault_rate", "repair_rate", "max_requeue"),
 )
 def _run_bfjs_reference(key: jax.Array,
                         lam: float,
@@ -229,20 +331,37 @@ def _run_bfjs_reference(key: jax.Array,
                         K: int = 16,
                         Qcap: int = 512,
                         A_max: int = 8,
-                        horizon: int = 10_000) -> PolicyResult:
+                        horizon: int = 10_000,
+                        fault_rate: float = 0.0,
+                        repair_rate: float = 1.0,
+                        max_requeue: int = DEFAULT_MAX_REQUEUE
+                        ) -> PolicyResult:
     """The original nested fori/while/cond slot engine (behavioural oracle).
 
     Serial and branch-heavy — kept verbatim for equivalence testing and as
     the baseline of benchmarks/sched_micro.py.
+
+    ``fault_rate > 0`` runs the fault-injected variant: the oracle
+    regenerates the exact ``make_fault_plane`` the scan engine's streams
+    carry (same key, same fold) and applies the shared ``_preempt_grid``
+    eviction between departures and arrivals, so faulted trajectories stay
+    bit-matched engine-to-engine.
     """
     from .ops import best_fit_server, largest_fitting_job
 
+    faulted = fault_rate > 0.0
+
     def place_in_server(srv_i, dep_i, size, dslot):
         slot = jnp.argmax(srv_i == 0.0)
-        return srv_i.at[slot].set(size), dep_i.at[slot].set(dslot)
+        return srv_i.at[slot].set(size), dep_i.at[slot].set(dslot), slot
 
-    def slot_step(state: BFJSState, t: jax.Array):
-        srv, dep, queue, dropped, key = state
+    def slot_step(state: BFJSState, inp):
+        (srv, dep, queue, dropped, key, qtry, tries,
+         preempted, requeued, lost, up_last) = state
+        if faulted:
+            t, up_t = inp
+        else:
+            t = inp
         key, k_arr, k_n, k_sizes, k_dur = jax.random.split(key, 5)
 
         # 1. departures
@@ -251,6 +370,19 @@ def _run_bfjs_reference(key: jax.Array,
         n_dep = leaving.sum()
         srv = jnp.where(leaving, 0.0, srv)
         dep = jnp.where(leaving, INF_SLOT, dep)
+
+        # 1b. capacity shocks (identical rule to the scan engine: the
+        # shared _preempt_grid, then recovered servers count as freed and
+        # down servers leave every feasibility mask).
+        if faulted:
+            tries = jnp.where(leaving, 0, tries)
+            srv, dep, tries, queue, qtry, n_p, n_r, n_l = _preempt_grid(
+                srv, dep, tries, queue, qtry, up_t, max_requeue)
+            preempted = preempted + n_p
+            requeued = requeued + n_r
+            lost = lost + n_l
+            freed = (freed | (up_t & ~up_last)) & up_t
+            up_last = up_t
 
         # 2. arrivals -> queue (record the slots they landed in)
         n = jnp.minimum(jax.random.poisson(k_n, lam), A_max)
@@ -268,79 +400,100 @@ def _run_bfjs_reference(key: jax.Array,
 
         # 3. BF-S over freed servers: fill each with the largest fitting job.
         def bfs_server(i, carry):
-            srv, dep, queue, dc = carry
+            srv, dep, queue, qtry, tries, dc = carry
 
             def try_place(carry):
-                srv, dep, queue, dc, go = carry
+                srv, dep, queue, qtry, tries, dc, go = carry
                 resid = 1.0 - srv[i].sum()
                 j = largest_fitting_job(queue, resid)
                 ok = j >= 0
 
                 def do(args):
-                    srv, dep, queue, dc = args
+                    srv, dep, queue, qtry, tries, dc = args
                     size = queue[j]
-                    s_i, d_i = place_in_server(srv[i], dep[i], size,
-                                               t + durs[dc])
+                    s_i, d_i, slot = place_in_server(srv[i], dep[i], size,
+                                                     t + durs[dc])
+                    if faulted:
+                        tries = tries.at[i, slot].set(qtry[j])
+                        qtry = qtry.at[j].set(0)
                     return (srv.at[i].set(s_i), dep.at[i].set(d_i),
-                            queue.at[j].set(0.0), dc + 1)
+                            queue.at[j].set(0.0), qtry, tries, dc + 1)
 
-                srv, dep, queue, dc = jax.lax.cond(
-                    ok, do, lambda a: a, (srv, dep, queue, dc))
-                return srv, dep, queue, dc, ok
+                srv, dep, queue, qtry, tries, dc = jax.lax.cond(
+                    ok, do, lambda a: a, (srv, dep, queue, qtry, tries, dc))
+                return srv, dep, queue, qtry, tries, dc, ok
 
             def fill(carry):
-                srv, dep, queue, dc = carry
+                srv, dep, queue, qtry, tries, dc = carry
                 out = jax.lax.while_loop(
-                    lambda c: c[4],
+                    lambda c: c[6],
                     try_place,
-                    (srv, dep, queue, dc, True))
-                return out[:4]
+                    (srv, dep, queue, qtry, tries, dc, True))
+                return out[:6]
 
             return jax.lax.cond(freed[i], fill, lambda c: c,
-                                (srv, dep, queue, dc))
+                                (srv, dep, queue, qtry, tries, dc))
 
-        srv, dep, queue, dcounter = jax.lax.fori_loop(
-            0, L, bfs_server, (srv, dep, queue, dcounter))
+        srv, dep, queue, qtry, tries, dcounter = jax.lax.fori_loop(
+            0, L, bfs_server, (srv, dep, queue, qtry, tries, dcounter))
 
         # 4. BF-J over the new arrivals still in queue.
         def bfj_job(a, carry):
-            srv, dep, queue, dc = carry
+            srv, dep, queue, qtry, tries, dc = carry
             pos = new_pos[a]
             size = jnp.where(pos >= 0, queue[jnp.maximum(pos, 0)], 0.0)
             resid = 1.0 - srv.sum(axis=1)
+            if faulted:
+                resid = jnp.where(up_t, resid, -jnp.inf)
             s_idx = best_fit_server(resid, jnp.where(size > 0, size, jnp.inf))
             ok = (size > 0) & (s_idx >= 0)
 
             def do(args):
-                srv, dep, queue, dc = args
-                s_i, d_i = place_in_server(srv[s_idx], dep[s_idx], size,
-                                           t + durs[L * K + a])
+                srv, dep, queue, qtry, tries, dc = args
+                s_i, d_i, slot = place_in_server(srv[s_idx], dep[s_idx], size,
+                                                 t + durs[L * K + a])
+                if faulted:
+                    tries = tries.at[s_idx, slot].set(qtry[jnp.maximum(pos, 0)])
+                    qtry = qtry.at[jnp.maximum(pos, 0)].set(0)
                 return (srv.at[s_idx].set(s_i), dep.at[s_idx].set(d_i),
-                        queue.at[pos].set(0.0), dc)
+                        queue.at[pos].set(0.0), qtry, tries, dc)
 
-            return jax.lax.cond(ok, do, lambda x: x, (srv, dep, queue, dc))
+            return jax.lax.cond(ok, do, lambda x: x,
+                                (srv, dep, queue, qtry, tries, dc))
 
-        srv, dep, queue, dcounter = jax.lax.fori_loop(
-            0, A_max, bfj_job, (srv, dep, queue, dcounter))
+        srv, dep, queue, qtry, tries, dcounter = jax.lax.fori_loop(
+            0, A_max, bfj_job, (srv, dep, queue, qtry, tries, dcounter))
 
         out = (
             (queue > 0).sum().astype(jnp.int32),
             srv.sum(),
             n_dep.astype(jnp.int32),
         )
-        return BFJSState(srv, dep, queue, dropped, key), out
+        return BFJSState(srv, dep, queue, dropped, key, qtry, tries,
+                         preempted, requeued, lost, up_last), out
 
+    zero = jnp.zeros((), jnp.int32)
     state0 = BFJSState(
         srv=jnp.zeros((L, K), jnp.float32),
         dep=jnp.full((L, K), INF_SLOT, jnp.int32),
         queue=jnp.zeros(Qcap, jnp.float32),
-        dropped=jnp.zeros((), jnp.int32),
+        dropped=zero,
         key=key,
+        qtry=jnp.zeros(Qcap, jnp.int32),
+        tries=jnp.zeros((L, K), jnp.int32),
+        preempted=zero,
+        requeued=zero,
+        lost=zero,
+        up_last=jnp.ones((L,), bool),
     )
-    state, (qlen, occ, ndep) = jax.lax.scan(
-        slot_step, state0, jnp.arange(horizon, dtype=jnp.int32))
+    ts = jnp.arange(horizon, dtype=jnp.int32)
+    xs = (ts, make_fault_plane(key, L=L, horizon=horizon,
+                               fault_rate=fault_rate,
+                               repair_rate=repair_rate)) if faulted else ts
+    state, (qlen, occ, ndep) = jax.lax.scan(slot_step, state0, xs)
     return PolicyResult(qlen, occ, jnp.cumsum(ndep), state.dropped,
-                        jnp.zeros((), jnp.int32))
+                        jnp.zeros((), jnp.int32), state.preempted,
+                        state.requeued, state.lost)
 
 
 def run_bfjs(key: jax.Array,
@@ -353,7 +506,10 @@ def run_bfjs(key: jax.Array,
              A_max: int = 8,
              horizon: int = 10_000,
              engine: str = "scan",
-             work_steps: int | None = None) -> PolicyResult:
+             work_steps: int | None = None,
+             fault_rate: float = 0.0,
+             repair_rate: float = 1.0,
+             max_requeue: int = DEFAULT_MAX_REQUEUE) -> PolicyResult:
     """Simulate BF-J/S on L unit-capacity servers for `horizon` slots.
 
     sampler(key, n) -> (n,) float sizes in (0,1].  vmap over `key` for
@@ -362,19 +518,32 @@ def run_bfjs(key: jax.Array,
 
     engine: "scan" (branch-free, default) | "reference" (original nested
     loop oracle) | "pallas" (fused kernels/bfjs slot-step kernel).
+
+    ``fault_rate > 0`` injects per-slot server capacity shocks
+    (``make_fault_plane``): down servers evict their jobs, which requeue up
+    to ``max_requeue`` times and are counted ``lost`` past that — reported
+    in the result's ``preempted/requeued/lost`` counters, identically on
+    every engine.
     """
     if engine == "reference":
         return _run_bfjs_reference(key, lam, mu, sampler, L=L, K=K, Qcap=Qcap,
-                                   A_max=A_max, horizon=horizon)
+                                   A_max=A_max, horizon=horizon,
+                                   fault_rate=fault_rate,
+                                   repair_rate=repair_rate,
+                                   max_requeue=max_requeue)
     streams = make_streams(key, lam, mu, sampler, L=L, K=K, A_max=A_max,
-                           horizon=horizon)
+                           horizon=horizon, fault_rate=fault_rate,
+                           repair_rate=repair_rate)
     return run_bfjs_trace(streams, L=L, K=K, Qcap=Qcap, A_max=A_max,
-                          engine=engine, work_steps=work_steps)
+                          engine=engine, work_steps=work_steps,
+                          max_requeue=max_requeue)
 
 
 def run_bfjs_trace(streams: SchedStreams, *, L: int, K: int, Qcap: int,
                    A_max: int, engine: str = "scan",
-                   work_steps: int | None = None) -> PolicyResult:
+                   work_steps: int | None = None,
+                   max_requeue: int = DEFAULT_MAX_REQUEUE,
+                   strict: bool = False) -> PolicyResult:
     """Run one BF-J/S simulation over explicit streams (make_streams-shaped;
     trace-built streams are rejected — see _check_sequential_durs)."""
     _check_sequential_durs(streams, L, K, A_max)
@@ -385,9 +554,17 @@ def run_bfjs_trace(streams: SchedStreams, *, L: int, K: int, Qcap: int,
             "streams, or run_bfjs(key, ..., engine=\"reference\").")
     if engine == "scan":
         return run_bfjs_streams(streams, L=L, K=K, Qcap=Qcap, A_max=A_max,
-                                work_steps=work_steps)
+                                work_steps=work_steps,
+                                max_requeue=max_requeue)
     if engine == "pallas":
-        from repro.kernels.bfjs.ops import bfjs_simulate
+        from repro.kernels.bfjs.ops import bfjs_scratch_bytes, bfjs_simulate
+        from repro.kernels.common import pallas_precheck
+        if not pallas_precheck(
+                "bfjs", nbytes=bfjs_scratch_bytes(L, K, Qcap, A_max),
+                fault_plane=streams.up is not None, strict=strict):
+            return run_bfjs_streams(streams, L=L, K=K, Qcap=Qcap,
+                                    A_max=A_max, work_steps=work_steps,
+                                    max_requeue=max_requeue)
         batched = jax.tree.map(lambda x: x[None], streams)
         res = bfjs_simulate(batched, L=L, K=K, Qcap=Qcap, A_max=A_max,
                             work_steps=work_steps)
@@ -419,7 +596,10 @@ def monte_carlo_bfjs_workload(workload, keys: jax.Array, *,
 def monte_carlo_bfjs(keys: jax.Array, lam: float, mu: float, sampler,
                      engine: str = "scan", work_steps: int | None = None,
                      L: int = 8, K: int = 16, Qcap: int = 512,
-                     A_max: int = 8, horizon: int = 10_000) -> PolicyResult:
+                     A_max: int = 8, horizon: int = 10_000,
+                     fault_rate: float = 0.0, repair_rate: float = 1.0,
+                     max_requeue: int = DEFAULT_MAX_REQUEUE,
+                     strict: bool = False) -> PolicyResult:
     """One simulated cluster per key.
 
     "scan"/"reference" vmap run_bfjs over the keys; "pallas" pre-generates
@@ -427,13 +607,21 @@ def monte_carlo_bfjs(keys: jax.Array, lam: float, mu: float, sampler,
     ensemble as the kernel grid (one independent cluster per program
     instance)."""
     if engine == "pallas":
-        from repro.kernels.bfjs.ops import bfjs_simulate
-        streams = jax.vmap(
-            lambda k: make_streams(k, lam, mu, sampler, L=L, K=K,
-                                   A_max=A_max, horizon=horizon))(keys)
-        return bfjs_simulate(streams, L=L, K=K, Qcap=Qcap, A_max=A_max,
-                             work_steps=work_steps)
+        from repro.kernels.bfjs.ops import bfjs_scratch_bytes, bfjs_simulate
+        from repro.kernels.common import pallas_precheck
+        if not pallas_precheck(
+                "bfjs", nbytes=bfjs_scratch_bytes(L, K, Qcap, A_max),
+                fault_plane=fault_rate > 0.0, strict=strict):
+            engine = "scan"
+        else:
+            streams = jax.vmap(
+                lambda k: make_streams(k, lam, mu, sampler, L=L, K=K,
+                                       A_max=A_max, horizon=horizon))(keys)
+            return bfjs_simulate(streams, L=L, K=K, Qcap=Qcap, A_max=A_max,
+                                 work_steps=work_steps)
     fn = functools.partial(run_bfjs, lam=lam, mu=mu, sampler=sampler,
                            engine=engine, work_steps=work_steps, L=L, K=K,
-                           Qcap=Qcap, A_max=A_max, horizon=horizon)
+                           Qcap=Qcap, A_max=A_max, horizon=horizon,
+                           fault_rate=fault_rate, repair_rate=repair_rate,
+                           max_requeue=max_requeue)
     return jax.vmap(fn)(keys)

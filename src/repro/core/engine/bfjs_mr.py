@@ -54,11 +54,53 @@ import jax.numpy as jnp
 import numpy as np
 
 from ..quantize import RES
+from .bfjs import DEFAULT_MAX_REQUEUE
 from .ops import alignment_scores_jnp
 from .streams import (INF_SLOT, PolicyResult, SchedStreams, make_streams,
                       resolve_work_steps)
 
 INT32_MAX = jnp.iinfo(jnp.int32).max
+
+
+def _preempt_planes(dem, dep, occ, qdem, qdur, qseq, qtry, tries, sseq,
+                    seq0, q_cnt, up_t, t, max_requeue):
+    """Evict every job in service on a down server (multi-resource planes).
+
+    Victims with ``tries < max_requeue`` re-enter the queue at the first
+    empty positions in ascending current-``seq`` order, carrying their
+    REMAINING duration, ``tries + 1`` and a FRESH seq id — exactly the
+    oracle's dict-insertion order (requeues before the slot's arrivals),
+    so BF-S tie-breaks keep bit-matching.  Exhausted victims (and any that
+    find the queue full) are dropped entirely and counted ``lost``.
+    Returns the updated planes plus ``(n_preempted, n_requeued, n_lost)``.
+    """
+    R = dem.shape[-1]
+    victim = (~up_t)[:, None] & (dep != INF_SLOT)
+    vic_f = victim.reshape(-1)
+    elig = vic_f & (tries.reshape(-1) < max_requeue)
+    # rank eligible victims by current seq; ineligible sort to the back
+    key = jnp.where(elig, sseq.reshape(-1), INT32_MAX)
+    rank_of = jnp.argsort(jnp.argsort(key)).astype(jnp.int32)
+    n_empty = jnp.cumsum((qseq < 0).astype(jnp.int32))
+    pos = jnp.searchsorted(n_empty, rank_of + 1)
+    land = elig & (pos < qseq.shape[0])
+    at = jnp.where(land, pos, qseq.shape[0])
+    rem = jnp.maximum(dep.reshape(-1) - t, 1)
+    qdem = qdem.at[at].set(dem.reshape(-1, R), mode="drop")
+    qdur = qdur.at[at].set(rem, mode="drop")
+    qtry = qtry.at[at].set(tries.reshape(-1) + 1, mode="drop")
+    qseq = qseq.at[at].set(seq0 + rank_of, mode="drop")
+    n_vict = vic_f.sum()
+    n_req = land.sum()
+    seq0 = seq0 + n_req
+    q_cnt = q_cnt + n_req
+    occ = occ - (dem * victim[..., None]).sum(axis=1)
+    dem = jnp.where(victim[..., None], 0, dem)
+    dep = jnp.where(victim, INF_SLOT, dep)
+    tries = jnp.where(victim, 0, tries)
+    sseq = jnp.where(victim, 0, sseq)
+    return (dem, dep, occ, qdem, qdur, qseq, qtry, tries, sseq, seq0,
+            q_cnt, n_vict, n_req, n_vict - n_req)
 
 
 def _norm_capacity(capacity, R: int) -> tuple[float, ...]:
@@ -81,11 +123,14 @@ def _lift_sizes(streams: SchedStreams) -> SchedStreams:
 
 @functools.partial(
     jax.jit,
-    static_argnames=("L", "K", "Qcap", "A_max", "work_steps", "capacity"))
+    static_argnames=("L", "K", "Qcap", "A_max", "work_steps", "capacity",
+                     "max_requeue", "return_state"))
 def run_bfjs_mr_streams(streams: SchedStreams, L: int, K: int, Qcap: int,
                         A_max: int, work_steps: int | None = None,
-                        capacity: tuple[float, ...] | float = 1.0
-                        ) -> PolicyResult:
+                        capacity: tuple[float, ...] | float = 1.0,
+                        max_requeue: int = DEFAULT_MAX_REQUEUE,
+                        state: tuple | None = None,
+                        return_state: bool = False):
     """Branch-free multi-resource BF-J/S slot engine over streams.
 
     One ``lax.scan`` over slots; inside each slot the BF-S refill and BF-J
@@ -104,6 +149,7 @@ def run_bfjs_mr_streams(streams: SchedStreams, L: int, K: int, Qcap: int,
     capacity = _norm_capacity(capacity, R)
     CAP = jnp.asarray([round(c * RES) for c in capacity], jnp.int32)
     W = resolve_work_steps(work_steps, A_max)
+    faulted = streams.up is not None
     a_iota = jnp.arange(A_max)
     l_iota = jnp.arange(L)
     q_iota = jnp.arange(Qcap)
@@ -111,9 +157,13 @@ def run_bfjs_mr_streams(streams: SchedStreams, L: int, K: int, Qcap: int,
     dur_off = streams.durs.shape[-1] - A_max
 
     def slot_step(state, inp):
-        dem, dep, occ, qdem, qdur, qseq, t, q_cnt, seq0, dropped, trunc = \
-            state
-        n, sizes, durs = inp
+        (dem, dep, occ, qdem, qdur, qseq, t, q_cnt, seq0, dropped, trunc,
+         qtry, tries, sseq, preempted, requeued, lost, up_last) = state
+        if faulted:
+            n, sizes, durs, up_t = inp
+        else:
+            n, sizes, durs = inp
+            up_t = None
 
         # 1. departures
         leaving = dep == t
@@ -122,6 +172,21 @@ def run_bfjs_mr_streams(streams: SchedStreams, L: int, K: int, Qcap: int,
         occ = occ - (dem * leaving[..., None]).sum(axis=1)
         dem = jnp.where(leaving[..., None], 0, dem)
         dep = jnp.where(leaving, INF_SLOT, dep)
+        tries = jnp.where(leaving, 0, tries)
+        sseq = jnp.where(leaving, 0, sseq)
+
+        # 1b. fault preemption: down servers evict, victims requeue or
+        # are lost; recovered servers rejoin the BF-S freed set.
+        if faulted:
+            (dem, dep, occ, qdem, qdur, qseq, qtry, tries, sseq, seq0,
+             q_cnt, n_v, n_r, n_l) = _preempt_planes(
+                 dem, dep, occ, qdem, qdur, qseq, qtry, tries, sseq,
+                 seq0, q_cnt, up_t, t, max_requeue)
+            preempted = preempted + n_v
+            requeued = requeued + n_r
+            lost = lost + n_l
+            freed = (freed | (up_t & ~up_last)) & up_t
+            up_last = up_t
 
         # 2. arrivals -> first empty queue positions (grid-quantized)
         g = jnp.maximum(jnp.round(sizes * RES), 1.0).astype(jnp.int32)
@@ -136,6 +201,7 @@ def run_bfjs_mr_streams(streams: SchedStreams, L: int, K: int, Qcap: int,
                                  mode="drop")
         qdur = qdur.at[wpos].set(durs[dur_off + a_iota], mode="drop")
         qseq = qseq.at[wpos].set(seq0 + a_iota, mode="drop")
+        qtry = qtry.at[wpos].set(0, mode="drop")
         seq0 = seq0 + n
         new_pos = jnp.where(landed, pos_a, -1)
         rank = jnp.cumsum(landed.astype(jnp.int32)) - 1
@@ -154,8 +220,8 @@ def run_bfjs_mr_streams(streams: SchedStreams, L: int, K: int, Qcap: int,
 
         # 3+4. BF-S then BF-J as one bounded early-exit work list
         def work(carry):
-            (dem, dep, occ, qdem, qdur, qseq, q_cnt, blocked, a_ptr,
-             trunc, done, n_steps) = carry
+            (dem, dep, occ, qdem, qdur, qseq, qtry, tries, sseq, q_cnt,
+             blocked, a_ptr, trunc, done, n_steps) = carry
             avail = CAP[None, :] - occ
 
             # BF-S candidate: lowest-index freed, unblocked server with a
@@ -186,6 +252,8 @@ def run_bfjs_mr_streams(streams: SchedStreams, L: int, K: int, Qcap: int,
             feas = jnp.ones((L,), bool)
             for r in range(R):
                 feas = feas & (d_bfj[r] <= avail[:, r])
+            if faulted:
+                feas = feas & up_t
             scores = alignment_scores_jnp(avail, d_bfj)
             masked = jnp.where(feas, scores, jnp.inf)
             best = jnp.min(masked)
@@ -198,6 +266,8 @@ def run_bfjs_mr_streams(streams: SchedStreams, L: int, K: int, Qcap: int,
             qidx = jnp.where(any_bfs, j_bfs, posc)
             d_place = qdem[qidx]
             dur = qdur[qidx]
+            try_pl = qtry[qidx]
+            seq_pl = qseq[qidx]
 
             row_dep = dep[tgt]
             slot = jnp.min(jnp.where(row_dep == INF_SLOT, k_iota, K))
@@ -206,10 +276,13 @@ def run_bfjs_mr_streams(streams: SchedStreams, L: int, K: int, Qcap: int,
             slot_w = jnp.where(place, jnp.minimum(slot, K - 1), K)
             dem = dem.at[tgt, slot_w].set(d_place, mode="drop")
             dep = dep.at[tgt, slot_w].set(t + dur, mode="drop")
+            tries = tries.at[tgt, slot_w].set(try_pl, mode="drop")
+            sseq = sseq.at[tgt, slot_w].set(seq_pl, mode="drop")
             occ = occ.at[jnp.where(place, tgt, L)].add(d_place, mode="drop")
             qclear = jnp.where(place, qidx, Qcap)
             qseq = qseq.at[qclear].set(-1, mode="drop")
             qdem = qdem.at[qclear].set(0, mode="drop")
+            qtry = qtry.at[qclear].set(0, mode="drop")
             q_cnt = q_cnt - place.astype(jnp.int32)
             # K-full server: the oracle would place; count, don't spin.
             trunc = trunc + (do & ~ok_slot).astype(jnp.int32)
@@ -218,20 +291,20 @@ def run_bfjs_mr_streams(streams: SchedStreams, L: int, K: int, Qcap: int,
             # BF-S fits only shrink and each arrival is attempted once, so
             # once neither exists the slot is finished for good.
             done = (~any_bfs) & (a_ptr >= n_landed)
-            return (dem, dep, occ, qdem, qdur, qseq, q_cnt, blocked,
-                    a_ptr, trunc, done, n_steps + 1)
+            return (dem, dep, occ, qdem, qdur, qseq, qtry, tries, sseq,
+                    q_cnt, blocked, a_ptr, trunc, done, n_steps + 1)
 
         def unfinished(carry):
-            done, n_steps = carry[10], carry[11]
+            done, n_steps = carry[13], carry[14]
             return (~done) & (n_steps < W)
 
         zero = jnp.zeros((), jnp.int32)
-        carry = (dem, dep, occ, qdem, qdur, qseq, q_cnt,
-                 jnp.zeros((L,), bool), zero, trunc,
+        carry = (dem, dep, occ, qdem, qdur, qseq, qtry, tries, sseq,
+                 q_cnt, jnp.zeros((L,), bool), zero, trunc,
                  jnp.zeros((), bool), zero)
         carry = jax.lax.while_loop(unfinished, work, carry)
-        (dem, dep, occ, qdem, qdur, qseq, q_cnt, blocked, a_ptr, trunc,
-         done, _) = carry
+        (dem, dep, occ, qdem, qdur, qseq, qtry, tries, sseq, q_cnt,
+         blocked, a_ptr, trunc, done, _) = carry
 
         # saturation check: work the oracle would still do => the bounded
         # list diverged this slot (K-full blocks were already counted).
@@ -245,32 +318,46 @@ def run_bfjs_mr_streams(streams: SchedStreams, L: int, K: int, Qcap: int,
         for r in range(R):
             feas_l = feas_l & (qdem[posb][:, r][:, None]
                                <= avail[:, r][None, :])
+        if faulted:
+            feas_l = feas_l & up_t[None, :]
         pend_bfj = (present_l & feas_l.any(axis=1)).any()
         trunc = trunc + (pend_bfs | pend_bfj).astype(jnp.int32)
 
         out = (q_cnt, occ.sum(axis=0).astype(jnp.float32) / RES,
                n_dep.astype(jnp.int32))
         state = (dem, dep, occ, qdem, qdur, qseq, t + 1, q_cnt, seq0,
-                 dropped, trunc)
+                 dropped, trunc, qtry, tries, sseq, preempted, requeued,
+                 lost, up_last)
         return state, out
 
     zero = jnp.zeros((), jnp.int32)
-    state0 = (
-        jnp.zeros((L, K, R), jnp.int32),
-        jnp.full((L, K), INF_SLOT, jnp.int32),
-        jnp.zeros((L, R), jnp.int32),
-        jnp.zeros((Qcap, R), jnp.int32),
-        jnp.ones((Qcap,), jnp.int32),
-        jnp.full((Qcap,), -1, jnp.int32),
-        zero, zero, zero, zero, zero,
-    )
-    state, (qlen, occ, ndep) = jax.lax.scan(
-        slot_step, state0, (streams.n, streams.sizes, streams.durs))
-    return PolicyResult(qlen, occ, jnp.cumsum(ndep), state[9], state[10])
+    if state is None:
+        state = (
+            jnp.zeros((L, K, R), jnp.int32),
+            jnp.full((L, K), INF_SLOT, jnp.int32),
+            jnp.zeros((L, R), jnp.int32),
+            jnp.zeros((Qcap, R), jnp.int32),
+            jnp.ones((Qcap,), jnp.int32),
+            jnp.full((Qcap,), -1, jnp.int32),
+            zero, zero, zero, zero, zero,
+            jnp.zeros((Qcap,), jnp.int32),   # qtry: queued retry counts
+            jnp.zeros((L, K), jnp.int32),    # tries: in-service retries
+            jnp.zeros((L, K), jnp.int32),    # sseq: in-service seq ids
+            zero, zero, zero,                # preempted / requeued / lost
+            jnp.ones((L,), bool),            # up_last (recovery detection)
+        )
+    xs = (streams.n, streams.sizes, streams.durs)
+    if faulted:
+        xs = xs + (streams.up,)
+    state, (qlen, occ, ndep) = jax.lax.scan(slot_step, state, xs)
+    res = PolicyResult(qlen, occ, jnp.cumsum(ndep), state[9], state[10],
+                       state[14], state[15], state[16])
+    return (res, state) if return_state else res
 
 
 def _run_bfjs_mr_reference(streams: SchedStreams, *, L: int,
-                           capacity: tuple[float, ...] | float = 1.0
+                           capacity: tuple[float, ...] | float = 1.0,
+                           max_requeue: int = DEFAULT_MAX_REQUEUE
                            ) -> PolicyResult:
     """The event-driven ``MultiResourceBFJS`` oracle driven from streams.
 
@@ -279,7 +366,10 @@ def _run_bfjs_mr_reference(streams: SchedStreams, *, L: int,
     grid quantization the scan engine applies (``max(round(s * RES), 1)``)
     replayed as exact dyadics ``g / RES``; the capacity is quantized to the
     grid too, so every feasibility comparison is exact and agrees with the
-    integer engine.  The oracle has no fixed-size buffers: ``dropped`` and
+    integer engine.  When the streams carry a fault plane the oracle is
+    stepped with ``down = ~up[t]`` and the counters come from its fault
+    accounting (lost jobs never depart, so cumulative departures subtract
+    them).  The oracle has no fixed-size buffers: ``dropped`` and
     ``truncated`` are always 0.
     """
     from ..multi_resource import MRJob, MultiResourceBFJS
@@ -288,6 +378,7 @@ def _run_bfjs_mr_reference(streams: SchedStreams, *, L: int,
     n = np.asarray(streams.n)
     sizes = np.asarray(streams.sizes, dtype=np.float64)
     durs = np.asarray(streams.durs)
+    up = None if streams.up is None else np.asarray(streams.up)
     T, A_max, R = sizes.shape
     capacity = _norm_capacity(capacity, R)
     cap_dyadic = tuple(round(c * RES) / RES for c in capacity)
@@ -305,23 +396,28 @@ def _run_bfjs_mr_reference(streams: SchedStreams, *, L: int,
         for a in range(int(n[t])):
             jobs.append(MRJob(jid, dem[t, a], t, int(durs[t, dur_off + a])))
             jid += 1
-        policy.step(t, jobs)
+        down = None if up is None else ~up[t]
+        policy.step(t, jobs, down=down, max_requeue=max_requeue)
         q = policy.queue_len()
         qlen[t] = q
         occ[t] = policy.occupied.sum(axis=0)
         in_service = sum(len(s) for s in policy.jobs)
-        dep_cum[t] = jid - in_service - q
+        dep_cum[t] = jid - in_service - q - policy.lost
+    i32 = lambda v: jnp.asarray(np.int32(v))
     return PolicyResult(
         jnp.asarray(qlen), jnp.asarray(occ.astype(np.float32)),
         jnp.asarray(dep_cum), jnp.zeros((), jnp.int32),
-        jnp.zeros((), jnp.int32))
+        jnp.zeros((), jnp.int32), i32(policy.preempted),
+        i32(policy.requeued), i32(policy.lost))
 
 
 def run_bfjs_mr_trace(streams: SchedStreams, *, L: int, K: int = 16,
                       Qcap: int = 512, A_max: int | None = None,
                       engine: str = "scan", work_steps: int | None = None,
                       capacity: tuple[float, ...] | float = 1.0,
-                      window: int | None = None) -> PolicyResult:
+                      window: int | None = None,
+                      max_requeue: int = DEFAULT_MAX_REQUEUE,
+                      strict: bool = False) -> PolicyResult:
     """Run one multi-resource BF-J/S simulation over explicit streams.
 
     Accepts both trace-built streams (per-arrival duration lanes only —
@@ -329,26 +425,39 @@ def run_bfjs_mr_trace(streams: SchedStreams, *, L: int, K: int = 16,
     ``make_streams`` full-width streams (the engine consumes the last
     ``A_max`` per-arrival lanes; durations attach at arrival).  ``window``
     is the Pallas engine's VMEM time-window length (must divide the
-    horizon; ignored by the other engines).
+    horizon; ignored by the other engines).  ``engine="pallas"`` is gated
+    by :func:`repro.kernels.common.pallas_precheck` — a fault plane or an
+    over-budget VMEM estimate degrades to the bit-identical scan engine
+    with a :class:`GracefulDegradationWarning` (or raises, ``strict=True``).
     """
     streams = _lift_sizes(streams)
     if A_max is None:
         A_max = int(streams.sizes.shape[1])
     if engine == "reference":
-        return _run_bfjs_mr_reference(streams, L=L, capacity=capacity)
+        return _run_bfjs_mr_reference(streams, L=L, capacity=capacity,
+                                      max_requeue=max_requeue)
+    if engine == "pallas":
+        from repro.kernels.bfjs_mr.ops import (bfjs_mr_scratch_bytes,
+                                               bfjs_mr_simulate)
+        from repro.kernels.common import pallas_precheck
+        R = int(streams.sizes.shape[-1])
+        if not pallas_precheck(
+                "bfjs-mr", nbytes=bfjs_mr_scratch_bytes(L, K, Qcap, R),
+                fault_plane=streams.up is not None, strict=strict):
+            engine = "scan"
+        else:
+            batched = jax.tree.map(lambda x: x[None], streams)
+            res = bfjs_mr_simulate(batched, L=L, K=K, Qcap=Qcap,
+                                   A_max=A_max, work_steps=work_steps,
+                                   capacity=capacity, window=window)
+            return jax.tree.map(lambda x: x[0], res)
     if engine == "scan":
         if not isinstance(capacity, tuple):
             capacity = _norm_capacity(capacity, int(streams.sizes.shape[-1]))
         return run_bfjs_mr_streams(streams, L=L, K=K, Qcap=Qcap,
                                    A_max=A_max, work_steps=work_steps,
-                                   capacity=capacity)
-    if engine == "pallas":
-        from repro.kernels.bfjs_mr.ops import bfjs_mr_simulate
-        batched = jax.tree.map(lambda x: x[None], streams)
-        res = bfjs_mr_simulate(batched, L=L, K=K, Qcap=Qcap, A_max=A_max,
-                               work_steps=work_steps, capacity=capacity,
-                               window=window)
-        return jax.tree.map(lambda x: x[0], res)
+                                   capacity=capacity,
+                                   max_requeue=max_requeue)
     raise ValueError(f"unknown engine {engine!r}")
 
 
@@ -356,43 +465,67 @@ def run_bfjs_mr_workload(workload, key, *, engine: str = "scan",
                          L: int = 8, K: int = 16, Qcap: int = 512,
                          A_max: int = 8, horizon: int = 10_000,
                          work_steps: int | None = None,
-                         window: int | None = None) -> PolicyResult:
+                         window: int | None = None,
+                         fault_rate: float = 0.0, repair_rate: float = 1.0,
+                         max_requeue: int = DEFAULT_MAX_REQUEUE,
+                         strict: bool = False) -> PolicyResult:
     """Simulate multi-resource BF-J/S for one ``Workload`` and key."""
     workload.check_sampler()
     streams = make_streams(key, workload.lam, workload.mu, workload.sampler,
                            L=L, K=K, A_max=A_max, horizon=horizon,
-                           num_resources=workload.num_resources)
+                           num_resources=workload.num_resources,
+                           fault_rate=fault_rate, repair_rate=repair_rate)
     return run_bfjs_mr_trace(streams, L=L, K=K, Qcap=Qcap, A_max=A_max,
                              engine=engine, work_steps=work_steps,
-                             capacity=workload.capacity, window=window)
+                             capacity=workload.capacity, window=window,
+                             max_requeue=max_requeue, strict=strict)
 
 
 def monte_carlo_bfjs_mr_workload(workload, keys, *, engine: str = "scan",
                                  L: int = 8, K: int = 16, Qcap: int = 512,
                                  A_max: int = 8, horizon: int = 10_000,
                                  work_steps: int | None = None,
-                                 window: int | None = None) -> PolicyResult:
+                                 window: int | None = None,
+                                 fault_rate: float = 0.0,
+                                 repair_rate: float = 1.0,
+                                 max_requeue: int = DEFAULT_MAX_REQUEUE,
+                                 strict: bool = False) -> PolicyResult:
     """One simulated cluster per key ("scan" vmaps; "reference" loops the
     host-side oracle and stacks; "pallas" pre-generates every member's
-    streams and runs the fused kernel with the ensemble as the grid)."""
+    streams and runs the fused kernel with the ensemble as the grid —
+    degrading to "scan" when the precheck rejects the request)."""
     workload.check_sampler()
     if engine == "reference":
         res = [run_bfjs_mr_workload(workload, k, engine=engine, L=L, K=K,
                                     Qcap=Qcap, A_max=A_max, horizon=horizon,
-                                    work_steps=work_steps) for k in keys]
+                                    work_steps=work_steps,
+                                    fault_rate=fault_rate,
+                                    repair_rate=repair_rate,
+                                    max_requeue=max_requeue) for k in keys]
         return jax.tree.map(lambda *xs: jnp.stack(xs), *res)
     if engine == "pallas":
-        from repro.kernels.bfjs_mr.ops import bfjs_mr_simulate
-        streams = jax.vmap(
-            lambda k: make_streams(k, workload.lam, workload.mu,
-                                   workload.sampler, L=L, K=K, A_max=A_max,
-                                   horizon=horizon,
-                                   num_resources=workload.num_resources)
-        )(keys)
-        return bfjs_mr_simulate(streams, L=L, K=K, Qcap=Qcap, A_max=A_max,
-                                work_steps=work_steps,
-                                capacity=workload.capacity, window=window)
+        from repro.kernels.bfjs_mr.ops import (bfjs_mr_scratch_bytes,
+                                               bfjs_mr_simulate)
+        from repro.kernels.common import pallas_precheck
+        R = int(workload.num_resources)
+        if not pallas_precheck(
+                "bfjs-mr", nbytes=bfjs_mr_scratch_bytes(L, K, Qcap, R),
+                fault_plane=fault_rate > 0.0, strict=strict):
+            engine = "scan"
+        else:
+            streams = jax.vmap(
+                lambda k: make_streams(k, workload.lam, workload.mu,
+                                       workload.sampler, L=L, K=K,
+                                       A_max=A_max, horizon=horizon,
+                                       num_resources=workload.num_resources)
+            )(keys)
+            return bfjs_mr_simulate(streams, L=L, K=K, Qcap=Qcap,
+                                    A_max=A_max, work_steps=work_steps,
+                                    capacity=workload.capacity,
+                                    window=window)
     fn = functools.partial(run_bfjs_mr_workload, workload, engine=engine,
                            L=L, K=K, Qcap=Qcap, A_max=A_max,
-                           horizon=horizon, work_steps=work_steps)
+                           horizon=horizon, work_steps=work_steps,
+                           fault_rate=fault_rate, repair_rate=repair_rate,
+                           max_requeue=max_requeue)
     return jax.vmap(fn)(keys)

@@ -59,6 +59,25 @@ def alignment_scores_jnp(avail: jax.Array, demand: jax.Array) -> jax.Array:
     return acc
 
 
+def first_empty_positions(empty: jax.Array,
+                          want: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Scatter targets for admitting a masked batch into a fixed buffer.
+
+    ``empty`` is the buffer's ``(Q,)`` empty-slot mask, ``want`` a ``(N,)``
+    mask of items asking for a slot.  Returns ``(pos, landed)``: the i-th
+    wanting item (in index order) is assigned the i-th empty slot, ``landed``
+    masks the items that actually got one (``pos < Q``; entries of
+    non-wanting items are garbage and must stay masked).  This is the
+    admission rule every engine uses — slot arrivals and fault-preemption
+    requeues go through the same first-empty order, so the scan engines and
+    the reference oracles agree on queue layout bit-for-bit.
+    """
+    n_empty = jnp.cumsum(empty.astype(jnp.int32))
+    rank = jnp.cumsum(want.astype(jnp.int32)) - 1
+    pos = jnp.searchsorted(n_empty, rank + 1)
+    return pos, want & (pos < empty.shape[0])
+
+
 def largest_fitting_job(queue: jax.Array, cap: jax.Array) -> jax.Array:
     """Index of the largest queued job with size <= cap (BF-S step);
     -1 if none. Zero entries mean empty queue slots."""

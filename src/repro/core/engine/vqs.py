@@ -45,6 +45,7 @@ import jax
 import jax.numpy as jnp
 
 from ..quantize import RES, TWO_THIRDS
+from .bfjs import DEFAULT_MAX_REQUEUE
 from .ops import k_red_jnp, vq_type_of_grid
 from .streams import (INF_SLOT, PolicyResult, SchedStreams, make_streams,
                       resolve_work_steps)
@@ -78,7 +79,7 @@ def _mw_config(confs: jax.Array, qcnt: jax.Array, J: int):
 
 
 def _push_arrivals(ring_eff, ring_dur, head, qcnt, dropped,
-                   n_t, sizes_t, durs_t, *, J, Qcap, A_max):
+                   n_t, sizes_t, durs_t, *, J, Qcap, A_max, ring_try=None):
     """Classify + enqueue one slot's arrivals (vectorized, order-exact).
 
     Durations come from the LAST ``A_max`` lanes of the duration stream —
@@ -88,6 +89,10 @@ def _push_arrivals(ring_eff, ring_dur, head, qcnt, dropped,
     mask that drives subscription wake-ups (all sampled arrivals wake, as
     in the numpy engine — a dropped arrival already flags the run via
     ``dropped``).
+
+    On fault-injected runs the rings additionally carry a retry-count plane
+    (``ring_try``, written by ``_preempt_rings``); fresh arrivals zero their
+    entry so a ring slot's count always belongs to the job stored there.
     """
     nvq = 2 * J
     a_iota = jnp.arange(A_max)
@@ -107,16 +112,62 @@ def _push_arrivals(ring_eff, ring_dur, head, qcnt, dropped,
     ring_eff = ring_eff.at[vq_w, pos].set(eff, mode="drop")
     ring_dur = ring_dur.at[vq_w, pos].set(durs_t[dur_off + a_iota],
                                           mode="drop")
+    if ring_try is not None:
+        ring_try = ring_try.at[vq_w, pos].set(0, mode="drop")
     qcnt = qcnt + (oh & land[:, None]).sum(0).astype(jnp.int32)
     dropped = dropped + (valid & ~land).sum()
     arrived = oh.any(0)
-    return ring_eff, ring_dur, head, qcnt, dropped, arrived
+    return ring_eff, ring_dur, head, qcnt, dropped, arrived, ring_try
+
+
+def _preempt_rings(srv, dep, vqof, ring_eff, ring_dur, ring_try, head, qcnt,
+                   srv_try, up_t, t, max_requeue, *, J, Qcap):
+    """Evict every job resident on a down server (DESIGN.md §9), VQS form.
+
+    Shared verbatim by the scan engine and the reference oracle.  Victims
+    below the retry bound re-enter the TAIL of their own virtual queue in
+    row-major ``(server, k-slot)`` order — the same one-hot tail-append rule
+    as ``_push_arrivals`` — with their REMAINING duration ``dep - t`` and
+    ``tries + 1``; victims past the bound (or whose ring is full) are lost.
+    Returns the updated planes, the slot's ``(n_preempted, n_requeued,
+    n_lost)`` counts, and the ``re_arrived`` type mask of rings that
+    received a requeue (it wakes subscribers exactly like an arrival).
+    """
+    nvq = 2 * J
+    j_iota = jnp.arange(nvq)
+    victim = (~up_t)[:, None] & (srv > 0)                       # (L, K)
+    elig = (victim & (srv_try < max_requeue)).reshape(-1)       # (L*K,)
+    vq = jnp.where(elig, vqof.reshape(-1), nvq)
+    oh = vq[:, None] == j_iota[None, :]                         # (L*K, 2J)
+    rank = ((jnp.cumsum(oh.astype(jnp.int32), axis=0) - 1) * oh).sum(1)
+    cnt_own = (oh * qcnt[None, :]).sum(1)
+    head_own = (oh * head[None, :]).sum(1)
+    land = elig & (cnt_own + rank < Qcap)
+    pos = (head_own + cnt_own + rank) % Qcap
+    vq_w = jnp.where(land, vq, nvq)
+    rem = jnp.maximum(dep.reshape(-1) - t, 1)   # remaining service slots
+    ring_eff = ring_eff.at[vq_w, pos].set(srv.reshape(-1), mode="drop")
+    ring_dur = ring_dur.at[vq_w, pos].set(rem, mode="drop")
+    ring_try = ring_try.at[vq_w, pos].set(srv_try.reshape(-1) + 1,
+                                          mode="drop")
+    qcnt = qcnt + (oh & land[:, None]).sum(0).astype(jnp.int32)
+    re_arrived = (oh & land[:, None]).any(0)
+    n_vict = victim.sum().astype(jnp.int32)
+    n_req = land.sum().astype(jnp.int32)
+    srv = jnp.where(victim, 0, srv)
+    dep = jnp.where(victim, INF_SLOT, dep)
+    vqof = jnp.where(victim, -1, vqof)
+    srv_try = jnp.where(victim, 0, srv_try)
+    return (srv, dep, vqof, ring_eff, ring_dur, ring_try, head, qcnt,
+            srv_try, n_vict, n_req, n_vict - n_req, re_arrived)
 
 
 @functools.partial(
-    jax.jit, static_argnames=("J", "L", "K", "Qcap", "A_max"))
+    jax.jit, static_argnames=("J", "L", "K", "Qcap", "A_max", "max_requeue"))
 def _run_vqs_reference_streams(streams: SchedStreams, J: int, L: int, K: int,
-                               Qcap: int, A_max: int) -> PolicyResult:
+                               Qcap: int, A_max: int,
+                               max_requeue: int = DEFAULT_MAX_REQUEUE
+                               ) -> PolicyResult:
     """Nested-loop VQS oracle over pre-generated streams.
 
     A control-flow-faithful transcription of ``core/vqs.py`` +
@@ -125,16 +176,24 @@ def _run_vqs_reference_streams(streams: SchedStreams, J: int, L: int, K: int,
     packing, subscription sets as a boolean (L, 2J) matrix.  Serial and
     branch-heavy — the behavioural anchor the scan engine is tested
     against (and, through trace streams, the bridge to the numpy engine).
+
+    Streams carrying a fault plane run the fault-injected variant through
+    the shared ``_preempt_rings`` rule, bit-matched with the scan engine.
     """
     horizon = streams.n.shape[0]
     nvq = 2 * J
     confs = k_red_jnp(J)
     k_iota = jnp.arange(K)
+    faulted = streams.up is not None
 
     def slot_step(state, inp):
         (srv, dep, vqof, ring_eff, ring_dur, head, qcnt,
-         cfg_k1, cfg_js, has_cfg, in_empty, want, t, dropped, trunc) = state
-        n_t, sizes_t, durs_t = inp
+         cfg_k1, cfg_js, has_cfg, in_empty, want, t, dropped, trunc,
+         ring_try, srv_try, preempted, requeued, lost, up_last) = state
+        if faulted:
+            n_t, sizes_t, durs_t, up_t = inp
+        else:
+            n_t, sizes_t, durs_t = inp
 
         # 1. departures
         leaving = dep == t
@@ -143,20 +202,43 @@ def _run_vqs_reference_streams(streams: SchedStreams, J: int, L: int, K: int,
         srv = jnp.where(leaving, 0, srv)
         vqof = jnp.where(leaving, -1, vqof)
         dep = jnp.where(leaving, INF_SLOT, dep)
+
+        # 1b. capacity shocks: evict down servers into the VQ tails
+        # (shared _preempt_rings rule), recoveries count as freed, down
+        # servers leave the visit set.
+        re_arrived = None
+        if faulted:
+            srv_try = jnp.where(leaving, 0, srv_try)
+            (srv, dep, vqof, ring_eff, ring_dur, ring_try, head, qcnt,
+             srv_try, n_p, n_r, n_l, re_arrived) = _preempt_rings(
+                srv, dep, vqof, ring_eff, ring_dur, ring_try, head, qcnt,
+                srv_try, up_t, t, max_requeue, J=J, Qcap=Qcap)
+            preempted = preempted + n_p
+            requeued = requeued + n_r
+            lost = lost + n_l
+            freed = (freed | (up_t & ~up_last)) & up_t
+            up_last = up_t
         empty_now = (srv > 0).sum(axis=1) == 0
 
         # 2. arrivals
-        (ring_eff, ring_dur, head, qcnt, dropped, arrived) = _push_arrivals(
+        (ring_eff, ring_dur, head, qcnt, dropped, arrived,
+         rt) = _push_arrivals(
             ring_eff, ring_dur, head, qcnt, dropped, n_t, sizes_t, durs_t,
-            J=J, Qcap=Qcap, A_max=A_max)
+            J=J, Qcap=Qcap, A_max=A_max,
+            ring_try=ring_try if faulted else None)
+        if faulted:
+            ring_try = rt
+            arrived = arrived | re_arrived
 
         # 3. visit set (freed + woken subscribers + empty-with-work)
         woken = (want & arrived[None, :]).any(axis=1)
         want = want & ~arrived[None, :]
         visit = freed | woken | (in_empty & (qcnt.sum() > 0))
+        if faulted:
+            visit = visit & up_t
 
         def place_one(i, j, carry):
-            srv, dep, vqof, head, qcnt, in_empty, trunc = carry
+            srv, dep, vqof, head, qcnt, in_empty, srv_try, trunc = carry
             pos = head[j] % Qcap
             eff_p = ring_eff[j, pos]
             dur_p = ring_dur[j, pos]
@@ -170,15 +252,19 @@ def _run_vqs_reference_streams(streams: SchedStreams, J: int, L: int, K: int,
             srv = srv.at[i, kw].set(eff_p, mode="drop")
             dep = dep.at[i, kw].set(t + dur_p, mode="drop")
             vqof = vqof.at[i, kw].set(j, mode="drop")
+            if faulted:  # retry count rides with the job
+                srv_try = srv_try.at[i, kw].set(ring_try[j, pos],
+                                                mode="drop")
             trunc = trunc + (~ok).astype(jnp.int32)
             in_empty = in_empty.at[i].set(False)
-            return srv, dep, vqof, head, qcnt, in_empty, trunc
+            return srv, dep, vqof, head, qcnt, in_empty, srv_try, trunc
 
         # 4. serve visited servers in ascending order
         def visit_server(i, carry):
             def serve(carry):
                 (srv, dep, vqof, head, qcnt,
-                 cfg_k1, cfg_js, has_cfg, in_empty, want, trunc) = carry
+                 cfg_k1, cfg_js, has_cfg, in_empty, want, srv_try,
+                 trunc) = carry
                 need = empty_now[i] | ~has_cfg[i]
                 r_k1, r_js = _mw_config(confs, qcnt, J)
                 k1 = jnp.where(need, r_k1, cfg_k1[i])
@@ -195,53 +281,58 @@ def _run_vqs_reference_streams(streams: SchedStreams, J: int, L: int, K: int,
                 he1 = ring_eff[1, head[1] % Qcap]
                 do1 = k1 & ~has_vq1 & ex1 & (he1 <= resid)
                 want = want.at[i, 1].set(want[i, 1] | (k1 & ~has_vq1 & ~ex1))
-                pl = (srv, dep, vqof, head, qcnt, in_empty, trunc)
+                pl = (srv, dep, vqof, head, qcnt, in_empty, srv_try, trunc)
                 pl = jax.lax.cond(do1, lambda c: place_one(i, 1, c),
                                   lambda c: c, pl)
-                srv, dep, vqof, head, qcnt, in_empty, trunc = pl
+                srv, dep, vqof, head, qcnt, in_empty, srv_try, trunc = pl
 
                 # (ii) head-of-VQ_{j*} packing into the unreserved capacity
                 other_cap = jnp.where(k1, CAP - RESERVE, CAP)
                 jsx = jnp.maximum(js, 0)
 
                 def jcond(c):
-                    srv, dep, vqof, head, qcnt, in_empty, trunc = c
+                    srv, dep, vqof, head, qcnt, in_empty, srv_try, trunc = c
                     ex = qcnt[jsx] > 0
                     he = ring_eff[jsx, head[jsx] % Qcap]
                     vq1_occ = (srv[i] * (vqof[i] == 1)).sum()
                     other_occ = srv[i].sum() - vq1_occ
                     return (js >= 0) & ex & (other_occ + he <= other_cap)
 
-                pl = (srv, dep, vqof, head, qcnt, in_empty, trunc)
+                pl = (srv, dep, vqof, head, qcnt, in_empty, srv_try, trunc)
                 pl = jax.lax.while_loop(jcond,
                                         lambda c: place_one(i, jsx, c), pl)
-                srv, dep, vqof, head, qcnt, in_empty, trunc = pl
+                srv, dep, vqof, head, qcnt, in_empty, srv_try, trunc = pl
                 sub_j = (js >= 0) & (qcnt[jsx] == 0)
                 want = want.at[i, jnp.where(sub_j, jsx, nvq)].set(
                     True, mode="drop")
                 return (srv, dep, vqof, head, qcnt,
-                        cfg_k1, cfg_js, has_cfg, in_empty, want, trunc)
+                        cfg_k1, cfg_js, has_cfg, in_empty, want, srv_try,
+                        trunc)
 
             return jax.lax.cond(visit[i], serve, lambda c: c, carry)
 
         carry = (srv, dep, vqof, head, qcnt,
-                 cfg_k1, cfg_js, has_cfg, in_empty, want, trunc)
+                 cfg_k1, cfg_js, has_cfg, in_empty, want, srv_try, trunc)
         carry = jax.lax.fori_loop(0, L, visit_server, carry)
         (srv, dep, vqof, head, qcnt,
-         cfg_k1, cfg_js, has_cfg, in_empty, want, trunc) = carry
+         cfg_k1, cfg_js, has_cfg, in_empty, want, srv_try, trunc) = carry
 
         out = (qcnt.sum().astype(jnp.int32),
                srv.sum().astype(jnp.float32) / RES,
                n_dep.astype(jnp.int32))
         state = (srv, dep, vqof, ring_eff, ring_dur, head, qcnt,
                  cfg_k1, cfg_js, has_cfg, in_empty, want, t + 1,
-                 dropped, trunc)
+                 dropped, trunc, ring_try, srv_try, preempted, requeued,
+                 lost, up_last)
         return state, out
 
     state0 = _init_state(J, L, K, Qcap)
-    state, (qlen, occ, ndep) = jax.lax.scan(
-        slot_step, state0, (streams.n, streams.sizes, streams.durs))
-    return PolicyResult(qlen, occ, jnp.cumsum(ndep), state[13], state[14])
+    xs = (streams.n, streams.sizes, streams.durs)
+    if faulted:
+        xs = xs + (streams.up,)
+    state, (qlen, occ, ndep) = jax.lax.scan(slot_step, state0, xs)
+    return PolicyResult(qlen, occ, jnp.cumsum(ndep), state[13], state[14],
+                        state[17], state[18], state[19])
 
 
 def _init_state(J: int, L: int, K: int, Qcap: int):
@@ -261,15 +352,24 @@ def _init_state(J: int, L: int, K: int, Qcap: int):
         jnp.ones((L,), bool),                      # in_empty (all start empty)
         jnp.zeros((L, nvq), bool),                 # want
         zero, zero, zero,                          # t, dropped, truncated
+        # fault-injection planes (indices 15+; zeros/ones when fault-free):
+        jnp.zeros((nvq, Qcap), jnp.int32),         # ring_try
+        jnp.zeros((L, K), jnp.int32),              # srv_try
+        zero, zero, zero,                          # preempted, requeued, lost
+        jnp.ones((L,), bool),                      # up_last
     )
 
 
 @functools.partial(
     jax.jit,
-    static_argnames=("J", "L", "K", "Qcap", "A_max", "work_steps", "drain"))
+    static_argnames=("J", "L", "K", "Qcap", "A_max", "work_steps", "drain",
+                     "max_requeue", "return_state"))
 def run_vqs_streams(streams: SchedStreams, J: int, L: int, K: int,
                     Qcap: int, A_max: int, work_steps: int | None = None,
-                    drain: int | None = None) -> PolicyResult:
+                    drain: int | None = None,
+                    max_requeue: int = DEFAULT_MAX_REQUEUE,
+                    state: tuple | None = None,
+                    return_state: bool = False):
     """Branch-free VQS slot engine over pre-generated streams.
 
     One ``lax.scan`` over slots; the per-slot serve pass is a work list of
@@ -297,6 +397,12 @@ def run_vqs_streams(streams: SchedStreams, J: int, L: int, K: int,
     and ends the slot.  A slot that exhausts the step bound with servers
     still unserved increments ``truncated`` (finished lazily — never
     silently wrong).
+
+    Streams carrying a fault plane run the fault-injected variant (shared
+    ``_preempt_rings`` eviction, down servers out of the visit set) and
+    stay bit-matched with the reference oracle.  ``state=`` /
+    ``return_state=True`` thread the complete scan carry for crash-safe
+    chunked sweeps (DESIGN.md §9).
     """
     horizon = streams.n.shape[0]
     nvq = 2 * J
@@ -307,11 +413,16 @@ def run_vqs_streams(streams: SchedStreams, J: int, L: int, K: int,
     j_iota = jnp.arange(nvq)
     k_iota = jnp.arange(K)
     p_iota = jnp.arange(P)
+    faulted = streams.up is not None
 
     def slot_step(state, inp):
         (srv, dep, vqof, ring_eff, ring_dur, head, qcnt,
-         cfg_k1, cfg_js, has_cfg, in_empty, want, t, dropped, trunc) = state
-        n_t, sizes_t, durs_t = inp
+         cfg_k1, cfg_js, has_cfg, in_empty, want, t, dropped, trunc,
+         ring_try, srv_try, preempted, requeued, lost, up_last) = state
+        if faulted:
+            n_t, sizes_t, durs_t, up_t = inp
+        else:
+            n_t, sizes_t, durs_t = inp
 
         # 1. departures
         leaving = dep == t
@@ -320,23 +431,45 @@ def run_vqs_streams(streams: SchedStreams, J: int, L: int, K: int,
         srv = jnp.where(leaving, 0, srv)
         vqof = jnp.where(leaving, -1, vqof)
         dep = jnp.where(leaving, INF_SLOT, dep)
+
+        # 1b. capacity shocks (identical rule to the reference oracle)
+        re_arrived = None
+        if faulted:
+            srv_try = jnp.where(leaving, 0, srv_try)
+            (srv, dep, vqof, ring_eff, ring_dur, ring_try, head, qcnt,
+             srv_try, n_p, n_r, n_l, re_arrived) = _preempt_rings(
+                srv, dep, vqof, ring_eff, ring_dur, ring_try, head, qcnt,
+                srv_try, up_t, t, max_requeue, J=J, Qcap=Qcap)
+            preempted = preempted + n_p
+            requeued = requeued + n_r
+            lost = lost + n_l
+            freed = (freed | (up_t & ~up_last)) & up_t
+            up_last = up_t
         empty_now = (srv > 0).sum(axis=1) == 0
 
         # 2. arrivals
-        (ring_eff, ring_dur, head, qcnt, dropped, arrived) = _push_arrivals(
+        (ring_eff, ring_dur, head, qcnt, dropped, arrived,
+         rt) = _push_arrivals(
             ring_eff, ring_dur, head, qcnt, dropped, n_t, sizes_t, durs_t,
-            J=J, Qcap=Qcap, A_max=A_max)
+            J=J, Qcap=Qcap, A_max=A_max,
+            ring_try=ring_try if faulted else None)
+        if faulted:
+            ring_try = rt
+            arrived = arrived | re_arrived
 
         # 3. visit set
         woken = (want & arrived[None, :]).any(axis=1)
         want = want & ~arrived[None, :]
         visit = freed | woken | (in_empty & (qcnt.sum() > 0))
+        if faulted:
+            visit = visit & up_t
         renew_needed = visit & (empty_now | ~has_cfg)
 
         # 4. bounded work list (see module docstring)
         def work(carry):
             (srv, dep, vqof, head, qcnt, cfg_k1, cfg_js, has_cfg,
-             in_empty, want, touched, advanced, trunc, n_steps) = carry
+             in_empty, want, touched, advanced, trunc, n_steps,
+             srv_try) = carry
             pending = visit & ~advanced
             hx = qcnt > 0
             head_effs = jnp.take_along_axis(
@@ -413,6 +546,12 @@ def run_vqs_streams(streams: SchedStreams, J: int, L: int, K: int,
             srv = jnp.where(lmask, new_row[None, :], srv)
             dep = jnp.where(lmask, new_dep[None, :], dep)
             vqof = jnp.where(lmask, new_vq[None, :], vqof)
+            if faulted:  # retry counts ride with the placed jobs
+                tries_w = ring_try[j_sel, wpos]
+                new_try = jnp.where(placed_k,
+                                    sel.astype(jnp.int32) @ tries_w,
+                                    srv_try[s])
+                srv_try = jnp.where(lmask, new_try[None, :], srv_try)
             jw = jnp.where(any_p, j_sel, nvq)
             head = head.at[jw].add(m, mode="drop")
             qcnt = qcnt.at[jw].add(-m, mode="drop")
@@ -420,7 +559,7 @@ def run_vqs_streams(streams: SchedStreams, J: int, L: int, K: int,
             trunc = trunc + jnp.maximum(m - free_cnt, 0)  # K-overflow
             return (srv, dep, vqof, head, qcnt, cfg_k1, cfg_js,
                     has_cfg, in_empty, want, touched, advanced, trunc,
-                    n_steps + 1)
+                    n_steps + 1, srv_try)
 
         # Early-exit bounded loop: when no pending server can place, the
         # body degenerates to the advance-everyone finalization (placement
@@ -434,10 +573,10 @@ def run_vqs_streams(streams: SchedStreams, J: int, L: int, K: int,
 
         carry = (srv, dep, vqof, head, qcnt, cfg_k1, cfg_js, has_cfg,
                  in_empty, want, jnp.zeros((L,), bool), jnp.zeros((L,), bool),
-                 trunc, jnp.zeros((), jnp.int32))
+                 trunc, jnp.zeros((), jnp.int32), srv_try)
         carry = jax.lax.while_loop(unfinished, work, carry)
         (srv, dep, vqof, head, qcnt, cfg_k1, cfg_js, has_cfg,
-         in_empty, want, _, advanced, trunc, _) = carry
+         in_empty, want, _, advanced, trunc, _, srv_try) = carry
         # cap hit with servers still unserved: the slot finished lazily
         trunc = trunc + (visit & ~advanced).any().astype(jnp.int32)
 
@@ -446,29 +585,45 @@ def run_vqs_streams(streams: SchedStreams, J: int, L: int, K: int,
                n_dep.astype(jnp.int32))
         state = (srv, dep, vqof, ring_eff, ring_dur, head, qcnt,
                  cfg_k1, cfg_js, has_cfg, in_empty, want, t + 1,
-                 dropped, trunc)
+                 dropped, trunc, ring_try, srv_try, preempted, requeued,
+                 lost, up_last)
         return state, out
 
-    state0 = _init_state(J, L, K, Qcap)
-    state, (qlen, occ, ndep) = jax.lax.scan(
-        slot_step, state0, (streams.n, streams.sizes, streams.durs))
-    return PolicyResult(qlen, occ, jnp.cumsum(ndep), state[13], state[14])
+    if state is None:
+        state = _init_state(J, L, K, Qcap)
+    xs = (streams.n, streams.sizes, streams.durs)
+    if faulted:
+        xs = xs + (streams.up,)
+    state, (qlen, occ, ndep) = jax.lax.scan(slot_step, state, xs)
+    res = PolicyResult(qlen, occ, jnp.cumsum(ndep), state[13], state[14],
+                       state[17], state[18], state[19])
+    return (res, state) if return_state else res
 
 
 def run_vqs_trace(streams: SchedStreams, *, J: int, L: int, K: int,
                   Qcap: int, A_max: int, engine: str = "scan",
                   work_steps: int | None = None,
-                  drain: int | None = None) -> PolicyResult:
+                  drain: int | None = None,
+                  max_requeue: int = DEFAULT_MAX_REQUEUE,
+                  strict: bool = False) -> PolicyResult:
     """Run one VQS simulation over explicit streams (random or trace)."""
     if engine == "reference":
         return _run_vqs_reference_streams(streams, J=J, L=L, K=K, Qcap=Qcap,
-                                          A_max=A_max)
+                                          A_max=A_max,
+                                          max_requeue=max_requeue)
     if engine == "scan":
         return run_vqs_streams(streams, J=J, L=L, K=K, Qcap=Qcap,
                                A_max=A_max, work_steps=work_steps,
-                               drain=drain)
+                               drain=drain, max_requeue=max_requeue)
     if engine == "pallas":
-        from repro.kernels.vqs.ops import vqs_simulate
+        from repro.kernels.common import pallas_precheck
+        from repro.kernels.vqs.ops import vqs_scratch_bytes, vqs_simulate
+        if not pallas_precheck(
+                "vqs", nbytes=vqs_scratch_bytes(J, L, K, Qcap),
+                fault_plane=streams.up is not None, strict=strict):
+            return run_vqs_streams(streams, J=J, L=L, K=K, Qcap=Qcap,
+                                   A_max=A_max, work_steps=work_steps,
+                                   drain=drain, max_requeue=max_requeue)
         batched = jax.tree.map(lambda x: x[None], streams)
         res = vqs_simulate(batched, J=J, L=L, K=K, Qcap=Qcap, A_max=A_max,
                            work_steps=work_steps, drain=drain)
@@ -481,17 +636,27 @@ def run_vqs(key: jax.Array, lam: float, mu: float,
             J: int = 4, L: int = 8, K: int = 16, Qcap: int = 512,
             A_max: int = 8, horizon: int = 10_000, engine: str = "scan",
             work_steps: int | None = None,
-            drain: int | None = None) -> PolicyResult:
+            drain: int | None = None,
+            fault_rate: float = 0.0, repair_rate: float = 1.0,
+            max_requeue: int = DEFAULT_MAX_REQUEUE,
+            strict: bool = False) -> PolicyResult:
     """Simulate VQS on L unit-capacity servers for ``horizon`` slots.
 
     Randomness is always hoisted into ``make_streams`` (service durations
     attach to jobs at arrival — distributionally identical to the numpy
     engine's draw-at-placement for the memoryless service model).
+
+    ``fault_rate > 0`` injects per-slot server capacity shocks: down
+    servers evict their jobs into the tails of their virtual queues (up to
+    ``max_requeue`` retries each, ``lost`` past that), identically on the
+    scan and reference engines.
     """
     streams = make_streams(key, lam, mu, sampler, L=L, K=K, A_max=A_max,
-                           horizon=horizon)
+                           horizon=horizon, fault_rate=fault_rate,
+                           repair_rate=repair_rate)
     return run_vqs_trace(streams, J=J, L=L, K=K, Qcap=Qcap, A_max=A_max,
-                         engine=engine, work_steps=work_steps, drain=drain)
+                         engine=engine, work_steps=work_steps, drain=drain,
+                         max_requeue=max_requeue, strict=strict)
 
 
 def run_vqs_workload(workload, key: jax.Array, *, engine: str = "scan",
@@ -518,17 +683,28 @@ def monte_carlo_vqs(keys: jax.Array, lam: float, mu: float, sampler,
                     engine: str = "scan", work_steps: int | None = None,
                     drain: int | None = None, J: int = 4, L: int = 8,
                     K: int = 16, Qcap: int = 512, A_max: int = 8,
-                    horizon: int = 10_000) -> PolicyResult:
+                    horizon: int = 10_000, fault_rate: float = 0.0,
+                    repair_rate: float = 1.0,
+                    max_requeue: int = DEFAULT_MAX_REQUEUE,
+                    strict: bool = False) -> PolicyResult:
     """One simulated cluster per key (vmap; "pallas" uses the kernel grid)."""
     if engine == "pallas":
-        from repro.kernels.vqs.ops import vqs_simulate
-        streams = jax.vmap(
-            lambda k: make_streams(k, lam, mu, sampler, L=L, K=K,
-                                   A_max=A_max, horizon=horizon))(keys)
-        return vqs_simulate(streams, J=J, L=L, K=K, Qcap=Qcap, A_max=A_max,
-                            work_steps=work_steps, drain=drain)
+        from repro.kernels.common import pallas_precheck
+        from repro.kernels.vqs.ops import vqs_scratch_bytes, vqs_simulate
+        if not pallas_precheck(
+                "vqs", nbytes=vqs_scratch_bytes(J, L, K, Qcap),
+                fault_plane=fault_rate > 0.0, strict=strict):
+            engine = "scan"
+        else:
+            streams = jax.vmap(
+                lambda k: make_streams(k, lam, mu, sampler, L=L, K=K,
+                                       A_max=A_max, horizon=horizon))(keys)
+            return vqs_simulate(streams, J=J, L=L, K=K, Qcap=Qcap,
+                                A_max=A_max, work_steps=work_steps,
+                                drain=drain)
     fn = functools.partial(run_vqs, lam=lam, mu=mu, sampler=sampler,
                            engine=engine, work_steps=work_steps, drain=drain,
                            J=J, L=L, K=K, Qcap=Qcap, A_max=A_max,
-                           horizon=horizon)
+                           horizon=horizon, fault_rate=fault_rate,
+                           repair_rate=repair_rate, max_requeue=max_requeue)
     return jax.vmap(fn)(keys)

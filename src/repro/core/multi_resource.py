@@ -58,6 +58,9 @@ class MRJob:
     demand: np.ndarray        # (R,) in (0, 1]^R
     arrival: int
     dur: int = 0
+    tries: int = 0            # completed requeue attempts (fault preemption)
+    dep_time: int = -1        # scheduled departure slot while in service
+    seq: int = -1             # queue-ordering id; refreshed on each requeue
 
 
 @dataclass
@@ -92,14 +95,27 @@ class MultiResourceBFJS:
         self.jobs: list[dict[int, MRJob]] = [dict() for _ in range(L)]
         self.queue: dict[int, MRJob] = {}
         self._dep: dict[int, list[tuple[int, int]]] = {}
+        # fault-preemption accounting (invariant: preempted == requeued
+        # + lost) and the queue-ordering seq counter: every queue
+        # insertion — arrival or requeue — takes the next seq, so dict
+        # iteration order is always ascending seq (what the scan engine's
+        # qseq tie-breaks reproduce).
+        self.preempted = 0
+        self.requeued = 0
+        self.lost = 0
+        self._seq = 0
+        self._down_last = np.zeros(L, dtype=bool)
 
     # -- scores -------------------------------------------------------------
     def _feasible(self, demand: np.ndarray) -> np.ndarray:
         return (self.occupied + demand[None, :]
                 <= self.capacity[None, :] + 1e-12).all(axis=1)
 
-    def _best_server(self, demand: np.ndarray) -> int:
+    def _best_server(self, demand: np.ndarray,
+                     down: np.ndarray | None = None) -> int:
         feas = self._feasible(demand)
+        if down is not None:
+            feas = feas & ~down
         if not feas.any():
             return -1
         avail = self.capacity[None, :] - self.occupied
@@ -127,18 +143,59 @@ class MultiResourceBFJS:
     def _place(self, t: int, server: int, job: MRJob) -> None:
         self.occupied[server] += job.demand
         self.jobs[server][job.jid] = job
-        self._dep.setdefault(t + max(job.dur, 1), []).append((server, job.jid))
+        job.dep_time = t + max(job.dur, 1)
+        self._dep.setdefault(job.dep_time, []).append((server, job.jid))
 
-    def step(self, t: int, new_jobs: list[MRJob]) -> None:
+    def step(self, t: int, new_jobs: list[MRJob],
+             down: np.ndarray | None = None,
+             max_requeue: int = 2) -> None:
+        """One slot: departures, fault preemption, arrivals, BF-S, BF-J.
+
+        ``down`` marks servers whose capacity is lost this slot (fault
+        plane); every job in service there is preempted — requeued with
+        its REMAINING duration while ``tries < max_requeue``, counted
+        ``lost`` otherwise.  Victims are processed in ascending ``seq``
+        order so requeues re-enter the queue exactly where the scan
+        engine's fresh-seq scatter puts them.  Down servers never receive
+        placements; a server recovering (down last slot, up now) rejoins
+        the BF-S freed set."""
         freed = set()
         for server, jid in self._dep.pop(t, []):
             job = self.jobs[server].pop(jid)
             self.occupied[server] -= job.demand
             freed.add(server)
         self.occupied = np.clip(self.occupied, 0.0, None)
+        down = (np.zeros(self.L, dtype=bool) if down is None
+                else np.asarray(down, dtype=bool))
+        victims = []
+        for server in np.flatnonzero(down):
+            for jid, job in self.jobs[server].items():
+                victims.append((job.seq, int(server), jid))
+        for _, server, jid in sorted(victims):
+            job = self.jobs[server].pop(jid)
+            self.occupied[server] -= job.demand
+            self._dep[job.dep_time].remove((server, jid))
+            self.preempted += 1
+            if job.tries < max_requeue:
+                job.tries += 1
+                job.dur = max(job.dep_time - t, 1)
+                job.seq = self._seq
+                self._seq += 1
+                self.queue[jid] = job
+                self.requeued += 1
+            else:
+                self.lost += 1
+        if victims:
+            self.occupied = np.clip(self.occupied, 0.0, None)
+        recovered = self._down_last & ~down
+        freed |= {int(s) for s in np.flatnonzero(recovered)}
+        freed -= {int(s) for s in np.flatnonzero(down)}
+        self._down_last = down
         for job in new_jobs:
+            job.seq = self._seq
+            self._seq += 1
             self.queue[job.jid] = job
-        # BF-S over freed servers
+        # BF-S over freed (and just-recovered) servers
         for server in sorted(freed):
             while True:
                 job = self._best_job(server)
@@ -149,7 +206,7 @@ class MultiResourceBFJS:
         # BF-J over new arrivals still queued
         for job in new_jobs:
             if job.jid in self.queue:
-                server = self._best_server(job.demand)
+                server = self._best_server(job.demand, down)
                 if server >= 0:
                     del self.queue[job.jid]
                     self._place(t, server, job)
@@ -270,7 +327,7 @@ class CollapsedMaxBFJS(MultiResourceBFJS):
 
     name = "mr-max-collapse"
 
-    def step(self, t, new_jobs):
+    def step(self, t, new_jobs, down=None, max_requeue=2):
         for job in new_jobs:
             job.demand = np.full(self.R, float(job.demand.max()))
-        super().step(t, new_jobs)
+        super().step(t, new_jobs, down=down, max_requeue=max_requeue)

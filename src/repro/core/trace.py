@@ -16,6 +16,7 @@ times are multiplied by beta (larger 1/beta => more jobs per slot).
 from __future__ import annotations
 
 import csv
+import warnings
 from dataclasses import dataclass
 
 import numpy as np
@@ -27,6 +28,7 @@ class Trace:
     cpu: np.ndarray             # float in (0,1]
     mem: np.ndarray             # float in (0,1]
     durations: np.ndarray       # int64 slots
+    skipped: int = 0            # malformed rows dropped by the loader
 
     def __len__(self) -> int:
         return len(self.arrival_slots)
@@ -82,7 +84,7 @@ _COLUMN_ALIASES = {
 
 
 def load_trace_csv(path, *, slot_seconds: float = 1.0,
-                   normalize: bool = True) -> Trace:
+                   normalize: bool = True, strict: bool = False) -> Trace:
     """Load a Google-2019 / Alibaba-style CSV into a :class:`Trace`.
 
     Expects a header row naming (in any order, any of the usual spellings)
@@ -100,8 +102,15 @@ def load_trace_csv(path, *, slot_seconds: float = 1.0,
     absolute core counts / bytes); values are then clipped into (0, 1] —
     the engines' job-size domain.  ``normalize=False`` takes the values as
     already-normalized fractions and REJECTS anything outside (0, 1]
-    instead of silently saturating it.  Rows with non-positive cpu AND
-    mem, or non-positive duration, are skipped.
+    instead of silently saturating it.
+
+    Malformed rows — unparseable fields, NaN/inf values, negative cpu or
+    mem, non-positive (cpu AND mem) or duration, and submit times that go
+    BACKWARDS relative to the previous accepted row — are never consumed
+    silently: under ``strict=False`` (default) each is skipped and
+    counted (``Trace.skipped``, plus one summary warning); under
+    ``strict=True`` the first one raises ``ValueError`` naming the file
+    and 1-based row number.
 
     Returns the trace sorted by arrival slot — directly consumable by
     ``streams_from_trace(trace, collapse=False)`` (uncollapsed (cpu, mem)
@@ -125,6 +134,15 @@ def load_trace_csv(path, *, slot_seconds: float = 1.0,
                     f"{path}: no column for {field!r} (looked for "
                     f"{', '.join(aliases)}; header: {', '.join(names)})")
         submit, cpu, mem, dur = [], [], [], []
+        skipped = 0
+        prev_s = -np.inf
+
+        def bad(ln: int, why: str, rec) -> None:
+            nonlocal skipped
+            if strict:
+                raise ValueError(f"{path}:{ln}: {why}: {rec!r}")
+            skipped += 1
+
         for ln, rec in enumerate(reader, start=2):
             if not rec or not "".join(rec).strip():
                 continue
@@ -133,16 +151,34 @@ def load_trace_csv(path, *, slot_seconds: float = 1.0,
                 c = float(rec[cols["cpu"]])
                 m = float(rec[cols["mem"]])
                 d = float(rec[cols["duration"]])
-            except (ValueError, IndexError) as e:
-                raise ValueError(f"{path}:{ln}: bad row {rec!r}") from e
-            if d <= 0 or (c <= 0 and m <= 0):
+            except (ValueError, IndexError):
+                bad(ln, "bad row (unparseable field)", rec)
                 continue
+            if not all(np.isfinite(v) for v in (s, c, m, d)):
+                bad(ln, "bad row (non-finite field)", rec)
+                continue
+            if c < 0 or m < 0 or (c <= 0 and m <= 0):
+                bad(ln, "bad row (non-positive resource request)", rec)
+                continue
+            if d <= 0:
+                bad(ln, "bad row (non-positive duration)", rec)
+                continue
+            if s < prev_s:
+                bad(ln, "bad row (non-monotone submit time "
+                        f"{s:g} after {prev_s:g})", rec)
+                continue
+            prev_s = s
             submit.append(s)
             cpu.append(c)
             mem.append(m)
             dur.append(d)
     if not submit:
-        raise ValueError(f"{path}: no usable rows")
+        detail = f" ({skipped} malformed row(s) skipped)" if skipped else ""
+        raise ValueError(f"{path}: no usable rows{detail}")
+    if skipped:
+        warnings.warn(
+            f"{path}: skipped {skipped} malformed row(s) — pass "
+            "strict=True to fail on the first instead", stacklevel=2)
 
     submit = np.asarray(submit)
     cpu = np.asarray(cpu)
@@ -166,7 +202,8 @@ def load_trace_csv(path, *, slot_seconds: float = 1.0,
     slots = np.floor((submit - submit.min()) / slot_seconds).astype(np.int64)
     dur_slots = np.maximum(np.ceil(dur / slot_seconds), 1).astype(np.int64)
     order = np.argsort(slots, kind="stable")
-    return Trace(slots[order], cpu[order], mem[order], dur_slots[order])
+    return Trace(slots[order], cpu[order], mem[order], dur_slots[order],
+                 skipped=skipped)
 
 
 def collapse_resources(trace: Trace) -> np.ndarray:

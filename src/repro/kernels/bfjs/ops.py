@@ -11,6 +11,16 @@ from .bfjs import bfjs_pallas
 from .ref import bfjs_ref
 
 
+def bfjs_scratch_bytes(L: int, K: int, Qcap: int, A_max: int) -> int:
+    """Estimated per-core VMEM scratch of the fused BF-J/S kernel: the
+    persistent simulation state — srv (L,K) f32, dep (L,K) i32, queue
+    (1,Qcap) f32, scalar block (1,4) i32 — all 4-byte lanes.  Checked
+    against ``kernels.common.vmem_budget_bytes`` by the engine dispatch
+    before launching (graceful-degradation rule, DESIGN.md §8/§9)."""
+    del A_max
+    return 4 * (2 * L * K + Qcap + 4)
+
+
 def bfjs_simulate(streams: SchedStreams, L: int, K: int, Qcap: int,
                   A_max: int, work_steps: int | None = None,
                   window: int | None = None,
@@ -27,4 +37,6 @@ def bfjs_simulate(streams: SchedStreams, L: int, K: int, Qcap: int,
         streams.n, streams.sizes, streams.durs, L=L, K=K, Qcap=Qcap,
         A_max=A_max, work_steps=work_steps, window=window,
         interpret=interpret_default())
-    return PolicyResult(qlen, occ, jnp.cumsum(ndep, axis=1), dropped, trunc)
+    z = jnp.zeros_like(dropped)  # kernels simulate fault-free clusters
+    return PolicyResult(qlen, occ, jnp.cumsum(ndep, axis=1), dropped, trunc,
+                        z, z, z)

@@ -12,6 +12,16 @@ from .bfjs_mr import bfjs_mr_pallas
 from .ref import bfjs_mr_ref
 
 
+def bfjs_mr_scratch_bytes(L: int, K: int, Qcap: int, R: int) -> int:
+    """Estimated per-core VMEM scratch of the fused multi-resource BF-J/S
+    kernel (the DESIGN.md §8 budget formula): demand (L,R·K), dep (L,K),
+    occupancy (L,R), queue demand (R,Qcap), queue meta (2,Qcap) and the
+    (1,4) scalar block — all int32.  Checked against
+    ``kernels.common.vmem_budget_bytes`` by the engine dispatch before
+    launching (DESIGN.md §8/§9)."""
+    return 4 * (2 * L * K * R + L * K + L * R + 3 * Qcap + 4)
+
+
 def _lift_batched_sizes(streams: SchedStreams) -> SchedStreams:
     """The kernel consumes (G, T, A_max, R) sizes; lift squeezed R=1
     ensemble streams (same contract as engine.bfjs_mr._lift_sizes)."""
@@ -43,4 +53,6 @@ def bfjs_mr_simulate(streams: SchedStreams, L: int, K: int, Qcap: int,
         streams.n, streams.sizes, streams.durs, L=L, K=K, Qcap=Qcap,
         A_max=A_max, work_steps=work_steps, capacity=capacity,
         window=window, interpret=interpret_default())
-    return PolicyResult(qlen, occ, jnp.cumsum(ndep, axis=1), dropped, trunc)
+    z = jnp.zeros_like(dropped)  # kernels simulate fault-free clusters
+    return PolicyResult(qlen, occ, jnp.cumsum(ndep, axis=1), dropped, trunc,
+                        z, z, z)

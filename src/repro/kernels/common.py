@@ -8,10 +8,65 @@ and interpret mode elsewhere.  The pieces they share live here.
 """
 from __future__ import annotations
 
+import os
+import warnings
+
 import jax
 
 #: f32 infeasibility sentinel used by the float kernels (~f32 max).
 BIG = 3.4e38
+
+#: Default VMEM scratch budget for the fused kernels (bytes).  TPU cores
+#: have ~16 MiB of VMEM; the default leaves headroom for the per-window
+#: stream blocks and compiler spills.  Override with the
+#: REPRO_VMEM_BUDGET_BYTES environment variable (read at call time, so
+#: tests can monkeypatch the environment).
+VMEM_BUDGET_BYTES = 14 * 1024 * 1024
+
+
+class GracefulDegradationWarning(UserWarning):
+    """A ``engine="pallas"`` request was served by the scan engine instead.
+
+    Raised as a *warning* (never silently) when the fused kernel cannot run
+    the request — VMEM scratch estimate over budget, or a feature the kernel
+    does not implement (fault planes).  The scan engine is bit-identical, so
+    results are unaffected; pass ``strict=True`` to get a hard error
+    instead."""
+
+
+def vmem_budget_bytes() -> int:
+    """The enforced VMEM scratch budget (env-overridable, read per call)."""
+    return int(os.environ.get("REPRO_VMEM_BUDGET_BYTES", VMEM_BUDGET_BYTES))
+
+
+def pallas_precheck(kernel: str, *, nbytes: int, fault_plane: bool = False,
+                    strict: bool = False) -> bool:
+    """Gate an ``engine="pallas"`` dispatch (DESIGN.md §8/§9 enforcement).
+
+    Returns True when the fused kernel may run.  On a violation — estimated
+    VMEM scratch ``nbytes`` over :func:`vmem_budget_bytes`, or a fault-plane
+    request (the kernels simulate fault-free clusters only) — either raises
+    ``ValueError`` (``strict=True``) or emits a loud
+    :class:`GracefulDegradationWarning` and returns False so the caller
+    falls back to the bit-identical scan engine.  Never fail silently."""
+    budget = vmem_budget_bytes()
+    reason = None
+    if fault_plane:
+        reason = (f"kernel {kernel!r} does not implement fault-plane "
+                  "preemption")
+    elif nbytes > budget:
+        reason = (f"kernel {kernel!r} needs ~{nbytes} bytes of VMEM "
+                  f"scratch, over the {budget}-byte budget "
+                  "(REPRO_VMEM_BUDGET_BYTES)")
+    if reason is None:
+        return True
+    if strict:
+        raise ValueError(
+            f"{reason}; engine=\"pallas\" cannot honour this request "
+            "(strict=True — rerun with engine=\"scan\" or strict=False)")
+    warnings.warn(f"{reason}; falling back to the bit-identical scan "
+                  "engine", GracefulDegradationWarning, stacklevel=3)
+    return False
 
 
 def interpret_default() -> bool:

@@ -12,6 +12,16 @@ from .ref import vqs_ref
 from .vqs import vqs_pallas
 
 
+def vqs_scratch_bytes(J: int, L: int, K: int, Qcap: int) -> int:
+    """Estimated per-core VMEM scratch of the fused VQS kernel: three
+    (L,K) planes, two (2J,Qcap) ring planes, (2,2J) ring heads, (4,L)
+    per-server block, (L,2J) placer block and a (1,2) scalar block — all
+    int32.  Checked against ``kernels.common.vmem_budget_bytes`` by the
+    engine dispatch before launching (DESIGN.md §8/§9)."""
+    nvq = 2 * J
+    return 4 * (3 * L * K + 2 * nvq * Qcap + 2 * nvq + 4 * L + L * nvq + 2)
+
+
 def vqs_simulate(streams: SchedStreams, J: int, L: int, K: int, Qcap: int,
                  A_max: int, work_steps: int | None = None,
                  drain: int | None = None, window: int | None = None,
@@ -30,4 +40,6 @@ def vqs_simulate(streams: SchedStreams, J: int, L: int, K: int, Qcap: int,
         streams.n, streams.sizes, streams.durs, J=J, L=L, K=K, Qcap=Qcap,
         A_max=A_max, work_steps=work_steps, drain=drain, window=window,
         interpret=interpret_default())
-    return PolicyResult(qlen, occ, jnp.cumsum(ndep, axis=1), dropped, trunc)
+    z = jnp.zeros_like(dropped)  # kernels simulate fault-free clusters
+    return PolicyResult(qlen, occ, jnp.cumsum(ndep, axis=1), dropped, trunc,
+                        z, z, z)

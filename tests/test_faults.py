@@ -1,0 +1,217 @@
+"""Fault-injected cluster simulation (DESIGN.md §9).
+
+Three contracts, per policy:
+  * the fault plane is a pure overlay — attaching it never perturbs the
+    job streams, and fault-free streams keep their exact trajectories;
+  * faulted scan trajectories bit-match the event-driven reference oracle
+    (queue/occupancy/departures AND the preempted/requeued/lost counters);
+  * preemption accounting never loses a job silently:
+    ``preempted == requeued + lost`` always.
+
+Plus the §9 enforced-graceful-degradation half: ``engine="pallas"``
+requests the fused kernels cannot honour (fault planes, VMEM budget) fall
+back to the bit-identical scan engine with a loud
+``GracefulDegradationWarning`` — or raise under ``strict=True``.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.core.engine import (Workload, fault_plane_from_events,
+                               make_fault_plane, make_streams, run_policy,
+                               run_policy_streams, with_fault_plane)
+from repro.kernels.common import GracefulDegradationWarning
+
+
+def _scalar_sampler(key, n):
+    return jax.random.uniform(key, (n,), minval=0.05, maxval=0.5)
+
+
+def _vec_sampler(key, n):
+    return jax.random.uniform(key, (n, 2), minval=0.05, maxval=0.5)
+
+
+#: Shock plane hot enough that every policy sees real preemptions in 200
+#: slots (stationary availability 0.4 / 0.43 ~ 93%) — but mild enough,
+#: with the generous Qcap below, that no queue overflows: the bit-match
+#: contract needs ``dropped == 0`` (the oracle queue is unbounded).
+FAULT = dict(fault_rate=0.03, repair_rate=0.4)
+
+#: policy -> (Workload, engine-agnostic config); shapes follow the parity
+#: matrix (tests/test_engine_parity_matrix.py) with a longer horizon so
+#: requeued jobs get preempted AGAIN and the lost path exercises too.
+MATRIX = {
+    "bfjs": (Workload(lam=1.2, mu=0.05, sampler=_scalar_sampler),
+             dict(L=4, K=6, Qcap=256, A_max=5, horizon=200)),
+    "vqs": (Workload(lam=1.0, mu=0.05, sampler=_scalar_sampler),
+            dict(L=4, K=8, Qcap=256, A_max=5, horizon=200, J=3)),
+    "bfjs-mr": (Workload(lam=0.5, mu=0.05, sampler=_vec_sampler,
+                         num_resources=2, capacity=(1.0, 0.75)),
+                dict(L=4, K=8, Qcap=256, A_max=5, horizon=200,
+                     work_steps=24)),
+}
+
+
+# ---------------------------------------------------------------------------
+# the fault plane itself
+# ---------------------------------------------------------------------------
+def test_fault_plane_shape_and_determinism():
+    key = jax.random.PRNGKey(0)
+    up = make_fault_plane(key, L=6, horizon=300, fault_rate=0.1,
+                          repair_rate=0.3)
+    assert up.shape == (300, 6) and up.dtype == jnp.bool_
+    down_frac = 1.0 - float(np.asarray(up).mean())
+    assert 0.05 < down_frac < 0.6          # shocks actually happen
+    np.testing.assert_array_equal(
+        np.asarray(up),
+        np.asarray(make_fault_plane(key, L=6, horizon=300, fault_rate=0.1,
+                                    repair_rate=0.3)))
+
+
+def test_faults_never_perturb_job_streams():
+    """Attaching the plane must not shift a single RNG draw: n/sizes/durs
+    are bitwise identical with and without fault_rate."""
+    key = jax.random.PRNGKey(7)
+    kw = dict(L=4, K=6, A_max=5, horizon=120)
+    clean = make_streams(key, 1.2, 0.05, _scalar_sampler, **kw)
+    faulted = make_streams(key, 1.2, 0.05, _scalar_sampler, **kw, **FAULT)
+    assert clean.up is None and faulted.up is not None
+    for f in ("n", "sizes", "durs"):
+        np.testing.assert_array_equal(np.asarray(getattr(clean, f)),
+                                      np.asarray(getattr(faulted, f)))
+
+
+def test_fault_plane_from_events_and_validation():
+    plane = fault_plane_from_events(
+        [(5, 1, False), (10, 1, True), (3, 0, False)], horizon=20, L=2)
+    up = np.asarray(plane)
+    assert up[:3, 0].all() and not up[3:, 0].any()     # 0 down from slot 3
+    assert up[:5, 1].all() and not up[5:10, 1].any() and up[10:, 1].all()
+    with pytest.raises(ValueError, match="outside horizon"):
+        fault_plane_from_events([(20, 0, False)], horizon=20, L=2)
+    with pytest.raises(ValueError, match="outside"):
+        fault_plane_from_events([(0, 2, False)], horizon=20, L=2)
+    streams = make_streams(jax.random.PRNGKey(1), 0.5, 0.1, _scalar_sampler,
+                           L=2, K=4, A_max=3, horizon=20)
+    with pytest.raises(ValueError, match=r"must be \(T=20, L\)"):
+        with_fault_plane(streams, np.ones((19, 2), bool))
+    assert with_fault_plane(streams, plane).up is not None
+
+
+# ---------------------------------------------------------------------------
+# faulted scan == reference oracle, per policy
+# ---------------------------------------------------------------------------
+@pytest.mark.parametrize("policy", sorted(MATRIX))
+def test_faulted_scan_matches_reference(policy):
+    wl, cfg = MATRIX[policy]
+    key = jax.random.PRNGKey(42)
+    ref_cfg = {k: v for k, v in cfg.items() if k != "work_steps"}
+    ref = run_policy(wl, key, policy=policy, engine="reference",
+                     **ref_cfg, **FAULT)
+    res = run_policy(wl, key, policy=policy, engine="scan", **cfg, **FAULT)
+    assert int(res.truncated) == 0 and int(res.dropped) == 0
+    pre, req, lost = (int(res.preempted), int(res.requeued), int(res.lost))
+    assert pre > 0, "fault config produced no preemptions — test is vacuous"
+    assert pre == req + lost
+    for f in ref._fields:
+        np.testing.assert_array_equal(
+            np.asarray(getattr(res, f)), np.asarray(getattr(ref, f)),
+            err_msg=f"{policy}: faulted scan diverged from oracle on {f!r}")
+
+
+@pytest.mark.parametrize("policy", sorted(MATRIX))
+def test_fault_free_counters_are_zero(policy):
+    wl, cfg = MATRIX[policy]
+    res = run_policy(wl, jax.random.PRNGKey(42), policy=policy,
+                     engine="scan", **cfg)
+    assert int(res.preempted) == int(res.requeued) == int(res.lost) == 0
+
+
+def test_max_requeue_zero_loses_every_preemption():
+    wl, cfg = MATRIX["bfjs"]
+    key = jax.random.PRNGKey(42)
+    res = run_policy(wl, key, policy="bfjs", engine="scan", **cfg, **FAULT,
+                     max_requeue=0)
+    ref = run_policy(wl, key, policy="bfjs", engine="reference", **cfg,
+                     **FAULT, max_requeue=0)
+    assert int(res.preempted) > 0
+    assert int(res.requeued) == 0
+    assert int(res.lost) == int(res.preempted)
+    np.testing.assert_array_equal(np.asarray(res.queue_len),
+                                  np.asarray(ref.queue_len))
+    assert int(res.lost) == int(ref.lost)
+
+
+def test_event_plane_scan_matches_reference():
+    """Deterministic downtime from an explicit event trace (the
+    machine-events ingestion path): scan == oracle on bfjs-mr streams."""
+    key = jax.random.PRNGKey(3)
+    wl, cfg = MATRIX["bfjs-mr"]
+    streams = make_streams(key, wl.lam, wl.mu, wl.sampler, L=cfg["L"],
+                           K=cfg["K"], A_max=cfg["A_max"],
+                           horizon=cfg["horizon"], num_resources=2)
+    events = [(40, 0, False), (60, 0, True), (80, 1, False), (81, 2, False),
+              (120, 1, True), (120, 2, True)]
+    streams = with_fault_plane(
+        streams, fault_plane_from_events(events, cfg["horizon"], cfg["L"]))
+    run_kw = dict(Qcap=cfg["Qcap"], capacity=wl.capacity)
+    res = run_policy_streams(streams, policy="bfjs-mr", engine="scan",
+                             L=cfg["L"], K=cfg["K"], A_max=cfg["A_max"],
+                             work_steps=cfg["work_steps"], **run_kw)
+    ref = run_policy_streams(streams, policy="bfjs-mr", engine="reference",
+                             L=cfg["L"], capacity=wl.capacity)
+    assert int(res.truncated) == 0 and int(res.dropped) == 0
+    assert int(res.preempted) > 0
+    for f in ref._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(res, f)),
+                                      np.asarray(getattr(ref, f)),
+                                      err_msg=f"event-plane mismatch on {f!r}")
+
+
+# ---------------------------------------------------------------------------
+# enforced graceful degradation (pallas -> scan)
+# ---------------------------------------------------------------------------
+@pytest.fixture
+def faulted_bfjs_streams():
+    return make_streams(jax.random.PRNGKey(5), 1.2, 0.05, _scalar_sampler,
+                        L=4, K=6, A_max=5, horizon=120, **FAULT)
+
+
+BFJS_KW = dict(L=4, K=6, Qcap=64, A_max=5)
+
+
+def test_pallas_fault_plane_degrades_to_scan(faulted_bfjs_streams):
+    scan = run_policy_streams(faulted_bfjs_streams, policy="bfjs",
+                              engine="scan", **BFJS_KW)
+    with pytest.warns(GracefulDegradationWarning, match="fault-plane"):
+        res = run_policy_streams(faulted_bfjs_streams, policy="bfjs",
+                                 engine="pallas", **BFJS_KW)
+    for f in scan._fields:
+        np.testing.assert_array_equal(np.asarray(getattr(res, f)),
+                                      np.asarray(getattr(scan, f)))
+
+
+def test_pallas_fault_plane_strict_raises(faulted_bfjs_streams):
+    with pytest.raises(ValueError, match="strict=True"):
+        run_policy_streams(faulted_bfjs_streams, policy="bfjs",
+                           engine="pallas", strict=True, **BFJS_KW)
+
+
+def test_pallas_vmem_budget_degrades_to_scan(monkeypatch):
+    """A 1-byte budget fails every scratch estimate: the dispatch must warn
+    (naming the budget env var) and serve the scan trajectory instead."""
+    streams = make_streams(jax.random.PRNGKey(5), 1.2, 0.05,
+                           _scalar_sampler, L=4, K=6, A_max=5, horizon=120)
+    scan = run_policy_streams(streams, policy="bfjs", engine="scan",
+                              **BFJS_KW)
+    monkeypatch.setenv("REPRO_VMEM_BUDGET_BYTES", "1")
+    with pytest.warns(GracefulDegradationWarning,
+                      match="REPRO_VMEM_BUDGET_BYTES"):
+        res = run_policy_streams(streams, policy="bfjs", engine="pallas",
+                                 **BFJS_KW)
+    np.testing.assert_array_equal(np.asarray(res.queue_len),
+                                  np.asarray(scan.queue_len))
+    with pytest.raises(ValueError, match="VMEM"):
+        run_policy_streams(streams, policy="bfjs", engine="pallas",
+                           strict=True, **BFJS_KW)

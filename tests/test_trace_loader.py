@@ -87,5 +87,57 @@ def test_loader_error_paths(tmp_path):
         load_trace_csv(p3)
     p4 = tmp_path / "badrow.csv"
     p4.write_text("job_id,submit_time,cpu,mem,duration\n1,x,0.5,0.5,10\n")
-    with pytest.raises(ValueError, match="bad row"):
+    # strict: first malformed row raises, naming file and 1-based row number
+    with pytest.raises(ValueError, match=r"badrow\.csv:2: bad row"):
+        load_trace_csv(p4, strict=True)
+    # default: the row is skipped — leaving zero usable rows, and the
+    # error says how many were dropped
+    with pytest.raises(ValueError,
+                       match=r"no usable rows \(1 malformed row"):
         load_trace_csv(p4)
+
+
+CORRUPT = os.path.join(os.path.dirname(__file__), "data",
+                       "google_like_corrupt.csv")
+
+
+def test_loader_skips_and_counts_malformed_rows():
+    """Pinned corrupted fixture: 10 good rows interleaved with 6 malformed
+    ones (unparseable, NaN, inf, negative size, zero duration, backwards
+    submit time).  Default mode skips-and-counts every one; the surviving
+    rows match the clean subset exactly."""
+    with pytest.warns(UserWarning, match="skipped 6 malformed"):
+        trace = load_trace_csv(CORRUPT, normalize=False)
+    assert trace.skipped == 6
+    assert len(trace) == 10
+    # the good rows survive untouched and stay slot-sorted
+    assert (np.diff(trace.arrival_slots) >= 0).all()
+    assert trace.cpu.min() > 0 and trace.mem.min() > 0
+    assert (trace.durations >= 1).all()
+    assert np.isfinite(trace.cpu).all() and np.isfinite(trace.mem).all()
+
+
+@pytest.mark.parametrize("bad,why", [
+    ("9,x,0.5,0.5,10", "unparseable"),
+    ("9,6.0,nan,0.4,12", "non-finite"),
+    ("9,6.0,0.3,inf,9", "non-finite"),
+    ("9,6.0,-0.2,0.3,5", "non-positive resource"),
+    ("9,6.0,0.0,0.0,5", "non-positive resource"),
+    ("9,6.0,0.4,0.2,0", "non-positive duration"),
+    ("9,1.0,0.3,0.3,7", "non-monotone submit time"),
+])
+def test_loader_strict_names_first_bad_row(tmp_path, bad, why):
+    """strict=True raises on the FIRST malformed row, naming the file, the
+    1-based line number and the reason."""
+    p = tmp_path / "strict.csv"
+    p.write_text("job_id,submit_time,cpu,mem,duration\n"
+                 "1,5.0,0.25,0.5,10\n"          # good row, line 2
+                 f"{bad}\n"                      # malformed row, line 3
+                 "2,7.0,0.5,0.125,5\n")
+    with pytest.raises(ValueError,
+                       match=rf"strict\.csv:3: bad row \({why}"):
+        load_trace_csv(p, strict=True)
+    # default mode on the same file: skip the one bad row, keep the rest
+    with pytest.warns(UserWarning, match="skipped 1 malformed"):
+        trace = load_trace_csv(p, normalize=False)
+    assert trace.skipped == 1 and len(trace) == 2
