@@ -32,6 +32,7 @@ from repro.core.engine import (Workload, best_fit_place, make_streams,
                                run_bfjs, run_bfjs_mr_streams,
                                run_vqs_streams)
 from repro.core.engine.bfjs_mr import _run_bfjs_mr_reference
+from repro.core.engine.tuning import apply_tuned
 from repro.core.engine.vqs import _run_vqs_reference_streams
 from repro.kernels.best_fit.best_fit import best_fit_pallas
 from repro.kernels.bfjs.ops import bfjs_simulate
@@ -103,7 +104,7 @@ def _bench_ensemble():
             f";speedup_vs_ref={us_by_engine['reference'] / us:.2f}x"
         row(f"micro/bfjs_mc_{engine}", us / (G * T),
             f"ensembles={G};ensemble_slots_per_sec={G * T / (us / 1e6):.0f}"
-            + speed)
+            + speed + ";devices=1;tuned=0;cache_hit=0")
 
 
 def _bench_vqs_engines():
@@ -179,11 +180,16 @@ def _bench_vqs_ensemble():
             wl, keys, policy="vqs", engine=engine, J=J,
             **kw).queue_len.block_until_ready()
         _, us = timed_best(fn, repeat=2)
-        meta = f"ensembles={G};ensemble_slots_per_sec={G * T / (us / 1e6):.0f}"
+        # monte_carlo_policy consults the tuning cache: probe what it
+        # injected for this launch so the row is attributable
+        t = apply_tuned("vqs", engine, dict(J=J, **kw), 1)
+        meta = (f"ensembles={G};"
+                f"ensemble_slots_per_sec={G * T / (us / 1e6):.0f}")
         if engine == "reference":
             us_ref = us
         else:
             meta += f";speedup_vs_ref={us_ref / us:.2f}x"
+        meta += f";devices=1;tuned={t['tuned']};cache_hit={t['cache_hit']}"
         row(f"micro/vqs_mc_{engine}", us / (G * T), meta)
 
 
@@ -251,11 +257,15 @@ def _bench_mr_ensemble():
     """Multi-resource Monte-Carlo ensemble: the fused kernels/bfjs_mr
     Pallas kernel (interpret mode off-TPU: correctness-grade wall clock)
     vs the vmapped scan engine on the SAME pre-generated streams — the
-    tracked micro/mr_ensemble vs micro/mr_ensemble_scan pair.
+    tracked micro/mr_ensemble vs micro/mr_ensemble_scan pair — plus the
+    kernel with its early-exit work list DISABLED (micro/mr_ensemble_noexit
+    = the pre-optimization launch, kept as the before/after record of the
+    while_loop early-exit fix).
 
-    Timed INTERLEAVED (see _bench_engines) and verified IN-PROCESS: the
-    kernel trajectory must be bit-identical to the vmapped scan engine
-    (bitmatch_vs_ref=1, trunc=0) for the comparison to count.
+    Timed INTERLEAVED (see _bench_engines) and verified IN-PROCESS: both
+    kernel trajectories must be bit-identical to the vmapped scan engine
+    (bitmatch_vs_ref=1, trunc=0) for the comparison to count — early exit
+    is bit-identical by construction (post-done work steps are no-ops).
     """
     from repro.kernels.bfjs_mr.ops import bfjs_mr_simulate
 
@@ -268,32 +278,51 @@ def _bench_mr_ensemble():
         k, 0.5, 0.05, _mr_sampler, L=L, K=K, A_max=A_max, horizon=T,
         num_resources=2))(keys)
     kw = dict(L=L, K=K, Qcap=Qcap, A_max=A_max, work_steps=24)
+    launch = "devices=1;tuned=0;cache_hit=0"  # direct kernel entry point
     results = {}
 
     def run_pallas():
         results["pallas"] = bfjs_mr_simulate(streams, **kw)
         return results["pallas"].queue_len.block_until_ready()
 
+    def run_noexit():
+        results["noexit"] = bfjs_mr_simulate(streams, early_exit=False,
+                                             **kw)
+        return results["noexit"].queue_len.block_until_ready()
+
     def run_scan():
         results["scan"] = bfjs_mr_simulate(streams, use_pallas=False, **kw)
         return results["scan"].queue_len.block_until_ready()
 
-    best = timed_interleaved({"scan": run_scan, "pallas": run_pallas})
+    best = timed_interleaved({"scan": run_scan, "pallas": run_pallas,
+                              "noexit": run_noexit})
 
     us_scan = best["scan"]
     row("micro/mr_ensemble_scan", us_scan / (G * T),
         f"engine=scan-vmap;R=2;ensembles={G};"
-        f"ensemble_slots_per_sec={G * T / (us_scan / 1e6):.0f}")
-    pal, ref = results["pallas"], results["scan"]
-    match = int(all(
-        (np.asarray(getattr(pal, f)) == np.asarray(getattr(ref, f))).all()
-        for f in pal._fields))
+        f"ensemble_slots_per_sec={G * T / (us_scan / 1e6):.0f};{launch}")
+    ref = results["scan"]
+
+    def bitmatch(res):
+        return int(all(
+            (np.asarray(getattr(res, f)) == np.asarray(getattr(ref, f)))
+            .all() for f in res._fields))
+
+    us_ne = best["noexit"]
+    row("micro/mr_ensemble_noexit", us_ne / (G * T),
+        f"engine=pallas-interp;R=2;ensembles={G};early_exit=0;"
+        f"ensemble_slots_per_sec={G * T / (us_ne / 1e6):.0f};"
+        f"bitmatch_vs_ref={bitmatch(results['noexit'])};"
+        f"trunc={int(np.asarray(results['noexit'].truncated).sum())};"
+        + launch)
     us = best["pallas"]
     row("micro/mr_ensemble", us / (G * T),
-        f"engine=pallas-interp;R=2;ensembles={G};"
+        f"engine=pallas-interp;R=2;ensembles={G};early_exit=1;"
         f"ensemble_slots_per_sec={G * T / (us / 1e6):.0f};"
-        f"bitmatch_vs_ref={match};"
-        f"trunc={int(np.asarray(pal.truncated).sum())}")
+        f"speedup_from_early_exit={us_ne / us:.2f}x;"
+        f"bitmatch_vs_ref={bitmatch(results['pallas'])};"
+        f"trunc={int(np.asarray(results['pallas'].truncated).sum())};"
+        + launch)
 
 
 def _bench_pallas_vqs():

@@ -4,21 +4,35 @@ Monte-Carlo ensemble throughput of the accelerator engines (BF-J/S and
 VQS, via the policy-generic Workload/run_policy stack) at a
 stability-study operating point (the workload the jax engines exist for).
 
+Beyond the single-device engine comparison, the ensemble study is tracked
+mesh-sharded (``stability/mc_ensemble*_sharded_d{N}``: the same run with G
+split over N devices — bit-identical by contract) and autotuned
+(``stability/mc_ensemble*_scan_tuned``: the shape's cached ``work_steps``
+winner vs the signature default, bit-match verified in-process).  Every
+ensemble row carries ``devices=``/``tuned=``/``cache_hit=`` so a recorded
+throughput is attributable to its exact launch configuration.
+
 An engine comparison whose scan member reports ``truncated != 0`` is a
 bogus speedup (the trajectories diverged); main() FAILS LOUDLY (nonzero
-exit) instead of silently recording it."""
+exit) instead of silently recording it.  The same loud-exit treatment
+covers sharded/tuned runs that fail their bit-match, and a fused bfjs-mr
+Pallas ensemble row that falls behind the vmapped scan engine (the
+regression the early-exit work list fixed)."""
 from __future__ import annotations
 
+import os
 import sys
+import tempfile
 
 import numpy as np
 
-from common import SMOKE, row, timed, timed_best
+from common import RECORDS, SMOKE, row, timed, timed_best, timed_interleaved
 
 import jax
 
 from repro.core import Uniform, rho_bounds, rho_star_discrete
-from repro.core.engine import Workload, monte_carlo_policy
+from repro.core.engine import Workload, autotune, monte_carlo_policy
+from repro.core.engine.tuning import _bitmatch, apply_tuned
 
 #: (row name, truncated count) per scan-engine comparison; checked by
 #: main() — any nonzero count aborts the benchmark run with exit code 1.
@@ -28,6 +42,21 @@ _TRUNCATIONS: list[tuple[str, int]] = []
 #: diverging from the reference oracle, or a broken ``preempted ==
 #: requeued + lost`` invariant; same nonzero-exit treatment.
 _FAULT_VIOLATIONS: list[tuple[str, str]] = []
+
+#: (row name, violation) gate failures from the sharded/tuned rows — a
+#: sharded or tuned trajectory that is not bit-identical to its unsharded/
+#: untuned reference, or the bfjs-mr Pallas row trailing scan; same
+#: nonzero-exit treatment.
+_GATE_VIOLATIONS: list[tuple[str, str]] = []
+
+
+def _tuning_fields(policy: str, engine: str, config: dict,
+                   num_resources: int = 1) -> str:
+    """``tuned=``/``cache_hit=`` meta fields for one launch: what the
+    tuning cache would inject for this exact (policy, engine, shape) —
+    probed on a copy, so the timed config itself is untouched."""
+    t = apply_tuned(policy, engine, dict(config), num_resources)
+    return f"tuned={t['tuned']};cache_hit={t['cache_hit']}"
 
 
 def _mc_ensemble_throughput(policy: str, Qcap: int | None = None,
@@ -64,7 +93,9 @@ def _mc_ensemble_throughput(policy: str, Qcap: int | None = None,
         tail_q = float(np.asarray(res.queue_len)[:, -T // 4:].mean())
         meta = (f"ensembles={G};ensemble_slots_per_sec="
                 f"{G * T / (us / 1e6):.0f};tail_queue={tail_q:.2f};"
-                f"dropped={int(np.asarray(res.dropped).sum())}")
+                f"dropped={int(np.asarray(res.dropped).sum())};devices=1;"
+                + _tuning_fields(policy, engine, dict(kw, **policy_kw),
+                                 wl.num_resources))
         suffix = "" if policy == "bfjs" else f"_{policy}"
         name = f"stability/mc_ensemble{suffix}_{engine}"
         if engine == "reference":
@@ -110,7 +141,8 @@ def _faulted_mc_throughput():
         name = f"stability/faulted_mc_{engine}"
         meta = (f"ensembles={G};ensemble_slots_per_sec="
                 f"{G * T / (us / 1e6):.0f};preempted={pre};requeued={req};"
-                f"lost={lost}")
+                f"lost={lost};devices=1;"
+                + _tuning_fields("bfjs", engine, dict(kw, **fault), 1))
         if engine == "reference":
             us_ref = us
         else:
@@ -126,6 +158,135 @@ def _faulted_mc_throughput():
             ("stability/faulted_mc_scan",
              f"lost {lost_by_engine['scan']} != reference lost "
              f"{lost_by_engine['reference']}"))
+
+
+def _sharded_mc_throughput(policy: str = "bfjs",
+                           workload: Workload | None = None, **policy_kw):
+    """Mesh-sharded scaling of the tracked ensemble study: the SAME scan
+    run with the G dimension sharded over 1, 2, 4, ... devices
+    (``monte_carlo_policy(..., devices=D)`` — core.engine.sharding).
+
+    Every sharded run must be bit-identical to the unsharded run
+    (``bitmatch_vs_ref``) and truncation-free; both feed the loud exit
+    gates.  On a 1-device host only the d=1 row appears — the ``devices>=4``
+    family comes from CI's forced-multi-device smoke job
+    (``XLA_FLAGS=--xla_force_host_platform_device_count=4``) and from full
+    bench runs launched the same way."""
+    if SMOKE:
+        G, kw = 4, dict(L=4, K=8, Qcap=64, A_max=6, horizon=150)
+    else:
+        G, kw = 8, dict(L=8, K=16, Qcap=256, A_max=6, horizon=1_500)
+    T = kw["horizon"]
+
+    def sampler(key, n):
+        return jax.random.uniform(key, (n,), minval=0.1, maxval=0.6)
+
+    wl = workload if workload is not None \
+        else Workload(lam=0.4, mu=0.02, sampler=sampler)
+    keys = jax.random.split(jax.random.PRNGKey(7), G)
+    suffix = "" if policy == "bfjs" else f"_{policy}"
+    tfields = _tuning_fields(policy, "scan", dict(kw, **policy_kw),
+                             wl.num_resources)
+
+    ref = monte_carlo_policy(wl, keys, policy=policy, engine="scan",
+                             **policy_kw, **kw)
+    ref.queue_len.block_until_ready()
+    counts = [d for d in (1, 2, 4, 8, 16)
+              if d <= jax.device_count() and G % d == 0]
+    for d in counts:
+        def fn(d=d):
+            r = monte_carlo_policy(wl, keys, policy=policy, engine="scan",
+                                   devices=d, **policy_kw, **kw)
+            r.queue_len.block_until_ready()
+            return r
+        res, us = timed_best(fn, repeat=2)
+        match = int(_bitmatch(res, ref))
+        trunc = int(np.asarray(res.truncated).sum())
+        name = f"stability/mc_ensemble{suffix}_sharded_d{d}"
+        _TRUNCATIONS.append((name, trunc))
+        if not match:
+            _GATE_VIOLATIONS.append(
+                (name, f"sharded run (devices={d}) diverged from the "
+                       "unsharded scan run"))
+        row(name, us / (G * T),
+            f"engine=scan;devices={d};ensembles={G};"
+            f"ensemble_slots_per_sec={G * T / (us / 1e6):.0f};"
+            f"per_device_slots_per_sec={G * T / d / (us / 1e6):.0f};"
+            f"bitmatch_vs_ref={match};trunc={trunc};{tfields}")
+
+
+def _tuned_mc_pair(policy: str = "bfjs",
+                   workload: Workload | None = None, **policy_kw):
+    """Autotuned vs default launch of the tracked ensemble study.
+
+    Runs the shape-keyed autotuner (core.engine.tuning) into a THROWAWAY
+    cache — never the user's — then times the signature-default launch
+    against the cached ``work_steps`` winner INTERLEAVED (see
+    timed_interleaved's bench-noise note).  The tuned trajectory must be
+    bit-identical to the default (``bitmatch_vs_ref``) and truncation-free;
+    both feed the loud exit gates — a faster-but-divergent "tuned" config
+    fails the benchmark run, same as it is rejected by the autotuner."""
+    if SMOKE:
+        G, kw = 2, dict(L=4, K=8, Qcap=64, A_max=6, horizon=150)
+        grid, rounds = (2, 4, 8), 1
+    else:
+        G, kw = 8, dict(L=8, K=16, Qcap=256, A_max=6, horizon=1_500)
+        grid, rounds = None, 3
+    T = kw["horizon"]
+
+    def sampler(key, n):
+        return jax.random.uniform(key, (n,), minval=0.1, maxval=0.6)
+
+    wl = workload if workload is not None \
+        else Workload(lam=0.4, mu=0.02, sampler=sampler)
+    keys = jax.random.split(jax.random.PRNGKey(7), G)
+    suffix = "" if policy == "bfjs" else f"_{policy}"
+
+    tmp = tempfile.mkdtemp(prefix="repro-bench-tune-")
+    old = os.environ.get("REPRO_TUNING_CACHE")
+    os.environ["REPRO_TUNING_CACHE"] = os.path.join(tmp, "cache.json")
+    try:
+        tune = autotune(wl, keys, policy=policy, engine="scan",
+                        work_steps_grid=grid, rounds=rounds,
+                        **policy_kw, **kw)
+        probe = dict(kw, **policy_kw)
+        tfields = _tuning_fields(policy, "scan", probe, wl.num_resources)
+    finally:
+        if old is None:
+            del os.environ["REPRO_TUNING_CACHE"]
+        else:
+            os.environ["REPRO_TUNING_CACHE"] = old
+    ws = tune["work_steps"]  # None = the default won the sweep
+
+    results = {}
+
+    def run(label, work_steps):
+        extra = {} if work_steps is None else {"work_steps": work_steps}
+        results[label] = monte_carlo_policy(
+            wl, keys, policy=policy, engine="scan", **extra,
+            **policy_kw, **kw)
+        return results[label].queue_len.block_until_ready()
+
+    best = timed_interleaved({"default": lambda: run("default", None),
+                              "tuned": lambda: run("tuned", ws)})
+    match = int(_bitmatch(results["tuned"], results["default"]))
+    trunc = int(np.asarray(results["tuned"].truncated).sum())
+    us_d, us_t = best["default"], best["tuned"]
+    row(f"stability/mc_ensemble{suffix}_scan_default", us_d / (G * T),
+        f"engine=scan;devices=1;ensembles={G};work_steps=default;"
+        f"ensemble_slots_per_sec={G * T / (us_d / 1e6):.0f};"
+        "tuned=0;cache_hit=0")
+    name = f"stability/mc_ensemble{suffix}_scan_tuned"
+    _TRUNCATIONS.append((name, trunc))
+    if not match:
+        _GATE_VIOLATIONS.append(
+            (name, f"tuned run (work_steps={ws}) diverged from the "
+                   "default launch"))
+    row(name, us_t / (G * T),
+        f"engine=scan;devices=1;ensembles={G};work_steps={ws};"
+        f"ensemble_slots_per_sec={G * T / (us_t / 1e6):.0f};"
+        f"speedup_vs_default={us_d / us_t:.2f}x;bitmatch_vs_ref={match};"
+        f"trunc={trunc};{tfields}")
 
 
 def _mr_workload() -> Workload:
@@ -162,6 +323,26 @@ def main():
                             engines=("reference", "scan", "pallas"),
                             work_steps=24)
     _faulted_mc_throughput()
+    # mesh-sharded scaling + autotuned-vs-default pairs (both bit-match
+    # gated); on a 1-device host the sharded family collapses to d=1
+    _sharded_mc_throughput("bfjs")
+    _sharded_mc_throughput("bfjs-mr", workload=_mr_workload(),
+                           work_steps=24)
+    _tuned_mc_pair("bfjs")
+    _tuned_mc_pair("bfjs-mr", workload=_mr_workload())
+
+    # the regression gate the early-exit work list answers: the fused
+    # bfjs-mr Pallas ensemble row must not trail the vmapped scan engine
+    # (15% margin absorbs single-shot CI timer noise, not a real gap —
+    # the pre-fix kernel sat at 0.69x, far outside it)
+    us_by = {r["name"]: r["us"] for r in RECORDS}
+    pal = us_by.get("stability/mc_ensemble_bfjs-mr_pallas")
+    scan = us_by.get("stability/mc_ensemble_bfjs-mr_scan")
+    if pal is not None and scan is not None and pal > 1.15 * scan:
+        _GATE_VIOLATIONS.append(
+            ("stability/mc_ensemble_bfjs-mr_pallas",
+             f"Pallas ensemble row trails scan ({pal:.0f}us vs "
+             f"{scan:.0f}us per slot)"))
 
     bad = [(name, t) for name, t in _TRUNCATIONS if t != 0]
     if bad:
@@ -173,6 +354,10 @@ def main():
         print("ERROR: fault accounting violated (scan vs reference lost, "
               f"or preempted != requeued + lost): {_FAULT_VIOLATIONS}",
               file=sys.stderr, flush=True)
+        raise SystemExit(1)
+    if _GATE_VIOLATIONS:
+        print("ERROR: sharded/tuned/kernel-ordering gates violated: "
+              f"{_GATE_VIOLATIONS}", file=sys.stderr, flush=True)
         raise SystemExit(1)
 
 

@@ -18,7 +18,13 @@ branch-free programs that run ON the accelerator:
   * ``bfjs_mr``  — the multi-resource Tetris-alignment BF-J/S engines
     (paper Section VIII), ``policy="bfjs-mr"``;
   * ``api``      — the policy registry behind ``run_policy(workload, ...)``
-    (the PR 2 loose-argument forms remain as deprecation shims).
+    (the PR 2 loose-argument forms remain as deprecation shims);
+  * ``sharding`` — the ensemble dimension G on a device mesh
+    (``monte_carlo_policy(..., mesh=|devices=)``, bit-identical to the
+    single-device run; composes with ``chunked`` checkpointed sweeps);
+  * ``tuning``   — the shape-keyed ``window=``/``work_steps=`` autotuner
+    with its persistent, bit-match-verified tuning cache
+    (``REPRO_TUNING_CACHE``).
 
 Engine contract (DESIGN.md §1): per policy, ``"scan"`` bit-matches
 ``"reference"`` while ``truncated == 0``, and ``"pallas"`` bit-matches
@@ -35,7 +41,11 @@ from .bfjs import (BFJSResult, BFJSState, DEFAULT_MAX_REQUEUE,
 from .bfjs_mr import (monte_carlo_bfjs_mr_workload, run_bfjs_mr_streams,
                       run_bfjs_mr_trace, run_bfjs_mr_workload)
 from .chunked import run_chunked, streams_fingerprint
-from .ops import (alignment_scores_jnp, best_fit_place, best_fit_server,
+from .sharding import (ENSEMBLE_AXIS, ensemble_streams, monte_carlo_chunked,
+                       resolve_mesh, sharded_monte_carlo)
+from .tuning import (TuningCache, apply_tuned, autotune, shape_key,
+                     tuning_enabled)
+from .ops import (alignment_score_pair_jnp, best_fit_place, best_fit_server,
                   k_red_jnp, largest_fitting_job, max_weight_config_jax,
                   vq_type_of, vq_type_of_grid)
 from .streams import (BFJSStreams, INF_SLOT, PolicyResult, SchedStreams,
@@ -52,7 +62,10 @@ __all__ = [
     "monte_carlo_bfjs", "run_bfjs", "run_bfjs_streams", "run_bfjs_trace",
     "monte_carlo_bfjs_mr_workload", "run_bfjs_mr_streams",
     "run_bfjs_mr_trace", "run_bfjs_mr_workload", "run_chunked",
-    "streams_fingerprint", "alignment_scores_jnp",
+    "streams_fingerprint", "ENSEMBLE_AXIS", "ensemble_streams",
+    "monte_carlo_chunked", "resolve_mesh", "sharded_monte_carlo",
+    "TuningCache", "apply_tuned", "autotune", "shape_key",
+    "tuning_enabled", "alignment_score_pair_jnp",
     "best_fit_place", "best_fit_server", "k_red_jnp", "largest_fitting_job",
     "max_weight_config_jax", "vq_type_of", "vq_type_of_grid", "BFJSStreams",
     "INF_SLOT", "PolicyResult", "SchedStreams", "fault_plane_from_events",

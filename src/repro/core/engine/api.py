@@ -160,6 +160,8 @@ def run_policy(workload, *legacy, policy: str = "bfjs",
         key = legacy[0]
     if key is None:
         key = jax.random.PRNGKey(0)
+    from .tuning import apply_tuned
+    apply_tuned(policy, engine, config, workload.num_resources)
     return get_policy(policy).run(workload, key, engine=engine, **config)
 
 
@@ -168,6 +170,7 @@ def run_policy_streams(streams: SchedStreams, *, policy: str = "bfjs",
                        checkpoint_dir: str | None = None,
                        chunk: int | None = None, resume: bool = False,
                        stop_after_chunks: int | None = None,
+                       mesh=None, devices=None,
                        **config) -> PolicyResult:
     """Replay explicit streams (e.g. ``streams_from_trace``) through a
     policy engine — the trace-driven path of the stack.  Multi-resource
@@ -180,8 +183,17 @@ def run_policy_streams(streams: SchedStreams, *, policy: str = "bfjs",
     sweep BIT-EXACTLY where it stopped (see ``core.engine.chunked``).
     Only ``engine="scan"`` supports this — reference keeps host-side
     state, pallas keeps VMEM-resident state; both are rejected loudly.
+    Ensemble-batched streams (leading G axis) may add ``mesh=``/
+    ``devices=`` to shard the ensemble over devices per chunk
+    (``core.engine.sharding``).
     """
     _check_engine(engine)
+    from .sharding import resolve_mesh
+    from .tuning import apply_tuned
+    mesh = resolve_mesh(mesh, devices)
+    n_res = 1 if streams.sizes.ndim == streams.durs.ndim \
+        else int(streams.sizes.shape[-1])
+    apply_tuned(policy, engine, config, n_res)
     if chunk is not None or checkpoint_dir is not None or resume:
         if engine != "scan":
             raise ValueError(
@@ -196,13 +208,24 @@ def run_policy_streams(streams: SchedStreams, *, policy: str = "bfjs",
         config.pop("window", None)
         return run_chunked(streams, policy=policy, chunk=chunk,
                            checkpoint_dir=checkpoint_dir, resume=resume,
-                           stop_after_chunks=stop_after_chunks, **config)
+                           stop_after_chunks=stop_after_chunks, mesh=mesh,
+                           **config)
+    if mesh is not None:
+        raise ValueError(
+            "mesh=/devices= on run_policy_streams needs the chunked path "
+            "(chunk=); for straight sharded Monte-Carlo use "
+            "monte_carlo_policy(..., mesh=)")
     return get_policy(policy).run_streams(streams, engine=engine, **config)
 
 
 def monte_carlo_policy(workload, *legacy, policy: str = "bfjs",
                        engine: str = "scan",
                        keys: jax.Array | None = None,
+                       mesh=None, devices=None,
+                       chunk: int | None = None,
+                       checkpoint_dir: str | None = None,
+                       resume: bool = False,
+                       stop_after_chunks: int | None = None,
                        **config) -> PolicyResult:
     """One simulated cluster per key; "pallas" runs the ensemble as the
     kernel grid, other engines vmap (the host-side oracles loop).
@@ -210,6 +233,15 @@ def monte_carlo_policy(workload, *legacy, policy: str = "bfjs",
     New API: ``monte_carlo_policy(workload, keys, policy=..., ...)`` (or
     ``keys=`` by keyword).  The deprecated ``monte_carlo_policy(keys, lam,
     mu, sampler, ...)`` form is a bit-match shim.
+
+    ``mesh=`` (a 1-D ``jax.sharding.Mesh``) or ``devices=`` (an int or
+    device list) shards the ensemble dimension over devices — bit-identical
+    to the single-device run, one G/D shard per device
+    (``core.engine.sharding``; ``engine="reference"`` is host-side and
+    ignores the mesh).  ``chunk=``/``checkpoint_dir=``/``resume=`` run the
+    sweep crash-safe in T-chunks (scan engine only), composing with the
+    mesh; checkpoints never pin a device count, so a sweep may resume on a
+    different mesh size.
     """
     _check_engine(engine)
     if not isinstance(workload, Workload):
@@ -226,5 +258,30 @@ def monte_carlo_policy(workload, *legacy, policy: str = "bfjs",
     if keys is None:
         raise TypeError("monte_carlo_policy needs keys= (one PRNG key per "
                         "ensemble member)")
+    from .sharding import (monte_carlo_chunked, resolve_mesh,
+                           sharded_monte_carlo)
+    from .tuning import apply_tuned
+    mesh = resolve_mesh(mesh, devices)
+    apply_tuned(policy, engine, config, workload.num_resources)
+    if chunk is not None or checkpoint_dir is not None or resume:
+        if engine != "scan":
+            raise ValueError(
+                f'checkpointed chunked sweeps need engine="scan" (its '
+                f"carry is the entire simulation state); got "
+                f"engine={engine!r}")
+        if chunk is None:
+            raise ValueError("checkpoint_dir=/resume= need chunk= (the "
+                             "boundary interval, in slots)")
+        config.pop("strict", None)
+        config.pop("window", None)
+        return monte_carlo_chunked(workload, keys, policy=policy,
+                                   chunk=chunk, mesh=mesh,
+                                   checkpoint_dir=checkpoint_dir,
+                                   resume=resume,
+                                   stop_after_chunks=stop_after_chunks,
+                                   **config)
+    if mesh is not None:
+        return sharded_monte_carlo(workload, keys, policy=policy,
+                                   mesh=mesh, engine=engine, **config)
     return get_policy(policy).monte_carlo(workload, keys, engine=engine,
                                           **config)

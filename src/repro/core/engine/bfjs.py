@@ -507,6 +507,7 @@ def run_bfjs(key: jax.Array,
              horizon: int = 10_000,
              engine: str = "scan",
              work_steps: int | None = None,
+             window: int | None = None,
              fault_rate: float = 0.0,
              repair_rate: float = 1.0,
              max_requeue: int = DEFAULT_MAX_REQUEUE) -> PolicyResult:
@@ -536,16 +537,19 @@ def run_bfjs(key: jax.Array,
                            repair_rate=repair_rate)
     return run_bfjs_trace(streams, L=L, K=K, Qcap=Qcap, A_max=A_max,
                           engine=engine, work_steps=work_steps,
-                          max_requeue=max_requeue)
+                          window=window, max_requeue=max_requeue)
 
 
 def run_bfjs_trace(streams: SchedStreams, *, L: int, K: int, Qcap: int,
                    A_max: int, engine: str = "scan",
                    work_steps: int | None = None,
+                   window: int | None = None,
                    max_requeue: int = DEFAULT_MAX_REQUEUE,
                    strict: bool = False) -> PolicyResult:
     """Run one BF-J/S simulation over explicit streams (make_streams-shaped;
-    trace-built streams are rejected — see _check_sequential_durs)."""
+    trace-built streams are rejected — see _check_sequential_durs).
+    ``window`` is the Pallas kernel's VMEM time-window length (must divide
+    the horizon; ignored by the other engines)."""
     _check_sequential_durs(streams, L, K, A_max)
     if engine == "reference":
         raise ValueError(
@@ -558,16 +562,19 @@ def run_bfjs_trace(streams: SchedStreams, *, L: int, K: int, Qcap: int,
                                 max_requeue=max_requeue)
     if engine == "pallas":
         from repro.kernels.bfjs.ops import bfjs_scratch_bytes, bfjs_simulate
-        from repro.kernels.common import pallas_precheck
+        from repro.kernels.common import ensemble_plane_bytes, pallas_precheck
+        T, D = streams.n.shape[0], streams.durs.shape[-1]
         if not pallas_precheck(
                 "bfjs", nbytes=bfjs_scratch_bytes(L, K, Qcap, A_max),
+                hbm_bytes=ensemble_plane_bytes(
+                    1, T, stream_lanes=1 + A_max + D, out_lanes=3),
                 fault_plane=streams.up is not None, strict=strict):
             return run_bfjs_streams(streams, L=L, K=K, Qcap=Qcap,
                                     A_max=A_max, work_steps=work_steps,
                                     max_requeue=max_requeue)
         batched = jax.tree.map(lambda x: x[None], streams)
         res = bfjs_simulate(batched, L=L, K=K, Qcap=Qcap, A_max=A_max,
-                            work_steps=work_steps)
+                            work_steps=work_steps, window=window)
         return jax.tree.map(lambda x: x[0], res)
     raise ValueError(f"unknown engine {engine!r}")
 
@@ -595,6 +602,7 @@ def monte_carlo_bfjs_workload(workload, keys: jax.Array, *,
 
 def monte_carlo_bfjs(keys: jax.Array, lam: float, mu: float, sampler,
                      engine: str = "scan", work_steps: int | None = None,
+                     window: int | None = None,
                      L: int = 8, K: int = 16, Qcap: int = 512,
                      A_max: int = 8, horizon: int = 10_000,
                      fault_rate: float = 0.0, repair_rate: float = 1.0,
@@ -608,9 +616,16 @@ def monte_carlo_bfjs(keys: jax.Array, lam: float, mu: float, sampler,
     instance)."""
     if engine == "pallas":
         from repro.kernels.bfjs.ops import bfjs_scratch_bytes, bfjs_simulate
-        from repro.kernels.common import pallas_precheck
+        from repro.kernels.common import ensemble_plane_bytes, pallas_precheck
+        # keys is the LOCAL batch here: under a sharded mesh launch
+        # (core.engine.sharding) each device traces with its G/D shard, so
+        # this footprint check is naturally per device.
+        G = int(keys.shape[0])
         if not pallas_precheck(
                 "bfjs", nbytes=bfjs_scratch_bytes(L, K, Qcap, A_max),
+                hbm_bytes=ensemble_plane_bytes(
+                    G, horizon, stream_lanes=1 + A_max + (L * K + A_max),
+                    out_lanes=3),
                 fault_plane=fault_rate > 0.0, strict=strict):
             engine = "scan"
         else:
@@ -618,7 +633,7 @@ def monte_carlo_bfjs(keys: jax.Array, lam: float, mu: float, sampler,
                 lambda k: make_streams(k, lam, mu, sampler, L=L, K=K,
                                        A_max=A_max, horizon=horizon))(keys)
             return bfjs_simulate(streams, L=L, K=K, Qcap=Qcap, A_max=A_max,
-                                 work_steps=work_steps)
+                                 work_steps=work_steps, window=window)
     fn = functools.partial(run_bfjs, lam=lam, mu=mu, sampler=sampler,
                            engine=engine, work_steps=work_steps, L=L, K=K,
                            Qcap=Qcap, A_max=A_max, horizon=horizon,

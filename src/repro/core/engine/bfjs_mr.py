@@ -30,9 +30,11 @@ Semantics (one slot, identical to the oracle's ``step``):
 
 Exactness: demands and occupancies are ``quantize.RES`` grid integers, so
 every feasibility and total-demand comparison is exact; the alignment
-score is the canonical float32 left-to-right form (``alignment_scores``),
-identical bit-for-bit between numpy and XLA — so ``"scan"`` bit-matches
-``"reference"`` whenever ``truncated == 0``.
+score is exact integer arithmetic compared as an int32 ``(hi, lo)`` pair
+(``alignment_score_pair_jnp``), equal to the oracle's exact float64
+``alignment_scores`` on every backend, vmap batch width and compiler
+version — so ``"scan"`` bit-matches ``"reference"`` whenever
+``truncated == 0``, and sharded/unsharded runs bit-match each other.
 
 Durations attach to jobs at arrival (like VQS), so trace-built streams
 (``streams_from_trace(trace, collapse=False)`` — per-arrival duration
@@ -55,7 +57,7 @@ import numpy as np
 
 from ..quantize import RES
 from .bfjs import DEFAULT_MAX_REQUEUE
-from .ops import alignment_scores_jnp
+from .ops import alignment_score_pair_jnp
 from .streams import (INF_SLOT, PolicyResult, SchedStreams, make_streams,
                       resolve_work_steps)
 
@@ -139,8 +141,8 @@ def run_bfjs_mr_streams(streams: SchedStreams, L: int, K: int, Qcap: int,
     performs the BF-S placement for the lowest-index freed server that
     still has a fitting queued job, or attempts the next arrival's BF-J
     placement — the same dynamic dispatch as the single-resource engine,
-    with vector feasibility (``all_r  dem_r <= avail_r``) and the f32
-    alignment score replacing scalar residual comparisons.  Placements
+    with vector feasibility (``all_r  dem_r <= avail_r``) and the exact
+    integer alignment-score pair replacing scalar residual comparisons.  Placements
     only consume queue entries and only shrink availability, so the
     lowest-index-first order reproduces the oracle's nested loops exactly.
     """
@@ -254,10 +256,12 @@ def run_bfjs_mr_streams(streams: SchedStreams, L: int, K: int, Qcap: int,
                 feas = feas & (d_bfj[r] <= avail[:, r])
             if faulted:
                 feas = feas & up_t
-            scores = alignment_scores_jnp(avail, d_bfj)
-            masked = jnp.where(feas, scores, jnp.inf)
-            best = jnp.min(masked)
-            s_bfj = jnp.min(jnp.where(feas & (masked == best), l_iota, L))
+            s_hi, s_lo = alignment_score_pair_jnp(avail, d_bfj)
+            best_hi = jnp.min(jnp.where(feas, s_hi, INT32_MAX))
+            cand_j = feas & (s_hi == best_hi)
+            best_lo = jnp.min(jnp.where(cand_j, s_lo, INT32_MAX))
+            s_bfj = jnp.min(jnp.where(cand_j & (s_lo == best_lo), l_iota,
+                                      L))
             s_bfj_c = jnp.minimum(s_bfj, L - 1)
             ok_bfj = present & feas.any()
 
@@ -439,10 +443,13 @@ def run_bfjs_mr_trace(streams: SchedStreams, *, L: int, K: int = 16,
     if engine == "pallas":
         from repro.kernels.bfjs_mr.ops import (bfjs_mr_scratch_bytes,
                                                bfjs_mr_simulate)
-        from repro.kernels.common import pallas_precheck
+        from repro.kernels.common import ensemble_plane_bytes, pallas_precheck
         R = int(streams.sizes.shape[-1])
+        T, D = streams.n.shape[0], streams.durs.shape[-1]
         if not pallas_precheck(
                 "bfjs-mr", nbytes=bfjs_mr_scratch_bytes(L, K, Qcap, R),
+                hbm_bytes=ensemble_plane_bytes(
+                    1, T, stream_lanes=1 + A_max * R + D, out_lanes=2 + R),
                 fault_plane=streams.up is not None, strict=strict):
             engine = "scan"
         else:
@@ -506,10 +513,17 @@ def monte_carlo_bfjs_mr_workload(workload, keys, *, engine: str = "scan",
     if engine == "pallas":
         from repro.kernels.bfjs_mr.ops import (bfjs_mr_scratch_bytes,
                                                bfjs_mr_simulate)
-        from repro.kernels.common import pallas_precheck
+        from repro.kernels.common import ensemble_plane_bytes, pallas_precheck
         R = int(workload.num_resources)
+        # keys is the LOCAL batch under a sharded mesh launch, so the
+        # footprint check is per device (core.engine.sharding).
+        G = int(keys.shape[0])
         if not pallas_precheck(
                 "bfjs-mr", nbytes=bfjs_mr_scratch_bytes(L, K, Qcap, R),
+                hbm_bytes=ensemble_plane_bytes(
+                    G, horizon,
+                    stream_lanes=1 + A_max * R + (L * K + A_max),
+                    out_lanes=2 + R),
                 fault_plane=fault_rate > 0.0, strict=strict):
             engine = "scan"
         else:

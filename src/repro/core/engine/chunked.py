@@ -23,6 +23,15 @@ driver re-offsets each chunk by the previous cumulative total.  The scalar
 deviation/fault counters (``dropped``, ``truncated``, ``preempted``,
 ``requeued``, ``lost``) accumulate inside the carry, so the final chunk's
 values are already whole-horizon totals.
+
+Monte-Carlo sweeps chunk too: ensemble-batched streams (a leading G axis
+on every plane, ``sharding.ensemble_streams``) run the per-chunk scan
+VMAPPED over the ensemble — and, with ``mesh=``, shard_mapped so each
+device owns its G/D members (``core.engine.sharding``).  The per-chunk
+carry keeps the full ``(G, ...)`` shape in the checkpoint (carries are
+donated on-device but persisted host-side), and the manifest never pins a
+device count: a sweep checkpointed on D devices resumes bit-exactly on D'
+for any D' dividing G (DESIGN.md §11).
 """
 from __future__ import annotations
 
@@ -30,6 +39,7 @@ import hashlib
 import os
 from typing import Any, Callable
 
+import jax
 import jax.numpy as jnp
 import numpy as np
 
@@ -77,21 +87,24 @@ def streams_fingerprint(streams: SchedStreams) -> str:
     return h.hexdigest()
 
 
-def _slice_streams(streams: SchedStreams, lo: int, hi: int) -> SchedStreams:
+def _slice_streams(streams: SchedStreams, lo: int, hi: int,
+                   ensemble: bool = False) -> SchedStreams:
+    sl = (slice(None), slice(lo, hi)) if ensemble else slice(lo, hi)
     return streams._replace(
-        n=streams.n[lo:hi], sizes=streams.sizes[lo:hi],
-        durs=streams.durs[lo:hi],
-        up=None if streams.up is None else streams.up[lo:hi])
+        n=streams.n[sl], sizes=streams.sizes[sl], durs=streams.durs[sl],
+        up=None if streams.up is None else streams.up[sl])
 
 
-def _append(partial: PolicyResult | None, res: PolicyResult) -> PolicyResult:
+def _append(partial: PolicyResult | None, res: PolicyResult,
+            axis: int = 0) -> PolicyResult:
     if partial is None:
         return res
-    dep_off = partial.departed[-1]
+    dep_off = partial.departed[..., -1:] if axis else partial.departed[-1]
     return PolicyResult(
-        jnp.concatenate([partial.queue_len, res.queue_len]),
-        jnp.concatenate([partial.occupancy, res.occupancy]),
-        jnp.concatenate([partial.departed, res.departed + dep_off]),
+        jnp.concatenate([partial.queue_len, res.queue_len], axis=axis),
+        jnp.concatenate([partial.occupancy, res.occupancy], axis=axis),
+        jnp.concatenate([partial.departed, res.departed + dep_off],
+                        axis=axis),
         res.dropped, res.truncated, res.preempted, res.requeued, res.lost)
 
 
@@ -128,12 +141,16 @@ def run_chunked(streams: SchedStreams, *, policy: str = "bfjs",
                 chunk: int, checkpoint_dir: str | None = None,
                 resume: bool = False,
                 stop_after_chunks: int | None = None,
-                **config) -> PolicyResult:
+                mesh=None, **config) -> PolicyResult:
     """Run a scan-engine sweep in crash-safe chunks (see module docstring).
 
     ``stop_after_chunks`` ends the run early after that many chunks have
     been EXECUTED this call (checkpoints included) — the hook crash tests
     use to stop at an arbitrary boundary; the partial result is returned.
+
+    Streams with a leading ensemble axis (``n.ndim == 2``) run the
+    per-chunk scan vmapped over the ensemble; ``mesh=`` additionally
+    shards that axis over devices (``core.engine.sharding``).
     """
     if policy not in _STATEFUL:
         raise ValueError(
@@ -143,6 +160,11 @@ def run_chunked(streams: SchedStreams, *, policy: str = "bfjs",
         raise ValueError(f"chunk must be positive, got {chunk}")
     if resume and checkpoint_dir is None:
         raise ValueError("resume=True needs checkpoint_dir=")
+    ensemble = streams.n.ndim == 2
+    if mesh is not None and not ensemble:
+        raise ValueError("mesh= needs ensemble-batched streams (a leading "
+                         "G axis on every plane); single-run streams have "
+                         "nothing to shard")
     if policy == "bfjs-mr":
         from .bfjs_mr import _lift_sizes, _norm_capacity
         streams = _lift_sizes(streams)
@@ -150,8 +172,8 @@ def run_chunked(streams: SchedStreams, *, policy: str = "bfjs",
         if not isinstance(cap, tuple):
             config["capacity"] = _norm_capacity(
                 cap, int(streams.sizes.shape[-1]))
-    config.setdefault("A_max", int(streams.sizes.shape[1]))
-    T = int(streams.n.shape[0])
+    config.setdefault("A_max", int(streams.sizes.shape[streams.n.ndim]))
+    T = int(streams.n.shape[-1])
     bounds = [(lo, min(lo + chunk, T)) for lo in range(0, T, chunk)]
     meta = {
         "policy": policy,
@@ -185,13 +207,45 @@ def run_chunked(streams: SchedStreams, *, policy: str = "bfjs",
             start = latest
 
     runner = _STATEFUL[policy]
+    if ensemble:
+        base = runner
+
+        def _first(s):
+            return jax.vmap(lambda x: base(x, None, config))(s)
+
+        def _next(s, st):
+            return jax.vmap(lambda x, y: base(x, y, config))(s, st)
+
+        if mesh is not None:
+            from jax.experimental.shard_map import shard_map
+            from jax.sharding import PartitionSpec as P
+            from .sharding import _check_divides
+            _check_divides(int(streams.n.shape[0]), mesh)
+            spec = P(mesh.axis_names[0])
+            out = (spec, spec)
+            _first = shard_map(_first, mesh=mesh, in_specs=(spec,),
+                               out_specs=out, check_rep=False)
+            _next = shard_map(_next, mesh=mesh, in_specs=(spec, spec),
+                              out_specs=out, check_rep=False)
+        # jit once per run so every chunk reuses the compilation; the
+        # previous chunk's carry is donated — its buffers back the next
+        # chunk's state in place.
+        _first = jax.jit(_first)
+        _next = jax.jit(_next, donate_argnums=(1,))
+
+        def runner(streams_chunk, st, _cfg):
+            if st is None:
+                return _first(streams_chunk)
+            return _next(streams_chunk, st)
+
     executed = 0
     for i in range(start, len(bounds)):
         if stop_after_chunks is not None and executed >= stop_after_chunks:
             break
         lo, hi = bounds[i]
-        res, state = runner(_slice_streams(streams, lo, hi), state, config)
-        partial = _append(partial, res)
+        res, state = runner(_slice_streams(streams, lo, hi, ensemble),
+                            state, config)
+        partial = _append(partial, res, axis=1 if ensemble else 0)
         executed += 1
         if checkpoint_dir is not None:
             _save_step(checkpoint_dir, i + 1,

@@ -40,23 +40,33 @@ def best_fit_place(residuals: jax.Array, sizes: jax.Array) -> tuple[jax.Array, j
     return assign.astype(jnp.int32), new_resid
 
 
-def alignment_scores_jnp(avail: jax.Array, demand: jax.Array) -> jax.Array:
-    """Tetris alignment <demand, avail> per server (paper §VIII), the jnp
-    twin of ``core.multi_resource.alignment_scores``.
+def alignment_score_pair_jnp(avail: jax.Array,
+                             demand: jax.Array) -> tuple[jax.Array, jax.Array]:
+    """Tetris alignment <demand, avail> per server (paper §VIII), exact.
 
     ``avail`` is (L, R) grid-integer availability, ``demand`` is (R,) grid
-    integers.  Each product and each accumulating add is an explicit
-    float32 op, accumulated left-to-right over the (static) resource axis —
-    the identical IEEE-754 rounding sequence as the numpy oracle, so argmin
-    tie-breaks bit-match.  (int32 products of two 16-bit grid values would
-    overflow, and float64 is off by default under jit; canonical-f32 is the
-    portable exact-comparison contract.)
+    integers.  The true score ``sum_r avail_r * demand_r`` needs up to
+    ~34 bits — too wide for int32 and for a float32 mantissa, and float32
+    accumulation is NOT portable: XLA is free to contract ``mul+add`` into
+    an FMA in one lowering but not another (observed to differ with vmap
+    batch width on CPU), which flips argmin tie-breaks.  Instead the score
+    is returned as a normalized int32 pair ``(hi, lo)`` with
+    ``score == hi * 256 + lo`` and ``0 <= lo < 256``: products against the
+    split demand ``(d >> 8, d & 255)`` stay below 2**24 each, so every op
+    is exact integer arithmetic and comparing ``(hi, lo)``
+    lexicographically compares the exact scores — identical to the numpy
+    oracle's exact float64 ``core.multi_resource.alignment_scores`` on any
+    backend, batch width or compiler version.  Exact while
+    ``R * capacity`` stays under ~128 server-capacities (int32 headroom).
     """
-    prods = avail.astype(jnp.float32) * demand.astype(jnp.float32)[None, :]
-    acc = prods[:, 0]
-    for r in range(1, prods.shape[1]):
-        acc = acc + prods[:, r]
-    return acc
+    a = avail.astype(jnp.int32)
+    d = demand.astype(jnp.int32)
+    hi = a[:, 0] * (d[0] >> 8)
+    lo = a[:, 0] * (d[0] & 255)
+    for r in range(1, a.shape[1]):
+        hi = hi + a[:, r] * (d[r] >> 8)
+        lo = lo + a[:, r] * (d[r] & 255)
+    return hi + (lo >> 8), lo & 255
 
 
 def first_empty_positions(empty: jax.Array,

@@ -604,9 +604,12 @@ def run_vqs_trace(streams: SchedStreams, *, J: int, L: int, K: int,
                   Qcap: int, A_max: int, engine: str = "scan",
                   work_steps: int | None = None,
                   drain: int | None = None,
+                  window: int | None = None,
                   max_requeue: int = DEFAULT_MAX_REQUEUE,
                   strict: bool = False) -> PolicyResult:
-    """Run one VQS simulation over explicit streams (random or trace)."""
+    """Run one VQS simulation over explicit streams (random or trace).
+    ``window`` is the Pallas kernel's VMEM time-window length (must divide
+    the horizon; ignored by the other engines)."""
     if engine == "reference":
         return _run_vqs_reference_streams(streams, J=J, L=L, K=K, Qcap=Qcap,
                                           A_max=A_max,
@@ -616,17 +619,20 @@ def run_vqs_trace(streams: SchedStreams, *, J: int, L: int, K: int,
                                A_max=A_max, work_steps=work_steps,
                                drain=drain, max_requeue=max_requeue)
     if engine == "pallas":
-        from repro.kernels.common import pallas_precheck
+        from repro.kernels.common import ensemble_plane_bytes, pallas_precheck
         from repro.kernels.vqs.ops import vqs_scratch_bytes, vqs_simulate
+        T, D = streams.n.shape[0], streams.durs.shape[-1]
         if not pallas_precheck(
                 "vqs", nbytes=vqs_scratch_bytes(J, L, K, Qcap),
+                hbm_bytes=ensemble_plane_bytes(
+                    1, T, stream_lanes=1 + A_max + D, out_lanes=3),
                 fault_plane=streams.up is not None, strict=strict):
             return run_vqs_streams(streams, J=J, L=L, K=K, Qcap=Qcap,
                                    A_max=A_max, work_steps=work_steps,
                                    drain=drain, max_requeue=max_requeue)
         batched = jax.tree.map(lambda x: x[None], streams)
         res = vqs_simulate(batched, J=J, L=L, K=K, Qcap=Qcap, A_max=A_max,
-                           work_steps=work_steps, drain=drain)
+                           work_steps=work_steps, drain=drain, window=window)
         return jax.tree.map(lambda x: x[0], res)
     raise ValueError(f"unknown engine {engine!r}")
 
@@ -637,6 +643,7 @@ def run_vqs(key: jax.Array, lam: float, mu: float,
             A_max: int = 8, horizon: int = 10_000, engine: str = "scan",
             work_steps: int | None = None,
             drain: int | None = None,
+            window: int | None = None,
             fault_rate: float = 0.0, repair_rate: float = 1.0,
             max_requeue: int = DEFAULT_MAX_REQUEUE,
             strict: bool = False) -> PolicyResult:
@@ -656,7 +663,8 @@ def run_vqs(key: jax.Array, lam: float, mu: float,
                            repair_rate=repair_rate)
     return run_vqs_trace(streams, J=J, L=L, K=K, Qcap=Qcap, A_max=A_max,
                          engine=engine, work_steps=work_steps, drain=drain,
-                         max_requeue=max_requeue, strict=strict)
+                         window=window, max_requeue=max_requeue,
+                         strict=strict)
 
 
 def run_vqs_workload(workload, key: jax.Array, *, engine: str = "scan",
@@ -681,7 +689,8 @@ def monte_carlo_vqs_workload(workload, keys: jax.Array, *,
 
 def monte_carlo_vqs(keys: jax.Array, lam: float, mu: float, sampler,
                     engine: str = "scan", work_steps: int | None = None,
-                    drain: int | None = None, J: int = 4, L: int = 8,
+                    drain: int | None = None, window: int | None = None,
+                    J: int = 4, L: int = 8,
                     K: int = 16, Qcap: int = 512, A_max: int = 8,
                     horizon: int = 10_000, fault_rate: float = 0.0,
                     repair_rate: float = 1.0,
@@ -689,10 +698,16 @@ def monte_carlo_vqs(keys: jax.Array, lam: float, mu: float, sampler,
                     strict: bool = False) -> PolicyResult:
     """One simulated cluster per key (vmap; "pallas" uses the kernel grid)."""
     if engine == "pallas":
-        from repro.kernels.common import pallas_precheck
+        from repro.kernels.common import ensemble_plane_bytes, pallas_precheck
         from repro.kernels.vqs.ops import vqs_scratch_bytes, vqs_simulate
+        # keys is the LOCAL batch under a sharded mesh launch, so the
+        # footprint check is per device (core.engine.sharding).
+        G = int(keys.shape[0])
         if not pallas_precheck(
                 "vqs", nbytes=vqs_scratch_bytes(J, L, K, Qcap),
+                hbm_bytes=ensemble_plane_bytes(
+                    G, horizon, stream_lanes=1 + A_max + (L * K + A_max),
+                    out_lanes=3),
                 fault_plane=fault_rate > 0.0, strict=strict):
             engine = "scan"
         else:
@@ -701,7 +716,7 @@ def monte_carlo_vqs(keys: jax.Array, lam: float, mu: float, sampler,
                                        A_max=A_max, horizon=horizon))(keys)
             return vqs_simulate(streams, J=J, L=L, K=K, Qcap=Qcap,
                                 A_max=A_max, work_steps=work_steps,
-                                drain=drain)
+                                drain=drain, window=window)
     fn = functools.partial(run_vqs, lam=lam, mu=mu, sampler=sampler,
                            engine=engine, work_steps=work_steps, drain=drain,
                            J=J, L=L, K=K, Qcap=Qcap, A_max=A_max,

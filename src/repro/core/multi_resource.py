@@ -21,14 +21,19 @@ path; L up to a few thousand is fine.
 
 This module is also the behavioural ORACLE of the accelerator-resident
 ``policy="bfjs-mr"`` scan engine (``core/engine/bfjs_mr.py``).  To make
-bit-match testable across numpy and XLA, the alignment score is defined
-canonically in float32 with left-to-right accumulation over resources
-(``alignment_scores``): products and sums of float32 values round
-identically under IEEE-754 in both runtimes, so argmin tie-breaks agree
-exactly.  Feasibility and job-size comparisons stay exact: on grid-quantized
-demands (``simulate_mr_trace``, ``quantize.to_grid``) every occupancy is a
-dyadic rational ``k/2**16`` that float64 adds and compares without
-rounding.
+bit-match testable across numpy and XLA, the alignment score is EXACT
+arithmetic rather than rounded float32: on grid-quantized demands every
+product ``avail_r * demand_r`` is an integer multiple of ``2**-32`` that
+float64 represents exactly (``alignment_scores``), so the score — and
+therefore every argmin tie-break — is independent of accumulation order,
+vectorization width and backend.  (An earlier float32 formulation was NOT
+portable: XLA contracts ``mul+add`` into an FMA in some lowerings but not
+others, observed to flip placements with vmap batch width on CPU.)  The
+jnp engines compare the same scores as an exact int32 ``(hi, lo)`` pair
+(``engine.ops.alignment_score_pair_jnp``).  Feasibility and job-size
+comparisons stay exact too: on grid-quantized demands
+(``simulate_mr_trace``, ``quantize.to_grid``) every occupancy is a dyadic
+rational ``k/2**16`` that float64 adds and compares without rounding.
 """
 from __future__ import annotations
 
@@ -38,18 +43,19 @@ import numpy as np
 
 
 def alignment_scores(avail: np.ndarray, demand: np.ndarray) -> np.ndarray:
-    """Tetris alignment <demand, avail> per server, canonical float32 form.
+    """Tetris alignment <demand, avail> per server, exact float64 form.
 
-    ``avail`` is (L, R), ``demand`` is (R,).  Each product and each of the
-    R-1 accumulating adds is rounded to float32, accumulated left-to-right
-    over resources — the exact expression (and rounding sequence) the jnp
-    engine evaluates, so score comparisons bit-match across numpy and XLA.
+    ``avail`` is (L, R), ``demand`` is (R,).  On grid-quantized values
+    every product is an integer multiple of ``2**-32`` with magnitude
+    below R — at most ~34 of float64's 53 mantissa bits — so each product
+    AND every partial sum is exact, making the result independent of
+    accumulation order, SIMD width and backend.  The jnp engines compare
+    the identical scores as an exact int32 pair
+    (``engine.ops.alignment_score_pair_jnp``), so argmin tie-breaks
+    bit-match across numpy and XLA.
     """
-    prods = avail.astype(np.float32) * demand.astype(np.float32)[None, :]
-    acc = prods[:, 0]
-    for r in range(1, prods.shape[1]):
-        acc = (acc + prods[:, r]).astype(np.float32)
-    return acc
+    prods = avail.astype(np.float64) * demand.astype(np.float64)[None, :]
+    return prods.sum(axis=1)
 
 
 @dataclass
@@ -119,8 +125,8 @@ class MultiResourceBFJS:
         if not feas.any():
             return -1
         avail = self.capacity[None, :] - self.occupied
-        # tightest-in-needed-dims = argmin of the f32 alignment score
-        # (canonical rounding — see alignment_scores)
+        # tightest-in-needed-dims = argmin of the exact alignment score
+        # (order-independent — see alignment_scores)
         scores = alignment_scores(avail, demand)
         scores[~feas] = np.inf
         return int(np.argmin(scores))

@@ -18,11 +18,11 @@ masks and reductions in place of every dynamic index, and the resource
 axis STATICALLY UNROLLED: vector state is stored as R stacked 2D planes
 (demands ``(L, R*K)`` — plane r in columns ``[r*K, (r+1)*K)`` — and queue
 demands ``(R, Qcap)``), so every per-resource feasibility comparison is a
-plain 2D vector op.  The Tetris alignment score is accumulated in exactly
-the canonical float32 left-to-right order of
-``engine.ops.alignment_scores_jnp`` (product per resource, then adds in
-resource order), so argmin tie-breaks bit-match the scan engine and,
-through it, the event-driven ``MultiResourceBFJS`` oracle.  Trajectories
+plain 2D vector op.  The Tetris alignment score is exact integer
+arithmetic compared as a normalized int32 ``(hi, lo)`` pair — the same
+scheme as ``engine.ops.alignment_score_pair_jnp`` — so argmin tie-breaks
+bit-match the scan engine (and, through it, the event-driven
+``MultiResourceBFJS`` oracle) on every backend and lowering.  Trajectories
 are bit-compatible with the scan engine whenever ``truncated`` stays 0 —
 asserted by the interpret-mode parity + hypothesis suites in
 tests/test_mr_kernel.py and tests/test_engine_parity_matrix.py.
@@ -46,7 +46,7 @@ INT32_MAX = jnp.iinfo(jnp.int32).max
 def _bfjs_mr_kernel(n_ref, sizes_ref, durs_ref,
                     qlen_ref, occ_out_ref, ndep_ref, dropped_ref, trunc_ref,
                     dem_ref, dep_ref, occ_ref, qdem_ref, qmeta_ref, acc_ref,
-                    *, L, K, R, Qcap, A_max, W, TW, CAP, D):
+                    *, L, K, R, Qcap, A_max, W, TW, CAP, D, EARLY_EXIT):
     w = pl.program_id(1)
 
     @pl.when(w == 0)
@@ -125,8 +125,8 @@ def _bfjs_mr_kernel(n_ref, sizes_ref, durs_ref,
         # server that still has a fitting queued job (job = largest total
         # demand, earliest seq), else attempts the next landed arrival on
         # the min-alignment feasible server.
-        def work(_, wcarry):
-            a_ptr, blocked, q_cnt, trunc = wcarry
+        def work(wcarry):
+            step, a_ptr, blocked, q_cnt, trunc, _ = wcarry
             dem = dem_ref[...]
             dep = dep_ref[...]
             occ = occ_ref[...]
@@ -158,6 +158,11 @@ def _bfjs_mr_kernel(n_ref, sizes_ref, durs_ref,
             # the min-alignment feasible server (any server, not just
             # freed — the oracle's _best_server scans all L).
             is_bfj = (~any_bfs) & (a_ptr < n_landed)
+            # The scan engine's early-exit rule: with no BF-S fit left and
+            # every landed arrival consumed, no later step can do work
+            # (queues only shrink, avail only shrinks, freed&~blocked only
+            # shrinks), so remaining steps are no-ops.
+            done = (~any_bfs) & (a_ptr >= n_landed)
             ap = jnp.minimum(a_ptr, A_max - 1)
             pos = jnp.max(jnp.where(a_row == ap, pos_list, -1))
             posc = jnp.maximum(pos, 0)
@@ -168,16 +173,22 @@ def _bfjs_mr_kernel(n_ref, sizes_ref, durs_ref,
             feas = jnp.ones((L, 1), bool)
             for r in range(R):
                 feas = feas & (d_bfj[r] <= avail[r])
-            # canonical-f32 alignment score, left-to-right over resources
-            # (identical op sequence to engine.ops.alignment_scores_jnp)
-            scores = avail[0].astype(jnp.float32) \
-                * d_bfj[0].astype(jnp.float32)
+            # exact alignment score as a normalized int32 (hi, lo) pair —
+            # same scheme as engine.ops.alignment_score_pair_jnp, so the
+            # lexicographic argmin equals the oracle's exact float64
+            # argmin on every backend and lowering
+            s_hi = avail[0] * (d_bfj[0] >> 8)
+            s_lo = avail[0] * (d_bfj[0] & 255)
             for r in range(1, R):
-                scores = scores + avail[r].astype(jnp.float32) \
-                    * d_bfj[r].astype(jnp.float32)
-            masked = jnp.where(feas, scores, jnp.inf)
-            best = jnp.min(masked)
-            s_bfj = jnp.min(jnp.where(feas & (masked == best), l_col, L))
+                s_hi = s_hi + avail[r] * (d_bfj[r] >> 8)
+                s_lo = s_lo + avail[r] * (d_bfj[r] & 255)
+            s_hi = s_hi + (s_lo >> 8)
+            s_lo = s_lo & 255
+            best_hi = jnp.min(jnp.where(feas, s_hi, INT32_MAX))
+            cand_j = feas & (s_hi == best_hi)
+            best_lo = jnp.min(jnp.where(cand_j, s_lo, INT32_MAX))
+            s_bfj = jnp.min(jnp.where(cand_j & (s_lo == best_lo), l_col,
+                                      L))
             s_bfj = jnp.minimum(s_bfj, L - 1)
             ok_bfj = present & feas.any()
 
@@ -215,11 +226,19 @@ def _bfjs_mr_kernel(n_ref, sizes_ref, durs_ref,
             trunc = trunc + (do & ~ok_slot).astype(jnp.int32)
             blocked = blocked | (any_bfs & ~ok_slot)
             a_ptr = a_ptr + is_bfj.astype(jnp.int32)
-            return a_ptr, blocked, q_cnt, trunc
+            return step + 1, a_ptr, blocked, q_cnt, trunc, done
 
-        a_ptr, blocked, q_cnt, trunc = jax.lax.fori_loop(
-            0, W, work, (jnp.int32(0), jnp.zeros((L, 1), bool), q_cnt,
-                         trunc))
+        winit = (jnp.int32(0), jnp.int32(0), jnp.zeros((L, 1), bool),
+                 q_cnt, trunc, jnp.bool_(False))
+        if EARLY_EXIT:
+            # Same body, but stop as soon as a step reports done — the
+            # scan engine exits here too, and post-done steps are no-ops,
+            # so the trajectory is bit-identical by construction.
+            _, a_ptr, blocked, q_cnt, trunc, _ = jax.lax.while_loop(
+                lambda c: (c[0] < W) & jnp.logical_not(c[-1]), work, winit)
+        else:
+            _, a_ptr, blocked, q_cnt, trunc, _ = jax.lax.fori_loop(
+                0, W, lambda _, c: work(c), winit)
 
         # saturation check (same rule as the scan engine): work the oracle
         # would still do => the bounded list diverged this slot.
@@ -260,11 +279,12 @@ def _bfjs_mr_kernel(n_ref, sizes_ref, durs_ref,
 @functools.partial(
     jax.jit,
     static_argnames=("L", "K", "Qcap", "A_max", "work_steps", "capacity",
-                     "window", "interpret"))
+                     "window", "interpret", "early_exit"))
 def bfjs_mr_pallas(n: jax.Array, sizes: jax.Array, durs: jax.Array,
                    L: int, K: int, Qcap: int, A_max: int,
                    work_steps: int, capacity: tuple[float, ...],
-                   window: int | None = None, interpret: bool = False):
+                   window: int | None = None, interpret: bool = False,
+                   early_exit: bool = True):
     """Run the fused multi-resource BF-J/S slot engine on an ensemble.
 
     n (G, T) int32, sizes (G, T, A_max, R) f32, durs (G, T, D) int32 with
@@ -291,7 +311,7 @@ def bfjs_mr_pallas(n: jax.Array, sizes: jax.Array, durs: jax.Array,
     CAP = tuple(round(c * RES) for c in capacity)
     kernel = functools.partial(
         _bfjs_mr_kernel, L=L, K=K, R=R, Qcap=Qcap, A_max=A_max,
-        W=work_steps, TW=TW, CAP=CAP, D=D)
+        W=work_steps, TW=TW, CAP=CAP, D=D, EARLY_EXIT=early_exit)
     qlen, occ, ndep, dropped, trunc = pl.pallas_call(
         kernel,
         grid=(G, NW),

@@ -34,13 +34,17 @@ def bfjs_mr_simulate(streams: SchedStreams, L: int, K: int, Qcap: int,
                      A_max: int, work_steps: int | None = None,
                      capacity: tuple[float, ...] | float = 1.0,
                      window: int | None = None,
-                     use_pallas: bool = True) -> PolicyResult:
+                     use_pallas: bool = True,
+                     early_exit: bool = True) -> PolicyResult:
     """Fused-kernel Monte-Carlo multi-resource BF-J/S: one grid cell per
     ensemble member.
 
     streams holds (G, ...)-shaped pre-generated randomness
     (engine.streams.make_streams vmapped over the ensemble keys, or a
-    trace-built stream batched with a leading axis)."""
+    trace-built stream batched with a leading axis).  ``early_exit=False``
+    forces the kernel's placement work list to run its full
+    ``work_steps`` bound every slot (the pre-optimization behaviour, kept
+    for benchmarking the early-exit win — trajectories are identical)."""
     streams = _lift_batched_sizes(streams)
     R = int(streams.sizes.shape[-1])
     capacity = _norm_capacity(capacity, R)
@@ -52,7 +56,8 @@ def bfjs_mr_simulate(streams: SchedStreams, L: int, K: int, Qcap: int,
     qlen, occ, ndep, dropped, trunc = bfjs_mr_pallas(
         streams.n, streams.sizes, streams.durs, L=L, K=K, Qcap=Qcap,
         A_max=A_max, work_steps=work_steps, capacity=capacity,
-        window=window, interpret=interpret_default())
+        window=window, interpret=interpret_default(),
+        early_exit=early_exit)
     z = jnp.zeros_like(dropped)  # kernels simulate fault-free clusters
     return PolicyResult(qlen, occ, jnp.cumsum(ndep, axis=1), dropped, trunc,
                         z, z, z)

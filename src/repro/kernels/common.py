@@ -23,6 +23,15 @@ BIG = 3.4e38
 #: tests can monkeypatch the environment).
 VMEM_BUDGET_BYTES = 14 * 1024 * 1024
 
+#: Default per-device HBM budget for the ensemble-resident planes of a
+#: Monte-Carlo kernel launch (pre-generated streams in + per-slot
+#: trajectories out, all scaled by the ensemble dimension G).  Unlike the
+#: VMEM scratch — which is per grid cell and independent of G — this
+#: footprint grows with the ensemble, and SHARDING divides it: a mesh over
+#: D devices holds G/D members per device.  Override with the
+#: REPRO_HBM_BUDGET_BYTES environment variable (read at call time).
+HBM_BUDGET_BYTES = 16 * 1024 ** 3
+
 
 class GracefulDegradationWarning(UserWarning):
     """A ``engine="pallas"`` request was served by the scan engine instead.
@@ -39,18 +48,33 @@ def vmem_budget_bytes() -> int:
     return int(os.environ.get("REPRO_VMEM_BUDGET_BYTES", VMEM_BUDGET_BYTES))
 
 
-def pallas_precheck(kernel: str, *, nbytes: int, fault_plane: bool = False,
+def hbm_budget_bytes() -> int:
+    """The enforced per-device ensemble-plane budget (env-overridable)."""
+    return int(os.environ.get("REPRO_HBM_BUDGET_BYTES", HBM_BUDGET_BYTES))
+
+
+def pallas_precheck(kernel: str, *, nbytes: int, hbm_bytes: int = 0,
+                    num_devices: int = 1, fault_plane: bool = False,
                     strict: bool = False) -> bool:
-    """Gate an ``engine="pallas"`` dispatch (DESIGN.md §8/§9 enforcement).
+    """Gate an ``engine="pallas"`` dispatch (DESIGN.md §8/§9/§11).
 
     Returns True when the fused kernel may run.  On a violation — estimated
-    VMEM scratch ``nbytes`` over :func:`vmem_budget_bytes`, or a fault-plane
-    request (the kernels simulate fault-free clusters only) — either raises
-    ``ValueError`` (``strict=True``) or emits a loud
-    :class:`GracefulDegradationWarning` and returns False so the caller
-    falls back to the bit-identical scan engine.  Never fail silently."""
+    VMEM scratch ``nbytes`` over :func:`vmem_budget_bytes`, the PER-DEVICE
+    share of the ensemble planes ``hbm_bytes / num_devices`` over
+    :func:`hbm_budget_bytes`, or a fault-plane request (the kernels
+    simulate fault-free clusters only) — either raises ``ValueError``
+    (``strict=True``) or emits a loud :class:`GracefulDegradationWarning`
+    and returns False so the caller falls back to the bit-identical scan
+    engine.  Never fail silently.
+
+    ``hbm_bytes`` is the GLOBAL ensemble footprint (streams in + per-slot
+    trajectories out, all carrying the full G axis) and ``num_devices`` the
+    mesh size it is sharded over, so a request that overflows one device
+    can still dispatch when the ensemble spans a mesh — the sharded path
+    is checked per device, never against global G."""
     budget = vmem_budget_bytes()
     reason = None
+    per_device = -(-hbm_bytes // max(num_devices, 1))
     if fault_plane:
         reason = (f"kernel {kernel!r} does not implement fault-plane "
                   "preemption")
@@ -58,6 +82,13 @@ def pallas_precheck(kernel: str, *, nbytes: int, fault_plane: bool = False,
         reason = (f"kernel {kernel!r} needs ~{nbytes} bytes of VMEM "
                   f"scratch, over the {budget}-byte budget "
                   "(REPRO_VMEM_BUDGET_BYTES)")
+    elif per_device > hbm_budget_bytes():
+        reason = (f"kernel {kernel!r} needs ~{per_device} bytes of "
+                  f"ensemble streams/trajectories per device "
+                  f"({hbm_bytes} over {num_devices} device(s)), over the "
+                  f"{hbm_budget_bytes()}-byte budget "
+                  "(REPRO_HBM_BUDGET_BYTES); shard the ensemble over more "
+                  "devices (mesh=/devices=) or shrink G")
     if reason is None:
         return True
     if strict:
@@ -72,6 +103,17 @@ def pallas_precheck(kernel: str, *, nbytes: int, fault_plane: bool = False,
 def interpret_default() -> bool:
     """Pallas interpret mode everywhere but real TPUs (correctness-grade)."""
     return jax.default_backend() != "tpu"
+
+
+def ensemble_plane_bytes(G: int, T: int, *, stream_lanes: int,
+                         out_lanes: int) -> int:
+    """Global HBM footprint of one Monte-Carlo kernel launch: the (G, T,
+    lanes) pre-generated stream planes in plus the (G, T, lanes) per-slot
+    trajectory planes out (all 4-byte dtypes), plus the per-member scalar
+    counters.  Divided by the mesh size in :func:`pallas_precheck` — the
+    per-DEVICE share is what gets gated, so sharding the ensemble grows
+    the feasible G envelope instead of tripping a global-G check."""
+    return 4 * G * (T * (stream_lanes + out_lanes) + 2)
 
 
 def resolve_windows(T: int, window: int | None) -> tuple[int, int]:

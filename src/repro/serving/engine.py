@@ -136,6 +136,7 @@ def estimate_capacity(num_replicas: int, lam: float,
                       policy: str = "bfjs", engine: str = "scan",
                       workload=None, seed: int = 0, K: int = 16,
                       Qcap: int = 512, A_max: int = 8,
+                      mesh=None, devices=None,
                       **policy_config) -> dict:
     """Monte-Carlo what-if sizing for a serving fleet.
 
@@ -156,8 +157,16 @@ def estimate_capacity(num_replicas: int, lam: float,
     to the policy runner.  Returns tail-queue / drop statistics to answer
     "how many replicas do I need for this traffic?" before any model is
     loaded.
+
+    ``mesh=``/``devices=`` shard the ensemble over devices (bit-identical
+    results — ``core.engine.sharding``); the tuning cache fills unset
+    launch knobs automatically (``core.engine.tuning``) — the returned
+    dict reports ``devices``, ``tuned`` and ``cache_hit`` so sizing runs
+    are attributable to a specific launch configuration.
     """
-    from repro.core.engine import Workload, monte_carlo_policy
+    from repro.core.engine import (Workload, monte_carlo_policy,
+                                   resolve_mesh)
+    from repro.core.engine.tuning import apply_tuned
 
     if workload is None:
         if size_sampler is None:
@@ -166,15 +175,22 @@ def estimate_capacity(num_replicas: int, lam: float,
         workload = Workload(lam=lam, mu=1.0 / mean_service_slots,
                             sampler=size_sampler)
 
+    mesh = resolve_mesh(mesh, devices)
+    policy_config.update(L=num_replicas, K=K, Qcap=Qcap, A_max=A_max,
+                         horizon=horizon)
+    tuning_meta = apply_tuned(policy, engine, policy_config,
+                              workload.num_resources)
     keys = jax.random.split(jax.random.PRNGKey(seed), ensembles)
     res = monte_carlo_policy(workload, keys, policy=policy, engine=engine,
-                             L=num_replicas, K=K, Qcap=Qcap, A_max=A_max,
-                             horizon=horizon, **policy_config)
+                             mesh=mesh, **policy_config)
     tail = np.asarray(res.queue_len)[:, -max(horizon // 4, 1):]
     return {
         "replicas": num_replicas,
         "policy": policy,
         "engine": engine,
+        "devices": 1 if mesh is None else int(mesh.devices.size),
+        "tuned": tuning_meta["tuned"],
+        "cache_hit": tuning_meta["cache_hit"],
         "mean_tail_queue": float(tail.mean()),
         "p95_tail_queue": float(np.percentile(tail, 95)),
         "mean_occupancy": float(np.asarray(res.occupancy).mean()),

@@ -6,3 +6,7 @@ sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
 # Tests must see the real (1-device) CPU platform — the 512-device override
 # belongs to the dry-run subprocesses only.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+# Hermetic tuning: never read or write a developer's real tuning cache.
+# Tests that exercise the cache opt in by monkeypatching this variable.
+os.environ.setdefault("REPRO_TUNING_CACHE", "off")

@@ -69,26 +69,32 @@ def test_streams_from_trace_collapse_modes():
 
 
 # ---------------------------------------------------------------------------
-# alignment score: canonical f32 agrees between numpy and XLA
+# alignment score: exact arithmetic agrees between numpy and XLA
 # ---------------------------------------------------------------------------
 def test_alignment_score_numpy_jnp_agree():
     from repro.core.quantize import RES
-    from repro.core.engine.ops import alignment_scores_jnp
+    from repro.core.engine.ops import alignment_score_pair_jnp
     rng = np.random.default_rng(0)
     for R in (2, 3, 5):
         avail = rng.integers(0, RES + 1, size=(17, R))
         dem = rng.integers(1, RES + 1, size=(R,))
         a = alignment_scores(avail.astype(np.float64),
                              dem.astype(np.float64))
-        b = np.asarray(alignment_scores_jnp(jax.numpy.asarray(avail),
-                                            jax.numpy.asarray(dem)))
-        np.testing.assert_array_equal(a, b)
-        # the oracle scores on normalized dyadics (k/RES), the engine on
-        # grid integers: exactly a 2^-32 rescale (power of two => identical
-        # mantissas and rounding), so comparison order is identical too
+        # oracle f64 score is the exact integer inner product
+        exact = (avail.astype(np.int64) * dem.astype(np.int64)).sum(axis=1)
+        np.testing.assert_array_equal(a, exact.astype(np.float64))
+        # engine (hi, lo) pair reassembles to the same exact integer, with
+        # lo normalized to [0, 256) so lexicographic compare == exact
+        # compare
+        hi, lo = alignment_score_pair_jnp(jax.numpy.asarray(avail),
+                                          jax.numpy.asarray(dem))
+        hi, lo = np.asarray(hi).astype(np.int64), np.asarray(lo)
+        assert ((0 <= lo) & (lo < 256)).all()
+        np.testing.assert_array_equal(hi * 256 + lo, exact)
+        # the oracle scores on normalized dyadics (k/RES): a 2^-32 rescale
+        # (power of two => exact), so comparison order is identical too
         an = alignment_scores(avail / RES, dem / RES)
-        np.testing.assert_array_equal(an.astype(np.float64) * 2.0 ** 32,
-                                      a.astype(np.float64))
+        np.testing.assert_array_equal(an * 2.0 ** 32, a)
 
 
 # ---------------------------------------------------------------------------
