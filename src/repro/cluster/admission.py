@@ -109,6 +109,19 @@ class AdmissionController:
                 f"+ {size} > {RES} — double release or size mismatch")
         self.residual[replica] += size
 
+    def push_front(self, job: PendingJob) -> None:
+        """Queue-head insert: the serving engine's slot-rejection path
+        re-admits a memory-admitted request ahead of every waiting one
+        (it outranks the newest arrival).  Keeps the virtual-queue
+        accounting consistent — ``refill`` will decrement the same type
+        counter when the job eventually places.
+
+        The device-resident controller (``serving/live.py``) implements
+        the identical operation as a jitted queue roll.
+        """
+        self.queue.insert(0, job)
+        self._vq_sizes[self.part.type_of_scalar(job.size)] += 1
+
     def queue_len(self) -> int:
         return len(self.queue)
 

@@ -16,8 +16,10 @@ from .queues import Job, SortedJobQueue, VirtualQueues
 from .simulator import SimResult, simulate, simulate_trace
 from .stability import (enumerate_configs, maximal_configs, rho_bounds,
                         rho_star_discrete, rho_star_upper_bound)
-from .trace import (Trace, collapse_resources, empirical_size_stats,
-                    load_trace_csv, scale_arrivals,
+from .trace import (MachineEvents, Trace, collapse_resources,
+                    empirical_size_stats, iter_trace_csv,
+                    load_machine_events_csv, load_trace_csv,
+                    scale_arrivals, scan_trace_maxima,
                     synthesize_google_like_trace)
 from .vqs import VQS
 from .vqs_bf import VQSBF
@@ -30,7 +32,8 @@ __all__ = [
     "RES", "TWO_THIRDS", "from_grid", "to_grid", "Job", "SortedJobQueue",
     "VirtualQueues", "SimResult", "simulate", "simulate_trace",
     "enumerate_configs", "maximal_configs", "rho_bounds",
-    "rho_star_discrete", "rho_star_upper_bound", "Trace",
-    "collapse_resources", "empirical_size_stats", "load_trace_csv",
-    "scale_arrivals", "synthesize_google_like_trace", "VQS", "VQSBF",
+    "rho_star_discrete", "rho_star_upper_bound", "MachineEvents", "Trace",
+    "collapse_resources", "empirical_size_stats", "iter_trace_csv",
+    "load_machine_events_csv", "load_trace_csv", "scale_arrivals",
+    "scan_trace_maxima", "synthesize_google_like_trace", "VQS", "VQSBF",
 ]

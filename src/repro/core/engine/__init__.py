@@ -24,7 +24,12 @@ branch-free programs that run ON the accelerator:
     single-device run; composes with ``chunked`` checkpointed sweeps);
   * ``tuning``   — the shape-keyed ``window=``/``work_steps=`` autotuner
     with its persistent, bit-match-verified tuning cache
-    (``REPRO_TUNING_CACHE``).
+    (``REPRO_TUNING_CACHE``);
+  * ``streaming`` — ``stream_policy`` drives chunks of any (possibly
+    infinite) arrival iterator through the stateful scan engines with
+    carried state, double-buffering host ingestion against device compute
+    (backpressure counters on ``PolicyResult``); finite traces replay
+    bit-identically to the one-shot run under any chunking.
 
 Engine contract (DESIGN.md §1): per policy, ``"scan"`` bit-matches
 ``"reference"`` while ``truncated == 0``, and ``"pallas"`` bit-matches
@@ -41,6 +46,8 @@ from .bfjs import (BFJSResult, BFJSState, DEFAULT_MAX_REQUEUE,
 from .bfjs_mr import (monte_carlo_bfjs_mr_workload, run_bfjs_mr_streams,
                       run_bfjs_mr_trace, run_bfjs_mr_workload)
 from .chunked import run_chunked, streams_fingerprint
+from .streaming import (iter_stream_chunks, stream_chunks_from_trace,
+                        stream_policy)
 from .sharding import (ENSEMBLE_AXIS, ensemble_streams, monte_carlo_chunked,
                        resolve_mesh, sharded_monte_carlo)
 from .tuning import (TuningCache, apply_tuned, autotune, shape_key,
@@ -62,7 +69,9 @@ __all__ = [
     "monte_carlo_bfjs", "run_bfjs", "run_bfjs_streams", "run_bfjs_trace",
     "monte_carlo_bfjs_mr_workload", "run_bfjs_mr_streams",
     "run_bfjs_mr_trace", "run_bfjs_mr_workload", "run_chunked",
-    "streams_fingerprint", "ENSEMBLE_AXIS", "ensemble_streams",
+    "streams_fingerprint", "iter_stream_chunks",
+    "stream_chunks_from_trace", "stream_policy",
+    "ENSEMBLE_AXIS", "ensemble_streams",
     "monte_carlo_chunked", "resolve_mesh", "sharded_monte_carlo",
     "TuningCache", "apply_tuned", "autotune", "shape_key",
     "tuning_enabled", "alignment_score_pair_jnp",

@@ -186,6 +186,12 @@ def run_policy_streams(streams: SchedStreams, *, policy: str = "bfjs",
     Ensemble-batched streams (leading G axis) may add ``mesh=``/
     ``devices=`` to shard the ensemble over devices per chunk
     (``core.engine.sharding``).
+
+    For streams that are NOT fully materialized — an unbounded arrival
+    iterator, a multi-GB trace read chunk-by-chunk — use
+    ``core.engine.stream_policy``, which threads the same carried state
+    through any chunk iterator, double-buffers host ingestion against
+    device compute, and bit-matches this function on any finite trace.
     """
     _check_engine(engine)
     from .sharding import resolve_mesh

@@ -132,8 +132,13 @@ def _load_step(checkpoint_dir: str, step: int
         raise ValueError(f"malformed engine-state checkpoint at {path}: "
                          f"state indices {idxs}")
     state = tuple(jnp.asarray(data[f"state/{i}"]) for i in idxs)
-    partial = PolicyResult(*(jnp.asarray(data[f"partial/{f}"])
-                             for f in PolicyResult._fields))
+    # Optional fields (fault counters on unfaulted runs, the streaming
+    # backpressure counters always) are None leaves — dropped by
+    # tree_flatten at save time, so absent from the npz.
+    partial = PolicyResult(*(
+        jnp.asarray(data[f"partial/{f}"])
+        if f"partial/{f}" in data.files else None
+        for f in PolicyResult._fields))
     return state, partial
 
 

@@ -1,0 +1,408 @@
+"""Streaming driver: unbounded arrival iterators through the scan engines.
+
+Every other entry point replays a fixed-``T`` pre-materialized stream; the
+paper's setting (Psychas–Ghaderi 2019, Section III) is an *unbounded*
+arrival process served online.  :func:`stream_policy` iterates chunks of
+any — possibly infinite — ``SchedStreams`` iterator through the stateful
+scan engines, threading the complete carried queue/occupancy/fault state
+between chunks exactly as ``core.engine.chunked`` does, so
+
+    **streaming replay of any finite trace is BIT-IDENTICAL to the
+    one-shot ``run_policy_streams`` run, under any chunking** —
+
+the invariant ``tests/test_streaming.py`` enforces per policy x engine x
+chunk size.  What streaming adds over ``run_chunked`` is the *pipeline*:
+
+  * **Double-buffered ingestion.**  JAX dispatch is asynchronous, so while
+    the device computes chunk N the host pulls chunk N+1 from the iterator
+    and stages it with ``jax.device_put``.  At most two chunks are ever in
+    flight (the host blocks on chunk N-1 before dispatching N+1), which
+    bounds host memory for infinite iterators to O(2 chunks), not O(T).
+  * **Backpressure counters.**  The returned :class:`PolicyResult` carries
+    ``chunks_behind`` — chunks whose device compute finished before the
+    host had the NEXT chunk staged (ingestion is the bottleneck; feed the
+    device bigger chunks or a faster reader) — and ``host_stall_us`` — the
+    total host time spent blocked waiting on device compute (the device is
+    the bottleneck; the healthy state for a serving loop).  Both measure
+    host/device overlap only: they are excluded from bit-match
+    comparisons, and the trajectory never depends on timing.
+  * **Bounded-memory trajectories.**  ``trajectory="full"`` concatenates
+    per-chunk planes (the default; what the parity tests compare).
+    ``trajectory="tail"`` keeps only the newest chunk's planes — with the
+    cumulative ``departed`` offset folded in and the scalar counters
+    already whole-run totals (they accumulate in the carry) — so an
+    unbounded run holds O(chunk), not O(elapsed horizon).
+
+Engines: ``"scan"`` is the native streaming engine (its carry is the
+entire simulation state).  ``"pallas"`` routes through
+``kernels.common.pallas_precheck(streaming_carry=True)`` — the fused
+kernels keep state in VMEM scratch for one launch and cannot thread it
+across chunks, so the request degrades loudly (GracefulDegradationWarning)
+to the bit-identical scan engine, or raises under ``strict=True``.
+``"reference"`` keeps host-side state and is rejected.
+
+``checkpoint_dir=`` persists the carry at every chunk boundary (same
+atomic tmp-then-rename contract as chunked sweeps); ``resume=True``
+re-iterates the source, skips the chunks already executed — verifying the
+first chunk's fingerprint so a checkpoint never continues a different
+stream — and continues bit-exactly.
+"""
+from __future__ import annotations
+
+import time
+import warnings
+from collections import deque
+from typing import Iterable, Iterator
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import ckpt
+
+from .chunked import (_STATEFUL, _append, _load_step, _save_step,
+                      _slice_streams, streams_fingerprint)
+from .streams import PolicyResult, SchedStreams
+
+#: jitted ensemble (vmapped) runner pairs keyed by (policy, config items)
+#: — reused across stream_policy calls so repeated streaming runs of the
+#: same study (sweeps, benches, tests) compile once, like the module-level
+#: jits of the underlying engines.  jax.jit then re-specializes per chunk
+#: shape as usual.
+_ENSEMBLE_RUNNERS: dict = {}
+
+
+def _ensemble_runners(policy: str, config: dict):
+    try:
+        key = (policy, tuple(sorted(config.items())))
+        cached = _ENSEMBLE_RUNNERS.get(key)
+    except TypeError:        # unhashable config value: skip the cache
+        key, cached = None, None
+    if cached is not None:
+        return cached
+    base, cfg = _STATEFUL[policy], dict(config)
+    first_fn = jax.jit(
+        lambda s: jax.vmap(lambda x: base(x, None, cfg))(s))
+    next_fn = jax.jit(
+        lambda s, st: jax.vmap(lambda x, y: base(x, y, cfg))(s, st),
+        donate_argnums=(1,))
+    if key is not None:
+        _ENSEMBLE_RUNNERS[key] = (first_fn, next_fn)
+    return first_fn, next_fn
+
+
+def iter_stream_chunks(streams: SchedStreams, chunk: int
+                       ) -> Iterator[SchedStreams]:
+    """Slice a materialized ``SchedStreams`` into contiguous time chunks —
+    the trivial chunk source (tests, benches, replaying an in-memory
+    sweep through :func:`stream_policy`).  Ensemble-batched streams
+    (leading G axis) slice along their time axis."""
+    if chunk <= 0:
+        raise ValueError(f"chunk must be positive, got {chunk}")
+    ensemble = streams.n.ndim == 2
+    T = int(streams.n.shape[-1])
+    for lo in range(0, T, chunk):
+        yield _slice_streams(streams, lo, min(lo + chunk, T), ensemble)
+
+
+def stream_chunks_from_trace(traces: Iterable, *, chunk_slots: int,
+                             A_max: int, collapse: bool = True,
+                             num_resources: int | None = None
+                             ) -> Iterator[SchedStreams]:
+    """Re-bucket an iterator of :class:`~repro.core.trace.Trace` chunks
+    (e.g. ``core.trace.iter_trace_csv`` output, chunked by ROW COUNT) into
+    fixed ``chunk_slots``-slot ``SchedStreams`` windows for
+    :func:`stream_policy`.
+
+    The two chunkings disagree by construction — a CSV reader cuts on
+    rows, the engines need contiguous time windows — so arrivals are
+    buffered until a window's end has provably passed (arrival slots are
+    non-decreasing across reader chunks; the reader validates that) and
+    emitted window by window, INCLUDING all-empty windows for slot gaps
+    longer than a window: time must advance for in-service durations to
+    tick.  Only the not-yet-emitted rows are ever held — constant memory.
+
+    ``A_max`` is mandatory: a streaming source cannot know the global
+    per-slot arrival peak in advance, and the engines' carry must keep one
+    shape across chunks.  A window whose peak exceeds it raises (streams
+    never drop trace jobs silently).  The final window is trimmed to the
+    last arrival's slot, so the concatenated horizon equals the one-shot
+    ``streams_from_trace`` horizon and trajectories bit-match.
+
+    ``collapse=True`` applies the paper's max(cpu, mem) preprocessing;
+    ``collapse=False`` keeps (cpu, mem) requirement vectors
+    (``policy="bfjs-mr"``).  ``num_resources`` pins the expected R exactly
+    as ``streams_from_trace`` does.
+    """
+    from .streams import streams_from_trace
+
+    if chunk_slots <= 0:
+        raise ValueError(f"chunk_slots must be positive, got {chunk_slots}")
+    R = 1 if collapse else 2
+    if num_resources is not None and num_resources != R:
+        raise ValueError(
+            f"collapse={collapse} yields R={R} resource plane(s) but "
+            f"num_resources={num_resources} was requested")
+    empty_sizes = np.empty((0,) if collapse else (0, R), dtype=np.float64)
+    buf_slots = np.empty((0,), dtype=np.int64)
+    buf_sizes = empty_sizes
+    buf_durs = np.empty((0,), dtype=np.int64)
+    win_lo = 0           # first slot of the next window to emit
+    last_slot = -1       # newest slot seen (slots are non-decreasing)
+
+    def emit(hi_slots: int) -> SchedStreams:
+        """Emit the window [win_lo, win_lo + hi_slots) from the buffer."""
+        nonlocal buf_slots, buf_sizes, buf_durs, win_lo
+        take = buf_slots < win_lo + hi_slots
+        win = streams_from_trace(
+            buf_slots[take] - win_lo, buf_sizes[take], buf_durs[take],
+            horizon=hi_slots, A_max=A_max, num_resources=num_resources)
+        buf_slots = buf_slots[~take]
+        buf_sizes = buf_sizes[~take]
+        buf_durs = buf_durs[~take]
+        win_lo += hi_slots
+        return win
+
+    for tr in traces:
+        slots = np.asarray(tr.arrival_slots, dtype=np.int64)
+        if len(slots) == 0:
+            continue
+        if slots[0] < last_slot:
+            raise ValueError(
+                f"trace chunks went backwards in time: slot {slots[0]} "
+                f"after {last_slot} (the reader guarantees monotone "
+                "arrivals — did chunks arrive out of order?)")
+        sizes = (np.maximum(tr.cpu, tr.mem) if collapse
+                 else np.stack([tr.cpu, tr.mem], axis=1))
+        buf_slots = np.concatenate([buf_slots, slots])
+        buf_sizes = np.concatenate([buf_sizes, sizes])
+        buf_durs = np.concatenate([buf_durs,
+                                   np.asarray(tr.durations, np.int64)])
+        last_slot = int(slots[-1])
+        # every window whose end has provably passed is complete
+        while last_slot >= win_lo + chunk_slots:
+            yield emit(chunk_slots)
+    if len(buf_slots):
+        # final window: trim to the last arrival so the concatenated
+        # horizon equals the one-shot streams_from_trace horizon
+        yield emit(last_slot - win_lo + 1)
+
+
+def _chunk_shape(streams: SchedStreams) -> tuple:
+    """(ensemble?, G, A_max lanes, R) — the shape a stream's chunks must
+    keep constant (the engine carry is built once, from the first)."""
+    ensemble = streams.n.ndim == 2
+    G = int(streams.n.shape[0]) if ensemble else 0
+    R = streams.num_resources
+    return (ensemble, G, int(streams.sizes.shape[streams.n.ndim]), R)
+
+
+def _is_ready(arr) -> bool:
+    """True when a dispatched array's computation has completed (False =
+    still in flight).  Falls back to True — counting a chunk as
+    device-idle — on runtimes without ``is_ready`` introspection."""
+    try:
+        return bool(arr.is_ready())
+    except AttributeError:
+        return True
+
+
+def stream_policy(chunks: Iterable, *, policy: str = "bfjs",
+                  engine: str = "scan",
+                  checkpoint_dir: str | None = None,
+                  resume: bool = False,
+                  stop_after_chunks: int | None = None,
+                  trajectory: str = "full",
+                  strict: bool = False,
+                  **config) -> PolicyResult:
+    """Run a (possibly infinite) iterator of ``SchedStreams`` chunks
+    through a stateful scan engine with carried state — see the module
+    docstring for the pipeline, invariants and backpressure semantics.
+
+    ``chunks`` yields contiguous time windows (``iter_stream_chunks``,
+    ``stream_chunks_from_trace``, or any generator — windows may have
+    different lengths, but must keep one arrival-lane width and, for
+    ensembles, one G).  ``stop_after_chunks`` bounds how many chunks THIS
+    call executes (the unbounded-generator escape hatch; the partial
+    result is returned and, with ``checkpoint_dir=``, resumable).
+    ``trajectory="tail"`` keeps only the newest chunk's per-slot planes
+    (bounded memory; scalar counters stay whole-run exact).
+
+    Bit-match contract: for any finite chunking of streams ``S``,
+    ``stream_policy(iter_stream_chunks(S, c), policy=p)`` equals
+    ``run_policy_streams(S, policy=p)`` bit-for-bit on every trajectory
+    field, for every chunk size ``c``.
+    """
+    if policy not in _STATEFUL:
+        raise ValueError(
+            f"policy {policy!r} has no stateful scan engine; streaming "
+            f"supports: {', '.join(sorted(_STATEFUL))}")
+    if trajectory not in ("full", "tail"):
+        raise ValueError(f"trajectory must be 'full' or 'tail', "
+                         f"got {trajectory!r}")
+    if engine == "reference":
+        raise ValueError(
+            'engine="reference" keeps host-side state and cannot stream; '
+            'use engine="scan"')
+    if engine == "pallas":
+        from repro.kernels.common import pallas_precheck
+        # never True: the fused kernels' state lives in VMEM scratch for
+        # one launch only — raises under strict, else warns + scan
+        pallas_precheck(f"{policy} stream", nbytes=0, streaming_carry=True,
+                        strict=strict)
+        engine = "scan"
+    elif engine != "scan":
+        raise ValueError(f"unknown engine {engine!r}; streaming supports "
+                         '"scan" (and "pallas" via loud fallback)')
+    if resume and checkpoint_dir is None:
+        raise ValueError("resume=True needs checkpoint_dir=")
+
+    it = iter(chunks)
+    try:
+        first = next(it)
+    except StopIteration:
+        raise ValueError("stream_policy: the chunk iterator is empty") \
+            from None
+
+    ensemble, G, lanes, n_res = _chunk_shape(first)
+    if policy == "bfjs-mr":
+        from .bfjs_mr import _norm_capacity
+        cap = config.get("capacity", 1.0)
+        if not isinstance(cap, tuple):
+            config["capacity"] = _norm_capacity(cap, max(n_res, 1))
+    config.setdefault("A_max", lanes)
+    from .tuning import apply_tuned
+    apply_tuned(policy, "scan", config, max(n_res, 1))
+    config.pop("strict", None)
+    config.pop("window", None)
+
+    meta = {
+        "policy": policy,
+        "trajectory": trajectory,
+        "ensemble": ensemble,
+        "faulted": first.up is not None,
+        "first_chunk_sha256": None,  # filled below (after lifting)
+        "config": {k: repr(v) for k, v in sorted(config.items())},
+    }
+
+    def prepare(streams_chunk: SchedStreams, index: int) -> SchedStreams:
+        """Host-side chunk staging: validate shape, lift bfjs-mr planes,
+        push to the device.  This is the work double-buffered against the
+        previous chunk's device compute."""
+        shape = _chunk_shape(streams_chunk)
+        if shape != (ensemble, G, lanes, n_res):
+            raise ValueError(
+                f"chunk {index} changed shape mid-stream: (ensemble, G, "
+                f"A_max, R) {shape} != first chunk's "
+                f"{(ensemble, G, lanes, n_res)} — the engine carry keeps "
+                "one shape for the life of the stream")
+        if policy == "bfjs-mr":
+            from .bfjs_mr import _lift_sizes
+            streams_chunk = _lift_sizes(streams_chunk)
+        return jax.device_put(streams_chunk)
+
+    base = _STATEFUL[policy]
+    if ensemble:
+        _first_fn, _next_fn = _ensemble_runners(policy, config)
+
+        def runner(streams_chunk, st):
+            return _first_fn(streams_chunk) if st is None \
+                else _next_fn(streams_chunk, st)
+    else:
+        def runner(streams_chunk, st):
+            return base(streams_chunk, st, config)
+
+    staged = prepare(first, 0)
+    meta["first_chunk_sha256"] = streams_fingerprint(staged)
+
+    start = 0
+    state: tuple | None = None
+    partial: PolicyResult | None = None
+    if resume:
+        latest = ckpt.latest_step(checkpoint_dir)
+        if latest is not None:
+            extra = ckpt.read_manifest(checkpoint_dir, latest)["extra"]
+            stale = {k: (extra.get(k), v) for k, v in meta.items()
+                     if extra.get(k) != v}
+            if stale:
+                raise ValueError(
+                    f"checkpoint at {checkpoint_dir!r} belongs to a "
+                    f"different stream; mismatched (found, expected): "
+                    f"{stale}")
+            state, partial = _load_step(checkpoint_dir, latest)
+            start = latest
+            # skip the chunks already executed (the source re-iterates
+            # deterministically; chunk 0's fingerprint was checked above)
+            skipped = 1  # `first` is chunk 0
+            while skipped < start:
+                try:
+                    nxt = next(it)
+                except StopIteration:
+                    raise ValueError(
+                        f"checkpoint says {start} chunks were executed "
+                        f"but the iterator ran out after {skipped} — "
+                        "resuming a DIFFERENT (shorter) stream?") from None
+                prepare(nxt, skipped)  # shape check only; result dropped
+                skipped += 1
+            if start >= 1:
+                try:
+                    staged = prepare(next(it), start)
+                except StopIteration:
+                    # stream fully executed already: return the checkpoint
+                    return partial._replace(chunks_behind=0,
+                                            host_stall_us=0.0)
+
+    concat_axis = 1 if ensemble else 0
+    dep_off = (lambda p: p.departed[..., -1:]) if ensemble \
+        else (lambda p: p.departed[-1])
+
+    def fold(part: PolicyResult | None, res: PolicyResult) -> PolicyResult:
+        if trajectory == "full":
+            return _append(part, res, axis=concat_axis)
+        if part is None:
+            return res
+        return res._replace(departed=res.departed + dep_off(part))
+
+    executed = 0
+    chunks_behind = 0
+    host_stall = 0.0
+    inflight: deque = deque()  # one representative leaf per dispatch
+    i = start
+    exhausted = False
+    while not exhausted:
+        if stop_after_chunks is not None and executed >= stop_after_chunks:
+            break
+        # depth-2 pipeline: before dispatching chunk i, drain to at most
+        # one incomplete dispatch; the time blocked here is device-bound
+        # time — the healthy direction of backpressure.
+        while len(inflight) > 1:
+            t0 = time.perf_counter()
+            jax.block_until_ready(inflight.popleft())
+            host_stall += time.perf_counter() - t0
+        res, state = runner(staged, state)
+        inflight.append(res.queue_len)
+        # host-side work overlapped against the device: pull + stage the
+        # NEXT chunk while this one computes
+        try:
+            nxt = next(it)
+        except StopIteration:
+            exhausted = True
+        else:
+            staged = prepare(nxt, i + 1)
+        if not _is_ready(res.queue_len):
+            pass  # device still busy: ingestion kept up
+        elif not exhausted:
+            chunks_behind += 1  # device idle before the host had chunk N+1
+        partial = fold(partial, res)
+        executed += 1
+        i += 1
+        if checkpoint_dir is not None:
+            # ckpt pulls arrays to host — synchronizes, trading pipeline
+            # overlap for crash-safety at every boundary
+            _save_step(checkpoint_dir, i, {"state": state,
+                                           "partial": partial}, meta)
+    if partial is None:
+        raise ValueError("nothing to run: stop_after_chunks=0 with no "
+                         "checkpoint to return")
+    return partial._replace(chunks_behind=chunks_behind,
+                            host_stall_us=host_stall * 1e6)

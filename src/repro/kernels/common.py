@@ -55,14 +55,17 @@ def hbm_budget_bytes() -> int:
 
 def pallas_precheck(kernel: str, *, nbytes: int, hbm_bytes: int = 0,
                     num_devices: int = 1, fault_plane: bool = False,
+                    streaming_carry: bool = False,
                     strict: bool = False) -> bool:
     """Gate an ``engine="pallas"`` dispatch (DESIGN.md §8/§9/§11).
 
     Returns True when the fused kernel may run.  On a violation — estimated
     VMEM scratch ``nbytes`` over :func:`vmem_budget_bytes`, the PER-DEVICE
     share of the ensemble planes ``hbm_bytes / num_devices`` over
-    :func:`hbm_budget_bytes`, or a fault-plane request (the kernels
-    simulate fault-free clusters only) — either raises ``ValueError``
+    :func:`hbm_budget_bytes`, a fault-plane request (the kernels simulate
+    fault-free clusters only), or a streaming-carry request (the kernels'
+    state lives in VMEM scratch for the launch only and cannot be threaded
+    across chunks of a stream) — either raises ``ValueError``
     (``strict=True``) or emits a loud :class:`GracefulDegradationWarning`
     and returns False so the caller falls back to the bit-identical scan
     engine.  Never fail silently.
@@ -75,7 +78,11 @@ def pallas_precheck(kernel: str, *, nbytes: int, hbm_bytes: int = 0,
     budget = vmem_budget_bytes()
     reason = None
     per_device = -(-hbm_bytes // max(num_devices, 1))
-    if fault_plane:
+    if streaming_carry:
+        reason = (f"kernel {kernel!r} keeps its simulation state in VMEM "
+                  "scratch and cannot export/import the cross-chunk carry "
+                  "a streaming run threads between chunks")
+    elif fault_plane:
         reason = (f"kernel {kernel!r} does not implement fault-plane "
                   "preemption")
     elif nbytes > budget:

@@ -201,14 +201,34 @@ def estimate_capacity(num_replicas: int, lam: float,
 
 
 class ServingEngine:
-    """L replicas + paper-scheduler admission; host-level request queue."""
+    """L replicas + paper-scheduler admission; host-level request queue.
+
+    ``admission="host"`` (default) runs the Python
+    :class:`AdmissionController`; ``admission="live"`` swaps in the
+    device-resident jitted controller (``serving/live.py``) — identical
+    placements (parity-pinned by tests/test_live_admission.py), but each
+    tick's release + BF-S refill decisions run as ONE fused device call
+    instead of a host loop, and the host only dequeues the placement
+    vector.
+    """
 
     def __init__(self, cfg: ModelConfig, params, num_replicas: int = 2,
-                 b_slots: int = 4, c_max: int = 128, policy: str = "bf"):
+                 b_slots: int = 4, c_max: int = 128, policy: str = "bf",
+                 admission: str = "host"):
         self.cfg = cfg
         self.replicas = [Replica(cfg, params, b_slots, c_max)
                          for _ in range(num_replicas)]
-        self.admission = AdmissionController(num_replicas, policy=policy)
+        if admission == "host":
+            self.admission = AdmissionController(num_replicas,
+                                                 policy=policy)
+        elif admission == "live":
+            from repro.serving.live import LiveAdmission
+            self.admission = LiveAdmission(
+                num_replicas, tick_width=num_replicas * b_slots)
+        else:
+            raise ValueError(f"unknown admission {admission!r}; expected "
+                             '"host" or "live"')
+        self._live = admission == "live"
         self.c_max = c_max
         self._by_rid: dict[int, Request] = {}
         self._job_size: dict[int, int] = {}
@@ -238,7 +258,7 @@ class ServingEngine:
         if slot < 0:
             # memory admitted but no batch slot: return to queue front
             self.admission.release(replica_idx, self._job_size[rid])
-            self.admission.queue.insert(0, self._to_job(req))
+            self.admission.push_front(self._to_job(req))
             self.stats["rejected_slots"] += 1
             return
         req.replica, req.slot = replica_idx, slot
@@ -247,17 +267,31 @@ class ServingEngine:
         self.stats["admitted"] += 1
 
     def step(self) -> list[Request]:
-        """One engine tick: decode every replica, release + BF-S refill."""
+        """One engine tick: decode every replica, release + BF-S refill.
+
+        With ``admission="live"`` the whole tick's releases and refills
+        fuse into one device call (``LiveAdmission.tick``); order is
+        equivalent to the host path — a refill only reads its own
+        replica's residual, and refills run in ascending replica order
+        either way.
+        """
         finished_all = []
+        events = []
         for idx, rep in enumerate(self.replicas):
             finished = rep.step()
             for r in finished:
-                self.admission.release(idx, self._job_size[r.rid])
                 self.completed.append(r)
+                if self._live:
+                    events.append((idx, self._job_size[r.rid]))
+                else:
+                    self.admission.release(idx, self._job_size[r.rid])
             finished_all.extend(finished)
-            if finished:
+            if finished and not self._live:
                 for rid, ridx in self.admission.refill(idx):
                     self._start(rid, ridx)
+        if self._live and events:
+            for rid, ridx in self.admission.tick(events):
+                self._start(rid, ridx)
         self.stats["queue_len"].append(self.admission.queue_len())
         self.stats["active"].append(
             sum(len(rep.active()) for rep in self.replicas))
@@ -270,3 +304,8 @@ class ServingEngine:
                     and self.admission.queue_len() == 0:
                 break
         return self.completed
+
+
+#: The serving fleet IS the paper's cluster of L unit-capacity servers —
+#: the alias the capacity-planning and live-admission docs use.
+Cluster = ServingEngine

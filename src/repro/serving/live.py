@@ -1,0 +1,345 @@
+"""Device-resident live admission: BF-J/S bookkeeping as one jitted step.
+
+``cluster/admission.py`` runs the paper's BF-J/S admission as host-side
+Python — an ``argmin`` per admitted request and a list-comprehension scan
+of the whole queue per BF-S refill step, every engine tick.  For a serving
+loop that must keep pace with the device, that per-tick host round-trip is
+the bottleneck, so this module keeps the ENTIRE admission state on the
+accelerator:
+
+    LiveAdmissionState.residual  (L,)    int32 grid-unit residuals
+                      .q_rid     (Qcap,) int32 FIFO queue, lane 0 = head
+                      .q_size    (Qcap,) int32 (compacted: live lanes first)
+                      .q_len, .dropped, .invalid  () int32 counters
+
+and fuses each tick's admit / release / BF-S-refill decisions into single
+jitted calls (``lax.scan`` over arrival lanes for BF-J, a bounded
+``lax.while_loop`` per freed replica for BF-S).  The host only dequeues
+the small per-tick placement vectors — admit/release decisions never
+materialize intermediate state host-side.
+
+Semantics are EXACTLY ``AdmissionController``'s, lane-for-lane:
+
+  * BF-J: first-feasible-minimum residual (``argmin`` over residuals
+    masked to feasibility — ties break to the lowest replica index, the
+    same first-min ``np.argmin`` picks);
+  * BF-S: largest fitting job first, earliest-queued among equals
+    (``argmax`` over FIFO-compacted sizes returns the FIRST maximum —
+    the same job Python's ``max(fits, key=size)`` returns from a
+    queue-ordered list);
+  * ``release`` guards the capacity invariant; where the host controller
+    raises, the jitted step counts the violation in ``invalid`` (a jitted
+    region cannot raise) and the host wrapper raises on the next sync.
+
+Queue overflow is counted in ``dropped`` (the host controller's Python
+list is unbounded; a device queue cannot be — size ``Qcap`` so parity
+holds whenever the host queue stays within it, which the parity suite
+pins).  ``tests/test_live_admission.py`` drives both controllers through
+identical randomized workloads and asserts placement-for-placement
+equality.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.core.quantize import RES
+
+_I32_MAX = jnp.iinfo(jnp.int32).max
+
+
+class LiveAdmissionState(NamedTuple):
+    """Complete device-resident admission state (see module docstring)."""
+    residual: jax.Array   # (L,) int32 free grid units per replica
+    q_rid: jax.Array      # (Qcap,) int32 queued request ids, FIFO-compacted
+    q_size: jax.Array     # (Qcap,) int32 queued sizes (grid units)
+    q_len: jax.Array      # () int32 live queue lanes
+    dropped: jax.Array    # () int32 arrivals dropped on queue overflow
+    invalid: jax.Array    # () int32 release-invariant violations
+
+
+def init_state(num_replicas: int, Qcap: int) -> LiveAdmissionState:
+    return LiveAdmissionState(
+        residual=jnp.full((num_replicas,), RES, dtype=jnp.int32),
+        q_rid=jnp.full((Qcap,), -1, dtype=jnp.int32),
+        q_size=jnp.zeros((Qcap,), dtype=jnp.int32),
+        q_len=jnp.zeros((), jnp.int32),
+        dropped=jnp.zeros((), jnp.int32),
+        invalid=jnp.zeros((), jnp.int32),
+    )
+
+
+def _push_back(state: LiveAdmissionState, rid, size) -> LiveAdmissionState:
+    """Append to the queue tail, or count a drop when full."""
+    Qcap = state.q_rid.shape[0]
+    fits = state.q_len < Qcap
+    at = jnp.minimum(state.q_len, Qcap - 1)
+    return state._replace(
+        q_rid=jnp.where(fits, state.q_rid.at[at].set(rid), state.q_rid),
+        q_size=jnp.where(fits, state.q_size.at[at].set(size), state.q_size),
+        q_len=state.q_len + fits.astype(jnp.int32),
+        dropped=state.dropped + (~fits).astype(jnp.int32))
+
+
+def _admit_one(state: LiveAdmissionState, job):
+    """BF-J for one arrival lane: place on the min-residual feasible
+    replica (first-min tie-break) or enqueue.  Returns the placement
+    (replica index, or -1 when queued/dropped, untouched when masked)."""
+    rid, size, live = job
+    feas = state.residual >= size
+    any_feas = live & feas.any()
+    best = jnp.argmin(jnp.where(feas, state.residual, _I32_MAX)
+                      ).astype(jnp.int32)
+    residual = jnp.where(
+        any_feas, state.residual.at[best].add(-size), state.residual)
+    queued = jax.tree.map(
+        lambda a, b: jnp.where(live & ~any_feas, a, b),
+        _push_back(state, rid, size), state)
+    state = queued._replace(residual=residual)
+    return state, jnp.where(any_feas, best, -1)
+
+
+@jax.jit
+def admit_step(state: LiveAdmissionState, rids: jax.Array,
+               sizes: jax.Array, mask: jax.Array):
+    """Jitted BF-J over one tick's arrivals: ``(A,)`` lanes scanned in
+    order (the controller admits submission-order).  Returns the new state
+    and ``(A,)`` placements (replica, or -1 = queued/dropped)."""
+    return jax.lax.scan(
+        _admit_one, state,
+        (rids.astype(jnp.int32), sizes.astype(jnp.int32), mask))
+
+
+def _remove_lane(q: jax.Array, idx) -> jax.Array:
+    """Drop lane ``idx`` keeping FIFO compaction: lanes after it shift
+    left one (the device analogue of ``list.remove``)."""
+    lanes = jnp.arange(q.shape[0])
+    return jnp.where(lanes >= idx, jnp.roll(q, -1), q)
+
+
+def _refill_replica(state: LiveAdmissionState, replica,
+                    out_rid, out_rep, count):
+    """BF-S on one freed replica: repeatedly place the largest fitting
+    queued job (earliest among equals) until none fits."""
+    Qcap = state.q_rid.shape[0]
+
+    def fits_mask(st):
+        lanes = jnp.arange(Qcap)
+        return (lanes < st.q_len) & (st.q_size <= st.residual[replica])
+
+    def cond(carry):
+        st = carry[0]
+        return fits_mask(st).any()
+
+    def body(carry):
+        st, orid, orep, cnt = carry
+        m = fits_mask(st)
+        # argmax over FIFO-compacted lanes -> first (earliest) maximum,
+        # matching Python max() over the queue-ordered list
+        pick = jnp.argmax(jnp.where(m, st.q_size, -1)).astype(jnp.int32)
+        size = st.q_size[pick]
+        rid = st.q_rid[pick]
+        st = st._replace(
+            residual=st.residual.at[replica].add(-size),
+            q_rid=_remove_lane(st.q_rid, pick),
+            q_size=_remove_lane(st.q_size, pick),
+            q_len=st.q_len - 1)
+        orid = orid.at[cnt].set(rid)
+        orep = orep.at[cnt].set(jnp.asarray(replica, jnp.int32))
+        return st, orid, orep, cnt + 1
+
+    return jax.lax.while_loop(cond, body,
+                              (state, out_rid, out_rep, count))
+
+
+@jax.jit
+def refill_step(state: LiveAdmissionState, replica: jax.Array):
+    """Jitted BF-S refill of one replica.  Returns the new state plus the
+    placement buffers ``(rids, replicas, count)`` — lanes ``[0, count)``
+    are the placements, in placement order."""
+    Qcap = state.q_rid.shape[0]
+    out_rid = jnp.full((Qcap,), -1, jnp.int32)
+    out_rep = jnp.full((Qcap,), -1, jnp.int32)
+    state, out_rid, out_rep, count = _refill_replica(
+        state, replica.astype(jnp.int32), out_rid, out_rep,
+        jnp.zeros((), jnp.int32))
+    return state, (out_rid, out_rep, count)
+
+
+def _release_one(state: LiveAdmissionState, ev) -> LiveAdmissionState:
+    replica, size, live = ev
+    L = state.residual.shape[0]
+    ok = live & (replica >= 0) & (replica < L) & (size >= 0)
+    at = jnp.clip(replica, 0, L - 1)
+    ok = ok & (state.residual[at] + size <= RES)
+    return state._replace(
+        residual=jnp.where(ok, state.residual.at[at].add(size),
+                           state.residual),
+        invalid=state.invalid + (live & ~ok).astype(jnp.int32))
+
+
+@jax.jit
+def release_step(state: LiveAdmissionState, replicas: jax.Array,
+                 sizes: jax.Array, mask: jax.Array) -> LiveAdmissionState:
+    """Jitted release of a batch of completions (no refill)."""
+
+    def step(st, ev):
+        return _release_one(st, ev), None
+
+    state, _ = jax.lax.scan(
+        step, state,
+        (replicas.astype(jnp.int32), sizes.astype(jnp.int32), mask))
+    return state
+
+
+@jax.jit
+def tick_step(state: LiveAdmissionState, replicas: jax.Array,
+              sizes: jax.Array, mask: jax.Array):
+    """One fused engine tick: release every completion, then BF-S-refill
+    each replica that freed memory, in ascending replica order — exactly
+    the host engine's per-replica release+refill sequence (a refill only
+    reads its own replica's residual, so batching the releases first is
+    order-equivalent).  Returns ``(state, (rids, replicas, count))``
+    placement buffers covering ALL refills of the tick.
+    """
+    L = state.residual.shape[0]
+    Qcap = state.q_rid.shape[0]
+    replicas = replicas.astype(jnp.int32)
+    state = release_step(state, replicas, sizes, mask)
+    freed = jnp.zeros((L,), bool).at[jnp.clip(replicas, 0, L - 1)].max(
+        mask & (replicas >= 0) & (replicas < L))
+    out_rid = jnp.full((Qcap,), -1, jnp.int32)
+    out_rep = jnp.full((Qcap,), -1, jnp.int32)
+    count = jnp.zeros((), jnp.int32)
+
+    def per_replica(r, carry):
+        st, orid, orep, cnt = carry
+
+        def do(c):
+            return _refill_replica(c[0], r, c[1], c[2], c[3])
+
+        return jax.lax.cond(freed[r], do, lambda c: c,
+                            (st, orid, orep, cnt))
+
+    state, out_rid, out_rep, count = jax.lax.fori_loop(
+        0, L, per_replica, (state, out_rid, out_rep, count))
+    return state, (out_rid, out_rep, count)
+
+
+@jax.jit
+def push_front_step(state: LiveAdmissionState, rid: jax.Array,
+                    size: jax.Array) -> LiveAdmissionState:
+    """Jitted queue-head insert (the engine's slot-rejection path).  On a
+    full queue the TAIL job is dropped (head inserts are re-admissions
+    that outrank the newest arrival) and counted."""
+    Qcap = state.q_rid.shape[0]
+    tail_drop = (state.q_len >= Qcap).astype(jnp.int32)
+    return state._replace(
+        q_rid=jnp.roll(state.q_rid, 1).at[0].set(rid.astype(jnp.int32)),
+        q_size=jnp.roll(state.q_size, 1).at[0].set(size.astype(jnp.int32)),
+        q_len=jnp.minimum(state.q_len + 1, Qcap),
+        dropped=state.dropped + tail_drop)
+
+
+class LiveAdmission:
+    """Host facade over the jitted admission steps — drop-in for
+    ``AdmissionController`` in ``ServingEngine`` (``admission="live"``).
+
+    State lives on the device between calls; each method is one fused
+    dispatch, and only placement vectors (and ``queue_len``) ever return
+    to the host.  ``tick(events)`` is the per-engine-tick fast path:
+    release + all refills in a single call.
+    """
+
+    def __init__(self, num_replicas: int, Qcap: int = 512,
+                 tick_width: int | None = None):
+        self.num_replicas = num_replicas
+        self.Qcap = Qcap
+        #: fixed completion-event lane count per tick_step call (pad +
+        #: mask), so every tick reuses one compilation
+        self.tick_width = tick_width
+        self.state = init_state(num_replicas, Qcap)
+
+    # -- bookkeeping --------------------------------------------------------
+    def _check(self) -> None:
+        inv = int(self.state.invalid)
+        if inv:
+            raise ValueError(
+                f"{inv} invalid release(s) since the last sync — "
+                "double release, unknown replica, or size mismatch "
+                "(the host controller raises eagerly; the device step "
+                "counts and raises on sync)")
+
+    def queue_len(self) -> int:
+        self._check()
+        return int(self.state.q_len)
+
+    @property
+    def residual(self) -> np.ndarray:
+        return np.asarray(self.state.residual)
+
+    @property
+    def dropped(self) -> int:
+        return int(self.state.dropped)
+
+    # -- the AdmissionController surface ------------------------------------
+    def admit(self, jobs) -> list[tuple[int, int]]:
+        """BF-J over new requests; returns [(rid, replica)] placements."""
+        if not jobs:
+            return []
+        rids = np.asarray([j.rid for j in jobs], np.int32)
+        sizes = np.asarray([j.size for j in jobs], np.int32)
+        self.state, placed = admit_step(
+            self.state, rids, sizes, np.ones(len(jobs), bool))
+        placed = np.asarray(placed)
+        return [(int(rids[i]), int(placed[i]))
+                for i in range(len(jobs)) if placed[i] >= 0]
+
+    def refill(self, replica: int) -> list[tuple[int, int]]:
+        """BF-S over the device queue after a release on ``replica``."""
+        self.state, (rids, reps, count) = refill_step(
+            self.state, jnp.asarray(replica))
+        n = int(count)
+        rids = np.asarray(rids[:n])
+        return [(int(rids[i]), replica) for i in range(n)]
+
+    def release(self, replica: int, size: int) -> None:
+        """Return grid units to ``replica`` — stays on device; invariant
+        violations are counted and raised on the next sync."""
+        self.state = release_step(
+            self.state, np.asarray([replica], np.int32),
+            np.asarray([size], np.int32), np.ones(1, bool))
+
+    def push_front(self, job) -> None:
+        """Queue-head insert (slot-rejection re-admission path)."""
+        self.state = push_front_step(
+            self.state, jnp.asarray(job.rid), jnp.asarray(job.size))
+
+    # -- the fused fast path ------------------------------------------------
+    def tick(self, events: list[tuple[int, int]]) -> list[tuple[int, int]]:
+        """One engine tick: ``events`` is [(replica, size)] completions.
+        Releases all of them and BF-S-refills every freed replica in one
+        jitted call; returns [(rid, replica)] placements in the host
+        engine's order.  Pads to ``tick_width`` lanes so every tick hits
+        one compilation."""
+        width = self.tick_width or max(len(events), 1)
+        if len(events) > width:
+            raise ValueError(
+                f"{len(events)} completion events exceed tick_width="
+                f"{width}; raise tick_width (it bounds one tick's lanes)")
+        reps = np.full(width, -1, np.int32)
+        sizes = np.zeros(width, np.int32)
+        mask = np.zeros(width, bool)
+        for i, (r, s) in enumerate(events):
+            reps[i], sizes[i], mask[i] = r, s, True
+        self.state, (rids, placed_rep, count) = tick_step(
+            self.state, reps, sizes, mask)
+        n = int(count)
+        rids = np.asarray(rids[:n])
+        placed_rep = np.asarray(placed_rep[:n])
+        self._check()
+        return [(int(rids[i]), int(placed_rep[i])) for i in range(n)]

@@ -1,0 +1,192 @@
+"""Device-resident admission (serving/live.py) vs the host
+AdmissionController: placement-for-placement parity, counter semantics,
+and the ServingEngine admission="live" integration."""
+import numpy as np
+import pytest
+
+from repro.cluster.admission import AdmissionController, PendingJob
+from repro.core.quantize import RES, to_grid
+from repro.serving.live import LiveAdmission
+
+
+def _job(rid, frac):
+    return PendingJob(rid=rid, frac=frac)
+
+
+# ---------------------------------------------------------------------------
+# op-for-op parity with the host controller
+# ---------------------------------------------------------------------------
+
+def test_admit_best_fit_order_matches_host():
+    """BF-J: minimum feasible residual, lowest replica index on ties —
+    identical placement sequence to the host argmin."""
+    host, live = AdmissionController(3), LiveAdmission(3, Qcap=16)
+    jobs = [_job(0, 0.5), _job(1, 0.3), _job(2, 0.4), _job(3, 0.9),
+            _job(4, 0.2)]
+    assert host.admit(list(jobs)) == live.admit(list(jobs))
+    np.testing.assert_array_equal(host.residual, live.residual)
+    assert host.queue_len() == live.queue_len()
+
+
+def test_refill_largest_first_earliest_on_ties():
+    """BF-S: largest fitting job first; among equal sizes, the one queued
+    earliest (Python max() returns the first maximum; the device argmax
+    over FIFO-compacted lanes returns the same lane)."""
+    host, live = AdmissionController(1), LiveAdmission(1, Qcap=16)
+    # fill the single replica, then queue jobs incl. a size tie
+    fill = [_job(0, 1.0)]
+    host.admit(list(fill)), live.admit(list(fill))
+    queued = [_job(1, 0.3), _job(2, 0.5), _job(3, 0.5), _job(4, 0.2)]
+    host.admit(list(queued)), live.admit(list(queued))
+    full = int(to_grid([1.0])[0])
+    host.release(0, full)
+    live.release(0, full)
+    ph, pl = host.refill(0), live.refill(0)
+    assert ph == pl
+    # rid 2 (the EARLIER 0.5) must precede rid 3
+    rids = [r for r, _ in pl]
+    assert rids.index(2) < rids.index(3)
+    np.testing.assert_array_equal(host.residual, live.residual)
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2])
+def test_randomized_tick_parity(seed):
+    """200 randomized ticks of arrivals + completions: every placement,
+    residual and queue length identical between host and device."""
+    rng = np.random.default_rng(seed)
+    L = int(rng.integers(2, 8))
+    host, live = AdmissionController(L), LiveAdmission(L, Qcap=64,
+                                                       tick_width=16)
+    size_of, active, rid = {}, {}, 0
+    for t in range(200):
+        jobs = []
+        for _ in range(int(rng.integers(0, 4))):
+            j = _job(rid, float(rng.uniform(0.05, 0.95)))
+            size_of[rid] = j.size
+            jobs.append(j)
+            rid += 1
+        ph, pl = host.admit(list(jobs)), live.admit(list(jobs))
+        assert ph == pl, t
+        active.update(ph)
+        done = [r for r in list(active) if rng.uniform() < 0.3]
+        events = [(active.pop(r), size_of[r]) for r in done]
+        # host tick = release everything, then refill freed replicas in
+        # ascending order (order-equivalent to the engine's interleaving)
+        ph2 = []
+        for rep, size in events:
+            host.release(rep, size)
+        for rep in sorted({rep for rep, _ in events}):
+            ph2 += host.refill(rep)
+        pl2 = live.tick(events)
+        assert ph2 == pl2, t
+        active.update(pl2)
+        assert host.queue_len() == live.queue_len(), t
+        np.testing.assert_array_equal(host.residual, live.residual)
+    assert live.dropped == 0
+
+
+def test_push_front_outranks_queue_and_counts_tail_drop():
+    host, live = AdmissionController(1), LiveAdmission(1, Qcap=2)
+    fill = [_job(0, 1.0)]
+    host.admit(list(fill)), live.admit(list(fill))
+    q1, q2 = _job(1, 0.4), _job(2, 0.3)
+    host.admit([q1]), live.admit([q1])
+    host.push_front(q2), live.push_front(q2)
+    assert host.queue[0].rid == 2
+    assert int(np.asarray(live.state.q_rid[0])) == 2
+    assert host.queue_len() == live.queue_len() == 2
+    # a head insert on a FULL device queue drops the tail (and counts it)
+    live.push_front(_job(3, 0.2))
+    assert live.queue_len() == 2 and live.dropped == 1
+    assert int(np.asarray(live.state.q_rid[0])) == 3
+
+
+def test_queue_overflow_counts_dropped():
+    live = LiveAdmission(1, Qcap=2)
+    live.admit([_job(0, 1.0)])            # occupy the replica
+    placed = live.admit([_job(1, 0.5), _job(2, 0.5), _job(3, 0.5)])
+    assert placed == []
+    assert live.queue_len() == 2 and live.dropped == 1
+
+
+def test_invalid_release_counted_then_raised_on_sync():
+    live = LiveAdmission(2, Qcap=4)
+    live.release(0, RES + 1)              # over-release
+    live.release(5, 10)                   # unknown replica
+    live.release(1, -3)                   # negative size
+    with pytest.raises(ValueError, match="3 invalid release"):
+        live.queue_len()
+    # the host controller raises eagerly on the same inputs
+    host = AdmissionController(2)
+    with pytest.raises(ValueError, match="exceeds capacity"):
+        host.release(0, RES + 1)
+    with pytest.raises(ValueError, match="unknown replica"):
+        host.release(5, 10)
+    with pytest.raises(ValueError, match="negative size"):
+        host.release(1, -3)
+
+
+def test_tick_width_guard():
+    live = LiveAdmission(2, Qcap=4, tick_width=2)
+    with pytest.raises(ValueError, match="tick_width"):
+        live.tick([(0, 1), (0, 1), (1, 1)])
+
+
+# ---------------------------------------------------------------------------
+# ServingEngine integration
+# ---------------------------------------------------------------------------
+
+def _tiny_engine(admission):
+    import jax
+    from repro.configs import get_smoke_config
+    from repro.models import model as M
+    from repro.serving.engine import ServingEngine
+
+    cfg = get_smoke_config("llama3-8b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    return ServingEngine(cfg, params, num_replicas=2, b_slots=2,
+                         c_max=32, admission=admission)
+
+
+def test_serving_engine_live_matches_host():
+    """The full engine under admission="live" reproduces the host path:
+    same completions, same admission/queue trajectories."""
+    from repro.serving.engine import Request
+
+    def drive(admission):
+        eng = _tiny_engine(admission)
+        rng = np.random.default_rng(0)
+        rid = 0
+        for step in range(12):
+            reqs = []
+            for _ in range(int(rng.integers(0, 3))):
+                prompt = np.arange(1 + int(rng.integers(0, 4)),
+                                   dtype=np.int32)
+                reqs.append(Request(rid=rid, prompt=prompt,
+                                    max_new=int(rng.integers(1, 6))))
+                rid += 1
+            eng.submit(reqs)
+            eng.step()
+        eng.run(max_steps=64)
+        return eng
+
+    host_eng = drive("host")
+    live_eng = drive("live")
+    assert [r.rid for r in host_eng.completed] == \
+        [r.rid for r in live_eng.completed]
+    assert [(r.replica, r.slot) for r in host_eng.completed] == \
+        [(r.replica, r.slot) for r in live_eng.completed]
+    assert host_eng.stats["queue_len"] == live_eng.stats["queue_len"]
+    assert host_eng.stats["admitted"] == live_eng.stats["admitted"]
+    np.testing.assert_array_equal(host_eng.admission.residual,
+                                  live_eng.admission.residual)
+
+
+def test_serving_engine_rejects_unknown_admission():
+    with pytest.raises(ValueError, match="unknown admission"):
+        _tiny_engine("gpu")
+
+
+def test_cluster_alias():
+    from repro.serving.engine import Cluster, ServingEngine
+    assert Cluster is ServingEngine

@@ -1,11 +1,14 @@
-"""core.trace.load_trace_csv: Google-2019/Alibaba-style CSV ingestion into
-Trace, on the checked-in 50-row fixture."""
+"""core.trace loaders: one-shot ``load_trace_csv`` and the streaming
+``iter_trace_csv`` (one shared row-parsing core), on the checked-in 50-row
+and corrupted fixtures, plus the Google-2019 machine-events adapter."""
 import os
 
 import numpy as np
 import pytest
 
 from repro.core import Trace, load_trace_csv
+from repro.core.trace import (iter_trace_csv, load_machine_events_csv,
+                              scan_trace_maxima)
 from repro.core.engine import run_policy_streams, streams_from_trace
 
 FIXTURE = os.path.join(os.path.dirname(__file__), "data",
@@ -141,3 +144,139 @@ def test_loader_strict_names_first_bad_row(tmp_path, bad, why):
     with pytest.warns(UserWarning, match="skipped 1 malformed"):
         trace = load_trace_csv(p, normalize=False)
     assert trace.skipped == 1 and len(trace) == 2
+    # shared row-parsing core: the streaming reader rejects the exact
+    # same row, additionally naming the chunk it fell in
+    with pytest.raises(ValueError,
+                       match=rf"strict\.csv:3 \(chunk 1\): bad row \({why}"):
+        list(iter_trace_csv(p, chunk_rows=1, strict=True,
+                            normalize=False))
+
+
+# ---------------------------------------------------------------------------
+# iter_trace_csv: the streaming reader
+# ---------------------------------------------------------------------------
+
+def _concat(chunks):
+    return Trace(
+        np.concatenate([c.arrival_slots for c in chunks]),
+        np.concatenate([c.cpu for c in chunks]),
+        np.concatenate([c.mem for c in chunks]),
+        np.concatenate([c.durations for c in chunks]),
+        skipped=sum(c.skipped for c in chunks))
+
+
+@pytest.mark.parametrize("chunk_rows", [1, 7, 50, 200])
+def test_iter_matches_one_shot_via_two_pass_maxima(chunk_rows):
+    """The two-pass recipe (scan_trace_maxima -> iter_trace_csv) is
+    bit-identical to load_trace_csv(normalize=True), any chunking."""
+    one = load_trace_csv(FIXTURE)
+    cpu_cap, mem_cap = scan_trace_maxima(FIXTURE)
+    chunks = list(iter_trace_csv(FIXTURE, chunk_rows=chunk_rows,
+                                 cpu_capacity=cpu_cap,
+                                 mem_capacity=mem_cap))
+    assert all(len(c) <= chunk_rows for c in chunks)
+    cat = _concat(chunks)
+    assert len(cat) == len(one) == 50
+    for f in ("arrival_slots", "cpu", "mem", "durations"):
+        np.testing.assert_array_equal(getattr(cat, f), getattr(one, f))
+
+
+def test_iter_corrupt_fixture_same_accounting_as_one_shot():
+    """The corrupt fixture exercises BOTH readers through the one shared
+    parsing core: same rows kept, same rows skipped, same summary."""
+    with pytest.warns(UserWarning, match="skipped 6 malformed"):
+        one = load_trace_csv(CORRUPT, normalize=False)
+    with pytest.warns(UserWarning, match="skipped 6 malformed"):
+        chunks = list(iter_trace_csv(CORRUPT, chunk_rows=3,
+                                     normalize=False))
+    cat = _concat(chunks)
+    assert cat.skipped == one.skipped == 6
+    assert len(cat) == len(one) == 10
+    for f in ("arrival_slots", "cpu", "mem", "durations"):
+        np.testing.assert_array_equal(getattr(cat, f), getattr(one, f))
+
+
+def test_iter_constant_memory_contract_and_errors(tmp_path):
+    # fractions <= 1 stream fine without capacities ...
+    p = tmp_path / "frac.csv"
+    p.write_text("submit_time,cpu,mem,duration\n"
+                 "0.0,0.25,0.5,10\n3.0,0.5,0.125,5\n")
+    chunks = list(iter_trace_csv(p, chunk_rows=1))
+    assert len(chunks) == 2 and len(chunks[0]) == 1
+    # ... but absolute units need explicit divisors: a streaming reader
+    # cannot see the global column maxima
+    with pytest.raises(ValueError, match="cannot normalize by global"):
+        list(iter_trace_csv(FIXTURE, chunk_rows=10))
+    with pytest.raises(ValueError, match="passed together"):
+        list(iter_trace_csv(p, chunk_rows=1, cpu_capacity=2.0))
+    with pytest.raises(ValueError, match="chunk_rows"):
+        list(iter_trace_csv(p, chunk_rows=0))
+    p2 = tmp_path / "norows.csv"
+    p2.write_text("submit_time,cpu,mem,duration\n")
+    with pytest.raises(ValueError, match="no usable rows"):
+        list(iter_trace_csv(p2, chunk_rows=1))
+
+
+# ---------------------------------------------------------------------------
+# Google-2019 machine-events adapter
+# ---------------------------------------------------------------------------
+
+_MACHINE_CSV = ("time,machine_id,type,cpus,memory\n"
+                "0,70,1,16,64\n"          # ADD the big machine
+                "0,71,1,8,32\n"           # ADD a half-size one
+                "50,71,2,,\n"             # REMOVE 71
+                "80,71,1,8,32\n"          # it comes back
+                "90,70,3,16,128\n")       # UPDATE: 70 grows memory
+
+
+def test_machine_events_capacities_and_schedule(tmp_path):
+    p = tmp_path / "machines.csv"
+    p.write_text(_MACHINE_CSV)
+    me = load_machine_events_csv(p)
+    assert me.num_servers == 2
+    np.testing.assert_array_equal(me.machine_ids, [70, 71])
+    # per-machine capacity = max over its ADD/UPDATE events
+    np.testing.assert_array_equal(me.cpu_capacity, [16.0, 8.0])
+    np.testing.assert_array_equal(me.mem_capacity, [128.0, 32.0])
+    assert me.events == [(0, 0, True), (0, 1, True), (50, 1, False),
+                         (80, 1, True), (90, 0, True)]
+    # the events feed the engines' fault plane directly
+    from repro.core.engine import fault_plane_from_events
+    up = np.asarray(fault_plane_from_events(me.events, 100,
+                                            me.num_servers))
+    assert up[49, 1] and not up[50, 1] and up[80, 1]
+    assert up[:, 0].all()
+
+
+def test_machine_events_drive_iter_normalization(tmp_path):
+    """machine_events= normalizes by FLEET max capacity: a full request of
+    the biggest machine maps to 1.0."""
+    p = tmp_path / "machines.csv"
+    p.write_text(_MACHINE_CSV)
+    me = load_machine_events_csv(p)
+    t = tmp_path / "trace.csv"
+    t.write_text("submit_time,cpu,mem,duration\n"
+                 "0.0,16,128,10\n"          # the whole big machine
+                 "1.0,4,32,5\n")
+    chunks = list(iter_trace_csv(t, chunk_rows=10, machine_events=me))
+    cat = _concat(chunks)
+    np.testing.assert_allclose(cat.cpu, [1.0, 0.25])
+    np.testing.assert_allclose(cat.mem, [1.0, 0.25])
+    with pytest.raises(ValueError, match="not both"):
+        list(iter_trace_csv(t, chunk_rows=1, machine_events=me,
+                            cpu_capacity=1.0, mem_capacity=1.0))
+
+
+def test_machine_events_error_paths(tmp_path):
+    p = tmp_path / "bad_machines.csv"
+    p.write_text("time,machine_id,type,cpus,memory\n"
+                 "0,1,9,4,8\n")             # unknown event type
+    with pytest.raises(ValueError, match="no usable rows"):
+        load_machine_events_csv(p)
+    with pytest.raises(ValueError, match="unknown event type 9"):
+        load_machine_events_csv(p, strict=True)
+    p2 = tmp_path / "removed_only.csv"
+    p2.write_text("time,machine_id,type,cpus,memory\n"
+                  "0,5,2,,\n")
+    with pytest.raises(ValueError, match="only ever REMOVE"):
+        load_machine_events_csv(p2)
