@@ -25,15 +25,16 @@ from common import SMOKE, row, timed, timed_best, timed_interleaved
 import jax
 import jax.numpy as jnp
 
-from repro.core import (BFJS, ServiceModel, Uniform, VQS, simulate,
+from repro.core import (BFJS, ServiceModel, Uniform, VQS, VQSBF, simulate,
                         rho_star_discrete)
 from repro.core.engine import (Workload, best_fit_place, make_streams,
                                monte_carlo_bfjs, monte_carlo_policy,
                                run_bfjs, run_bfjs_mr_streams,
-                               run_vqs_streams)
+                               run_vqs_bf_streams, run_vqs_streams)
 from repro.core.engine.bfjs_mr import _run_bfjs_mr_reference
 from repro.core.engine.tuning import apply_tuned
 from repro.core.engine.vqs import _run_vqs_reference_streams
+from repro.core.engine.vqs_bf import _run_vqs_bf_reference_streams
 from repro.kernels.best_fit.best_fit import best_fit_pallas
 from repro.kernels.bfjs.ops import bfjs_simulate
 
@@ -154,6 +155,65 @@ def _bench_vqs_engines():
                 & (scan_res.dropped == ref_res.dropped).all())
     for name, label in (("scan", "micro/vqs_slot"),
                         ("ref", "micro/vqs_slot_ref")):
+        us = best[name]
+        meta = (f"engine={'scan' if name == 'scan' else 'reference'};J={J};"
+                f"slots_per_sec={T / (us / 1e6):.0f};"
+                f"speedup_vs_numpy={us_np / us:.2f}x")
+        if name == "scan":
+            meta += (f";bitmatch_vs_ref={match};"
+                     f"trunc={int(scan_res.truncated)}")
+        row(label, us / T, meta)
+
+
+def _bench_vqs_bf_engines():
+    """VQS-BF: event-driven numpy engine vs the scan + reference jax
+    engines, interleaved exactly like ``_bench_vqs_engines`` — the tracked
+    ``micro/vqsbf_slot`` vs ``micro/vqsbf_slot_numpy`` pair.
+
+    The scan trajectory is asserted bit-identical to the jax reference
+    oracle on shared streams in-process (bitmatch_vs_ref=1, trunc=0); the
+    numpy engine runs its own RNG realization of the same workload, so its
+    row is a throughput baseline, not a trajectory twin.  The work bound
+    is sized to the burst (one placement per step), not to A_max.
+    """
+    J = 4
+    if SMOKE:
+        L, K, Qcap, A_max, T, lam = 4, 6, 256, 6, 200, 1.5
+    else:
+        L, K, Qcap, A_max, T, lam = 16, 24, 8192, 8, 5_000, 1.5
+    mu = 0.01
+    streams = make_streams(jax.random.PRNGKey(0), lam, mu, sampler,
+                           L=L, K=K, A_max=A_max, horizon=T)
+    kw = dict(J=J, L=L, K=K, Qcap=Qcap, A_max=A_max)
+
+    def run_numpy():
+        return simulate(VQSBF(J=J), L=L, lam=lam, dist=Uniform(0.05, 0.5),
+                        service=ServiceModel("geometric", 1.0 / mu),
+                        horizon=T, seed=0)
+
+    def run_scan():
+        return run_vqs_bf_streams(streams, work_steps=64,
+                                  **kw).queue_len.block_until_ready()
+
+    def run_ref():
+        return _run_vqs_bf_reference_streams(
+            streams, **kw).queue_len.block_until_ready()
+
+    best = timed_interleaved(
+        {"numpy": run_numpy, "scan": run_scan, "ref": run_ref})
+
+    us_np = best["numpy"]
+    row("micro/vqsbf_slot_numpy", us_np / T,
+        f"engine=numpy-event-driven;J={J};L={L};"
+        f"slots_per_sec={T / (us_np / 1e6):.0f}")
+    scan_res = run_vqs_bf_streams(streams, work_steps=64, **kw)
+    ref_res = _run_vqs_bf_reference_streams(streams, **kw)
+    match = int((scan_res.queue_len == ref_res.queue_len).all()
+                & (scan_res.departed == ref_res.departed).all()
+                & (scan_res.occupancy == ref_res.occupancy).all()
+                & (scan_res.dropped == ref_res.dropped).all())
+    for name, label in (("scan", "micro/vqsbf_slot"),
+                        ("ref", "micro/vqsbf_slot_ref")):
         us = best[name]
         meta = (f"engine={'scan' if name == 'scan' else 'reference'};J={J};"
                 f"slots_per_sec={T / (us / 1e6):.0f};"
@@ -468,6 +528,7 @@ def main():
     _bench_ensemble()
     _bench_pallas_bfjs()
     _bench_vqs_engines()
+    _bench_vqs_bf_engines()
     _bench_vqs_ensemble()
     _bench_pallas_vqs()
     _bench_mr_engines()

@@ -400,6 +400,11 @@ def main():
     _mc_ensemble_throughput("bfjs-mr", workload=_mr_workload(),
                             engines=("reference", "scan", "pallas"),
                             work_steps=24)
+    # VQS-BF (Theorem 4): one placement per work step, so the bound is
+    # sized to the burst; trunc counts feed the same exit-code gate
+    _mc_ensemble_throughput("vqs-bf", Qcap=2048, J=3,
+                            engines=("reference", "scan", "pallas"),
+                            work_steps=48)
     _faulted_mc_throughput()
     _streaming_mc_throughput()
     # mesh-sharded scaling + autotuned-vs-default pairs (both bit-match

@@ -8,10 +8,11 @@ traffic scalings through
   * the event-driven numpy engine (BF-J/S and VQS-BF), and
   * the accelerator engine stack: the trace is packed into ``SchedStreams``
     (``streams_from_trace``) and replayed through
-    ``run_policy_streams(..., policy="vqs", engine="scan")`` — the same
-    fixed-shape engine that runs the Monte-Carlo stability studies, now
-    driven by real-workload arrivals.  ``--check`` re-runs the numpy VQS
-    engine and asserts the two queue trajectories are bit-identical.
+    ``run_policy_streams(..., policy="vqs"|"vqs-bf", engine="scan")`` —
+    the same fixed-shape engines that run the Monte-Carlo stability
+    studies, now driven by real-workload arrivals.  ``--check`` re-runs
+    the numpy engines and asserts the queue trajectories are
+    bit-identical.
 
 The same trace also replays UNCOLLAPSED: ``streams_from_trace(trace,
 collapse=False)`` keeps the (cpu, mem) vectors and drives
@@ -90,6 +91,35 @@ def replay_vqs_jax(scaled, sizes, L, horizon, check=False, chunk=0):
         assert row["trunc"] == 0 and row["dropped"] == 0, row
         assert (qlen == ref.queue_lens).all(), \
             "scan engine diverged from the event-driven VQS engine"
+        row["bitmatch"] = 1
+    return row
+
+
+def replay_vqs_bf_jax(scaled, sizes, L, horizon, check=False, chunk=0):
+    """Replay through the VQS-BF scan engine (paper Section VI — the
+    policy with the best queue tails, formerly event-driven-only here).
+    One placement per work step, so the bound is sized to the burst."""
+    streams = streams_from_trace(scaled.arrival_slots, sizes,
+                                 scaled.durations, horizon=horizon)
+    res = _run(streams, chunk, policy="vqs-bf", engine="scan",
+               J=J, L=L, K=K_SLOTS, Qcap=1 << 15,
+               A_max=int(streams.sizes.shape[1]), work_steps=64)
+    qlen = np.asarray(res.queue_len)
+    row = {
+        "mean_Q": float(qlen.mean()),
+        "util": float(np.asarray(res.occupancy).mean()) / L,
+        "done": int(res.departed[-1]),
+        "trunc": int(res.truncated),
+        "dropped": int(res.dropped),
+    }
+    if check:
+        ref = simulate_trace(VQSBF(J=J), L=L,
+                             arrival_slots=scaled.arrival_slots,
+                             sizes=sizes, durations=scaled.durations,
+                             horizon=horizon, seed=1, record_every=1)
+        assert row["trunc"] == 0 and row["dropped"] == 0, row
+        assert (qlen == ref.queue_lens).all(), \
+            "scan engine diverged from the event-driven VQS-BF engine"
         row["bitmatch"] = 1
     return row
 
@@ -225,6 +255,13 @@ def main():
         extra = " bitmatch=1" if args.check else \
             f" trunc={row['trunc']} dropped={row['dropped']}"
         tag = "vqs[stream]" if args.chunk else "vqs[scan]"
+        print(f"{scaling:>8} {tag:>12} {row['mean_Q']:>9.1f} "
+              f"{row['util']:>6.3f} {row['done']:>8}{extra}")
+        row = replay_vqs_bf_jax(scaled, sizes, args.servers, h,
+                                check=args.check, chunk=args.chunk)
+        extra = " bitmatch=1" if args.check else \
+            f" trunc={row['trunc']} dropped={row['dropped']}"
+        tag = "vqsbf[strm]" if args.chunk else "vqsbf[scan]"
         print(f"{scaling:>8} {tag:>12} {row['mean_Q']:>9.1f} "
               f"{row['util']:>6.3f} {row['done']:>8}{extra}")
         row = replay_mr_jax(scaled, args.servers, h, check=args.check,

@@ -15,6 +15,9 @@ branch-free programs that run ON the accelerator:
     Tetris alignment score);
   * ``bfjs``     — the single-resource BF-J/S engines (PR 1);
   * ``vqs``      — the VQS engines (paper Section V);
+  * ``vqs_bf``   — the VQS-BF engines (paper Section VI — VQS throughput
+    with BF-like delay via largest-fit-first bucketed rings),
+    ``policy="vqs-bf"``;
   * ``bfjs_mr``  — the multi-resource Tetris-alignment BF-J/S engines
     (paper Section VIII), ``policy="bfjs-mr"``;
   * ``api``      — the policy registry behind ``run_policy(workload, ...)``
@@ -60,6 +63,8 @@ from .streams import (BFJSStreams, INF_SLOT, PolicyResult, SchedStreams,
                       make_streams, resolve_work_steps, streams_from_trace,
                       with_fault_plane)
 from .vqs import (monte_carlo_vqs, run_vqs, run_vqs_streams, run_vqs_trace)
+from .vqs_bf import (monte_carlo_vqs_bf, run_vqs_bf, run_vqs_bf_streams,
+                     run_vqs_bf_trace)
 from .workload import Workload
 
 __all__ = [
@@ -80,5 +85,6 @@ __all__ = [
     "INF_SLOT", "PolicyResult", "SchedStreams", "fault_plane_from_events",
     "make_fault_plane", "make_streams", "resolve_work_steps",
     "streams_from_trace", "with_fault_plane", "monte_carlo_vqs",
-    "run_vqs", "run_vqs_streams", "run_vqs_trace", "Workload",
+    "run_vqs", "run_vqs_streams", "run_vqs_trace", "monte_carlo_vqs_bf",
+    "run_vqs_bf", "run_vqs_bf_streams", "run_vqs_bf_trace", "Workload",
 ]

@@ -43,6 +43,8 @@ from .bfjs_mr import (monte_carlo_bfjs_mr_workload, run_bfjs_mr_trace,
                       run_bfjs_mr_workload)
 from .streams import PolicyResult, SchedStreams
 from .vqs import monte_carlo_vqs_workload, run_vqs_trace, run_vqs_workload
+from .vqs_bf import (monte_carlo_vqs_bf_workload, run_vqs_bf_trace,
+                     run_vqs_bf_workload)
 from .workload import Workload
 
 ENGINES = ("reference", "scan", "pallas")
@@ -111,6 +113,13 @@ register_policy(PolicySpec(
     run=run_bfjs_mr_workload,
     run_streams=run_bfjs_mr_trace,
     monte_carlo=monte_carlo_bfjs_mr_workload,
+))
+
+register_policy(PolicySpec(
+    name="vqs-bf",
+    run=run_vqs_bf_workload,
+    run_streams=run_vqs_bf_trace,
+    monte_carlo=monte_carlo_vqs_bf_workload,
 ))
 
 

@@ -66,10 +66,17 @@ def _bfjs_mr_stateful(streams, state, config):
                                **config)
 
 
+def _vqs_bf_stateful(streams, state, config):
+    from .vqs_bf import run_vqs_bf_streams
+    return run_vqs_bf_streams(streams, state=state, return_state=True,
+                              **config)
+
+
 _STATEFUL: dict[str, Callable] = {
     "bfjs": _bfjs_stateful,
     "vqs": _vqs_stateful,
     "bfjs-mr": _bfjs_mr_stateful,
+    "vqs-bf": _vqs_bf_stateful,
 }
 
 

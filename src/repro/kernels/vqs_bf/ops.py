@@ -1,0 +1,45 @@
+"""Public entry point: Pallas on TPU, interpret-mode elsewhere."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.core.engine.streams import PolicyResult, SchedStreams, \
+    resolve_work_steps
+from repro.kernels.common import interpret_default
+
+from .ref import vqs_bf_ref
+from .vqs_bf import vqs_bf_pallas
+
+
+def vqs_bf_scratch_bytes(J: int, L: int, K: int, Qcap: int) -> int:
+    """Estimated per-core VMEM scratch of the fused VQS-BF kernel: three
+    (L,K) planes, THREE (2J,Qcap) bucket planes (effective size, duration,
+    sequence stamp — one more than VQS, the price of largest-fit-first
+    FIFO tie-breaking), (2,2J) counts block, (5,L) per-server block,
+    (L,2J) subscription block and a (1,2) scalar block — all int32.
+    Checked against ``kernels.common.vmem_budget_bytes`` by the engine
+    dispatch before launching (DESIGN.md §8/§13)."""
+    nvq = 2 * J
+    return 4 * (3 * L * K + 3 * nvq * Qcap + 2 * nvq + 5 * L + L * nvq + 2)
+
+
+def vqs_bf_simulate(streams: SchedStreams, J: int, L: int, K: int,
+                    Qcap: int, A_max: int, work_steps: int | None = None,
+                    window: int | None = None,
+                    use_pallas: bool = True) -> PolicyResult:
+    """Fused-kernel Monte-Carlo VQS-BF: one grid cell per ensemble member.
+
+    streams holds (G, ...)-shaped pre-generated randomness
+    (engine.streams.make_streams vmapped over the ensemble keys)."""
+    work_steps = resolve_work_steps(work_steps, A_max)
+    if not use_pallas:
+        return vqs_bf_ref(streams.n, streams.sizes, streams.durs, J=J, L=L,
+                          K=K, Qcap=Qcap, A_max=A_max,
+                          work_steps=work_steps)
+    qlen, occ, ndep, dropped, trunc = vqs_bf_pallas(
+        streams.n, streams.sizes, streams.durs, J=J, L=L, K=K, Qcap=Qcap,
+        A_max=A_max, work_steps=work_steps, window=window,
+        interpret=interpret_default())
+    z = jnp.zeros_like(dropped)  # kernels simulate fault-free clusters
+    return PolicyResult(qlen, occ, jnp.cumsum(ndep, axis=1), dropped, trunc,
+                        z, z, z)

@@ -1,0 +1,27 @@
+"""Pure-jnp oracle for the fused VQS-BF slot-step kernel.
+
+The oracle IS the production scan engine (engine.vqs_bf.run_vqs_bf_streams)
+vmapped over the ensemble dimension — the kernel must reproduce its
+trajectories exactly (and that engine is itself equivalence-tested against
+the nested-loop reference engine and, on trace streams, the event-driven
+numpy engine)."""
+from __future__ import annotations
+
+import jax
+
+from repro.core.engine.streams import PolicyResult, SchedStreams
+from repro.core.engine.vqs_bf import run_vqs_bf_streams
+
+
+def vqs_bf_ref(n, sizes, durs, J: int, L: int, K: int, Qcap: int,
+               A_max: int,
+               work_steps: int | None = None) -> PolicyResult:
+    """n (G, T) int32, sizes (G, T, A_max) f32, durs (G, T, D) int32 ->
+    PolicyResult with (G, ...)-shaped fields."""
+
+    def one(n1, s1, d1):
+        return run_vqs_bf_streams(SchedStreams(n1, s1, d1), J=J, L=L, K=K,
+                                  Qcap=Qcap, A_max=A_max,
+                                  work_steps=work_steps)
+
+    return jax.vmap(one)(n, sizes, durs)

@@ -1,0 +1,376 @@
+"""Pallas TPU kernel: fused VQS-BF slot-step engine (DESIGN.md §13).
+
+One program instance simulates one independent cluster of the Monte-Carlo
+ensemble: the grid is ``(G, NW)`` — ensemble member x time window — and the
+whole mutable simulation state (per-slot job sizes / departure slots / VQ
+types, the 2J size-bucketed rings WITH their sequence-stamp plane, the
+per-server ``(k_1, j*, k_{j*})`` configurations, the ``_empty`` membership
+and the subscription matrix) lives in VMEM scratch that persists across the
+sequentially-executed time windows of a member.
+
+The serve pass is the branch-free one-placement-per-step work list of
+``repro.core.engine.vqs_bf.run_vqs_bf_streams`` — staged (i)/(ii)/(iii)
+largest-fit pops from the bucketed rings, shared max-weight renewal,
+vectorized advance-past writes — transcribed with broadcasted-iota masks
+and masked reductions in place of every dynamic index ("pop the largest
+job <= residual" is a three-reduction lexicographic argmax over the
+``(2J, Qcap)`` planes), unrolled to the fixed ``work_steps + 1`` bound (the
+kernel pays the bound; the host scan engine early-exits — same trajectory).
+Each slot closes with the arrival-side BF-J pass: an unrolled ``A_max``
+loop offering every still-queued arrival (identified by its surviving
+sequence stamp) to the tightest feasible server.
+
+Trajectories are bit-compatible with the scan engine (and, through it,
+with the event-driven ``core/vqs_bf.py`` engine on trace streams) whenever
+``truncated`` stays 0 — asserted by the interpret-mode parity tests in
+tests/test_vqs_bf_engine.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+from repro.core.quantize import RES
+from repro.kernels.common import resolve_windows
+
+INF_SLOT = jnp.iinfo(jnp.int32).max
+INF32 = jnp.iinfo(jnp.int32).max
+CAP = RES
+
+
+def _vqs_bf_kernel(n_ref, sizes_ref, durs_ref, confs_ref,
+                   qlen_ref, occ_ref, ndep_ref, dropped_ref, trunc_ref,
+                   srv_ref, dep_ref, vqof_ref, reff_ref, rdur_ref, rseq_ref,
+                   meta_ref, cfg_ref, want_ref, acc_ref,
+                   *, J, L, K, Qcap, A_max, W, TW):
+    w = pl.program_id(1)
+    nvq = 2 * J
+    C = confs_ref.shape[0]
+
+    @pl.when(w == 0)
+    def _init():
+        srv_ref[...] = jnp.zeros((L, K), jnp.int32)
+        dep_ref[...] = jnp.full((L, K), INF_SLOT, jnp.int32)
+        vqof_ref[...] = jnp.full((L, K), -1, jnp.int32)
+        reff_ref[...] = jnp.zeros((nvq, Qcap), jnp.int32)
+        rdur_ref[...] = jnp.ones((nvq, Qcap), jnp.int32)
+        rseq_ref[...] = jnp.zeros((nvq, Qcap), jnp.int32)
+        meta_ref[...] = jnp.zeros((2, nvq), jnp.int32)  # qcnt row, seq_ctr
+        cfg = jnp.zeros((5, L), jnp.int32)
+        cfg = cfg.at[1].set(-1)      # cfg_js = -1 (no active configuration)
+        cfg = cfg.at[4].set(1)       # in_empty: all servers start empty
+        cfg_ref[...] = cfg
+        want_ref[...] = jnp.zeros((L, nvq), jnp.int32)
+        acc_ref[...] = jnp.zeros((1, 2), jnp.int32)
+
+    l_col = jax.lax.broadcasted_iota(jnp.int32, (L, 1), 0)
+    j_row = jax.lax.broadcasted_iota(jnp.int32, (1, nvq), 1)
+    q_jq = jax.lax.broadcasted_iota(jnp.int32, (nvq, Qcap), 1)
+    j_jq = jax.lax.broadcasted_iota(jnp.int32, (nvq, Qcap), 0)
+    k_row = jax.lax.broadcasted_iota(jnp.int32, (1, K), 1)
+    c_col = jax.lax.broadcasted_iota(jnp.int32, (C, 1), 0)
+    c_flat = jax.lax.broadcasted_iota(jnp.int32, (C, nvq), 0)
+    confs = confs_ref[...]
+
+    def slot_step(tt, carry):
+        dropped, trunc = carry
+        t = w * TW + tt
+
+        # 1. departures
+        dep = dep_ref[...]
+        srv = srv_ref[...]
+        vqof = vqof_ref[...]
+        leaving = dep == t
+        freed = leaving.any(axis=1, keepdims=True)            # (L, 1)
+        n_dep = leaving.sum()
+        srv = jnp.where(leaving, 0, srv)
+        vqof = jnp.where(leaving, -1, vqof)
+        srv_ref[...] = srv
+        vqof_ref[...] = vqof
+        dep_ref[...] = jnp.where(leaving, INF_SLOT, dep)
+        empty_now = (srv > 0).sum(axis=1, keepdims=True) == 0  # (L, 1)
+
+        # 2. arrivals: classify on the grid, push to first-empty bucket
+        # slots with fresh sequence stamps (lane order == push order)
+        n_t = n_ref[0, tt]
+        meta = meta_ref[...]
+        qcnt = meta[0:1]                                       # (1, nvq)
+        seq_ctr = meta[1, 0]
+        reff = reff_ref[...]
+        rdur = rdur_ref[...]
+        rseq = rseq_ref[...]
+        arrived = jnp.zeros((1, nvq), bool)
+        lanes = []
+        for a in range(A_max):
+            valid = a < n_t
+            g = jnp.maximum(jnp.round(sizes_ref[0, tt, a] * RES),
+                            1.0).astype(jnp.int32)
+            m_h = jnp.int32(0)
+            for kk in range(1, J + 1):
+                m_h = m_h + (g <= (RES >> kk)).astype(jnp.int32)
+            m_h = jnp.minimum(m_h, J - 1)
+            upper = jnp.right_shift(jnp.int32(RES), m_h)
+            vq_a = jnp.where(3 * g > 2 * upper, 2 * m_h, 2 * m_h + 1)
+            vq_a = jnp.where(g <= (RES >> J), nvq - 1, vq_a)
+            eff_a = jnp.where(vq_a == nvq - 1, jnp.maximum(g, RES >> J), g)
+            dur_a = durs_ref[0, tt, durs_ref.shape[-1] - A_max + a]
+            seq_a = seq_ctr + a
+            emp_row = (j_jq == vq_a) & (reff == 0)             # (nvq, Qcap)
+            pos = jnp.min(jnp.where(emp_row, q_jq, Qcap))
+            land = valid & (pos < Qcap)
+            wm = (j_jq == vq_a) & (q_jq == pos) & land
+            reff = jnp.where(wm, eff_a, reff)
+            rdur = jnp.where(wm, dur_a, rdur)
+            rseq = jnp.where(wm, seq_a, rseq)
+            oh = j_row == vq_a                                 # (1, nvq)
+            qcnt = qcnt + jnp.where(oh & land, 1, 0)
+            dropped = dropped + jnp.where(valid & ~land, 1, 0)
+            arrived = arrived | (oh & valid)
+            lanes.append((vq_a, pos, seq_a, eff_a, dur_a, land))
+        reff_ref[...] = reff
+        rdur_ref[...] = rdur
+        rseq_ref[...] = rseq
+        meta = meta.at[0].set(qcnt[0])
+        meta_ref[...] = meta.at[1, 0].set(seq_ctr + A_max)
+
+        # 3. visit set
+        want = want_ref[...] != 0                              # (L, nvq)
+        woken = (want & arrived).any(axis=1, keepdims=True)
+        want_ref[...] = (want & ~arrived).astype(jnp.int32)
+        cfgm = cfg_ref[...]
+        has_cfg0 = (cfgm[3:4] != 0).T                          # (L, 1)
+        in_empty0 = (cfgm[4:5] != 0).T
+        visit = freed | woken | (in_empty0 & (qcnt.sum() > 0))
+        renew_needed = visit & (empty_now | ~has_cfg0)
+
+        # 4. work list: W+1 one-placement steps (fixed unroll — each
+        # iteration is the scan engine's masked-select step verbatim)
+        def work(_, wcarry):
+            touched, advanced, trunc = wcarry
+            qcnt = meta_ref[0:1, :]
+            reff = reff_ref[...]
+            rdur = rdur_ref[...]
+            rseq = rseq_ref[...]
+            srv = srv_ref[...]
+            vqof = vqof_ref[...]
+            cfgm = cfg_ref[...]
+            cfg_k1 = (cfgm[0:1] != 0).T                        # (L, 1)
+            cfg_js = cfgm[1:2].T
+            cfg_ks = cfgm[2:3].T
+            has_cfg = (cfgm[3:4] != 0).T
+            in_empty = (cfgm[4:5] != 0).T
+            want = want_ref[...] != 0
+
+            pending = visit & ~advanced
+            hx = qcnt > 0
+            occ_ring = reff > 0
+            row_min = jnp.min(jnp.where(occ_ring, reff, INF32),
+                              axis=1)[None, :]                 # (1, nvq)
+            glob_min = row_min.min()
+
+            # shared max-weight renewal candidate (first-index argmax)
+            w_c = jnp.sum(confs * qcnt, axis=1)                # (C,)
+            ci = jnp.min(jnp.where(w_c == w_c.max(), c_flat[:, 0], C))
+            row = jnp.sum(jnp.where(c_col == ci, confs, 0),
+                          axis=0)[None, :]                     # (1, nvq)
+            r_k1 = jnp.sum(jnp.where(j_row == 1, row, 0)) > 0
+            r_js = jnp.min(jnp.where((row > 0) & (j_row != 1), j_row, nvq))
+            r_js = jnp.where(r_js == nvq, -1, r_js)
+            r_ks = jnp.sum(jnp.where(j_row == jnp.maximum(r_js, 0), row, 0))
+            r_ks = jnp.where(r_js >= 0, r_ks, 0)
+            ren = renew_needed & ~touched
+            eff_k1 = jnp.where(ren, r_k1, cfg_k1)
+            eff_js = jnp.where(ren, r_js, cfg_js)              # (L, 1)
+            eff_ks = jnp.where(ren, r_ks, cfg_ks)
+
+            occ = srv.sum(axis=1, keepdims=True)
+            resid = CAP - occ
+            has_vq1 = ((vqof == 1) & (srv > 0)).any(axis=1, keepdims=True)
+            js_oh = eff_js == j_row                            # (L, nvq)
+            js_min = jnp.min(jnp.where(js_oh, row_min, INF32),
+                             axis=1, keepdims=True)
+            js_ex = (js_oh & hx).any(axis=1, keepdims=True)
+            cnt_js = ((vqof == eff_js) & (srv > 0)).sum(axis=1,
+                                                        keepdims=True)
+            rm1 = jnp.min(jnp.where(j_row == 1, row_min, INF32))
+
+            k1_can = eff_k1 & ~has_vq1 & (rm1 <= resid)
+            js_can = (eff_js >= 0) & (cnt_js < eff_ks) & (js_min <= resid)
+            any_can = glob_min <= resid
+            would = pending & (k1_can | js_can | any_can)
+
+            placer = jnp.min(jnp.where(would, l_col, L))
+            tch = pending & (l_col <= placer)
+            adv = pending & (l_col < placer)
+            do_ren = tch & ren
+            new_k1 = jnp.where(do_ren, r_k1, cfg_k1)
+            new_js = jnp.where(do_ren, r_js, cfg_js)
+            new_ks = jnp.where(do_ren, r_ks, cfg_ks)
+            new_has = has_cfg | tch
+            # first touch only — see engine/vqs.py (stale empty_now mask)
+            new_empty = in_empty | (tch & ~touched & empty_now)
+            touched = touched | tch
+            advanced = advanced | adv
+
+            sub1 = adv & eff_k1 & ~has_vq1 & ~(hx & (j_row == 1)).any()
+            subj = adv & (eff_js >= 0) & (cnt_js < eff_ks) & ~js_ex
+            want = want | (sub1 & (j_row == 1)) | (subj & js_oh)
+            want_ref[...] = want.astype(jnp.int32)
+
+            # serve the placer: ONE staged (i)/(ii)/(iii) largest-fit pop
+            any_p = placer < L
+            rowmask = l_col == placer                          # (L, 1)
+            do1 = (rowmask & k1_can).any()
+            doj = ~do1 & (rowmask & js_can).any()
+            jsx_s = jnp.maximum(jnp.max(jnp.where(rowmask, eff_js, -1)), 0)
+            rowsel = jnp.where(do1, j_jq == 1,
+                               jnp.where(doj, j_jq == jsx_s, True))
+            resid_s = jnp.max(jnp.where(rowmask, resid, -1))
+            elig = occ_ring & rowsel & (reff <= resid_s)
+            best_eff = jnp.max(jnp.where(elig, reff, 0))
+            cand = elig & (reff == best_eff)
+            vq_p = jnp.min(jnp.where(cand, j_jq, nvq))         # lowest VQ
+            found = vq_p < nvq
+            row_cand = cand & (j_jq == vq_p)
+            best_seq = jnp.min(jnp.where(row_cand, rseq, INF32))
+            entry = row_cand & (rseq == best_seq)              # FIFO tie
+            pos_p = jnp.min(jnp.where(entry, q_jq, Qcap))
+            pm = (j_jq == vq_p) & (q_jq == pos_p)
+            eff_p = jnp.sum(jnp.where(pm, reff, 0))
+            dur_p = jnp.sum(jnp.where(pm, rdur, 0))
+            do_place = any_p & found
+
+            row_srv = jnp.sum(jnp.where(rowmask, srv, 0),
+                              axis=0)[None, :]                 # (1, K)
+            es = row_srv == 0
+            kfree = jnp.min(jnp.where(es, k_row, K))
+            ok = kfree < K
+            lk = rowmask & (k_row == kfree) & ok & do_place    # (L, K)
+            srv_ref[...] = jnp.where(lk, eff_p, srv)
+            dep_ref[...] = jnp.where(lk, t + dur_p, dep_ref[...])
+            vqof_ref[...] = jnp.where(lk, vq_p, vqof)
+            reff_ref[...] = jnp.where(pm & do_place, 0, reff)
+            meta = meta_ref[...]
+            meta_ref[...] = meta.at[0].set(
+                (qcnt - jnp.where((j_row == vq_p) & do_place, 1, 0))[0])
+            trunc = trunc + (do_place & ~ok).astype(jnp.int32)  # K-overflow
+            new_empty = new_empty & ~(rowmask & do_place)
+            cfg_ref[...] = jnp.concatenate(
+                [new_k1.astype(jnp.int32).T, new_js.T, new_ks.T,
+                 new_has.astype(jnp.int32).T,
+                 new_empty.astype(jnp.int32).T], axis=0)
+            return touched, advanced, trunc
+
+        false_col = jnp.zeros((L, 1), bool)
+        _, advanced, trunc = jax.lax.fori_loop(
+            0, W + 1, work, (false_col, false_col, trunc))
+        # bound hit with servers still unserved: slot finished lazily
+        trunc = trunc + (visit & ~advanced).any().astype(jnp.int32)
+
+        # 5. arrival-side BF-J pass: each still-queued arrival (sequence
+        # stamp survived the serve pass) to the tightest feasible server
+        for vq_a, pos_a, seq_a, eff_a, dur_a, land in lanes:
+            reff = reff_ref[...]
+            rseq = rseq_ref[...]
+            srv = srv_ref[...]
+            em = (j_jq == vq_a) & (q_jq == pos_a)
+            queued = land & (jnp.sum(jnp.where(em, reff, 0)) > 0) \
+                & (jnp.sum(jnp.where(em, rseq, 0)) == seq_a)
+            resid = CAP - srv.sum(axis=1, keepdims=True)       # (L, 1)
+            candm = resid >= eff_a
+            rbest = jnp.min(jnp.where(candm, resid, INF32))
+            s = jnp.min(jnp.where(candm & (resid == rbest), l_col, L))
+            do = queued & (s < L)
+            rowmask = l_col == s
+            row_srv = jnp.sum(jnp.where(rowmask, srv, 0),
+                              axis=0)[None, :]
+            es = row_srv == 0
+            kfree = jnp.min(jnp.where(es, k_row, K))
+            ok = kfree < K
+            lk = rowmask & (k_row == kfree) & ok & do
+            srv_ref[...] = jnp.where(lk, eff_a, srv)
+            dep_ref[...] = jnp.where(lk, t + dur_a, dep_ref[...])
+            vqof_ref[...] = jnp.where(lk, vq_a, vqof_ref[...])
+            reff_ref[...] = jnp.where(em & do, 0, reff)
+            meta = meta_ref[...]
+            meta_ref[...] = meta.at[0].set(
+                (meta[0:1] - jnp.where((j_row == vq_a) & do, 1, 0))[0])
+            trunc = trunc + (do & ~ok).astype(jnp.int32)
+            cfgm = cfg_ref[...]
+            in_empty = (cfgm[4:5] != 0).T & ~(rowmask & do)
+            cfg_ref[...] = cfgm.at[4].set(in_empty.astype(jnp.int32).T[0])
+
+        qlen_ref[0, tt] = meta_ref[0:1, :].sum()
+        occ_ref[0, tt] = srv_ref[...].sum().astype(jnp.float32) / RES
+        ndep_ref[0, tt] = n_dep.astype(jnp.int32)
+        return dropped, trunc
+
+    acc = acc_ref[...]
+    dropped, trunc = jax.lax.fori_loop(
+        0, TW, slot_step, (acc[0, 0], acc[0, 1]))
+    acc_ref[...] = jnp.stack([dropped, trunc])[None, :]
+    dropped_ref[0, 0] = dropped
+    trunc_ref[0, 0] = trunc
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("J", "L", "K", "Qcap", "A_max", "work_steps", "window",
+                     "interpret"))
+def vqs_bf_pallas(n: jax.Array, sizes: jax.Array, durs: jax.Array,
+                  J: int, L: int, K: int, Qcap: int, A_max: int,
+                  work_steps: int, window: int | None = None,
+                  interpret: bool = False):
+    """Run the fused VQS-BF slot engine on an ensemble of clusters.
+
+    n (G, T) int32, sizes (G, T, A_max) f32, durs (G, T, D) int32 with the
+    per-arrival durations in the last A_max lanes — one pre-generated
+    stream set per ensemble member.  Returns per-slot (queue_len,
+    occupancy, departures) of shape (G, T) plus (dropped, truncated) of
+    shape (G,).  ``window`` splits the horizon into VMEM-sized chunks
+    exactly as for the VQS kernel (must divide T)."""
+    from repro.core.engine.ops import k_red_jnp
+
+    G, T = n.shape
+    TW, NW = resolve_windows(T, window)
+    D = durs.shape[-1]
+    confs = k_red_jnp(J)
+    C = confs.shape[0]
+    nvq = 2 * J
+    kernel = functools.partial(
+        _vqs_bf_kernel, J=J, L=L, K=K, Qcap=Qcap, A_max=A_max,
+        W=work_steps, TW=TW)
+    qlen, occ, ndep, dropped, trunc = pl.pallas_call(
+        kernel,
+        grid=(G, NW),
+        out_shape=(jax.ShapeDtypeStruct((G, T), jnp.int32),
+                   jax.ShapeDtypeStruct((G, T), jnp.float32),
+                   jax.ShapeDtypeStruct((G, T), jnp.int32),
+                   jax.ShapeDtypeStruct((G, 1), jnp.int32),
+                   jax.ShapeDtypeStruct((G, 1), jnp.int32)),
+        in_specs=[pl.BlockSpec((1, TW), lambda g, w: (g, w)),
+                  pl.BlockSpec((1, TW, A_max), lambda g, w: (g, w, 0)),
+                  pl.BlockSpec((1, TW, D), lambda g, w: (g, w, 0)),
+                  pl.BlockSpec((C, nvq), lambda g, w: (0, 0))],
+        out_specs=(pl.BlockSpec((1, TW), lambda g, w: (g, w)),
+                   pl.BlockSpec((1, TW), lambda g, w: (g, w)),
+                   pl.BlockSpec((1, TW), lambda g, w: (g, w)),
+                   pl.BlockSpec((1, 1), lambda g, w: (g, 0)),
+                   pl.BlockSpec((1, 1), lambda g, w: (g, 0))),
+        scratch_shapes=[pltpu.VMEM((L, K), jnp.int32),
+                        pltpu.VMEM((L, K), jnp.int32),
+                        pltpu.VMEM((L, K), jnp.int32),
+                        pltpu.VMEM((nvq, Qcap), jnp.int32),
+                        pltpu.VMEM((nvq, Qcap), jnp.int32),
+                        pltpu.VMEM((nvq, Qcap), jnp.int32),
+                        pltpu.VMEM((2, nvq), jnp.int32),
+                        pltpu.VMEM((5, L), jnp.int32),
+                        pltpu.VMEM((L, nvq), jnp.int32),
+                        pltpu.VMEM((1, 2), jnp.int32)],
+        interpret=interpret,
+    )(n, sizes, durs, confs)
+    return qlen, occ, ndep, dropped[:, 0], trunc[:, 0]

@@ -22,6 +22,10 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+# deselected by the fast tier-1 lane (-m "not slow"); CI runs
+# the full suite
+pytestmark = pytest.mark.slow
+
 # only the kill-schedule property test needs hypothesis — everything else
 # in this module must run even where it is not installed
 try:

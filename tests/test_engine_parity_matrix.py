@@ -42,6 +42,11 @@ MATRIX = {
                          num_resources=2, capacity=(1.0, 0.75)),
                 dict(L=4, K=8, Qcap=64, A_max=5, horizon=150,
                      work_steps=24)),
+    # vqs-bf places ONE job per work step (largest-fit pops can't batch),
+    # so its bound is sized to the burst, not to A_max
+    "vqs-bf": (Workload(lam=1.0, mu=0.05, sampler=_scalar_sampler),
+               dict(L=4, K=8, Qcap=64, A_max=5, horizon=150, J=3,
+                    work_steps=48)),
 }
 
 

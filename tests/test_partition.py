@@ -2,6 +2,10 @@
 import numpy as np
 import pytest
 
+# deselected by the fast tier-1 lane (-m "not slow"); CI runs
+# the full suite
+pytestmark = pytest.mark.slow
+
 pytest.importorskip("hypothesis")
 from hypothesis import given, settings, strategies as st
 

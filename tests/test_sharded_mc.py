@@ -25,6 +25,10 @@ import jax
 import numpy as np
 import pytest
 
+# deselected by the fast tier-1 lane (-m "not slow"); CI runs
+# the full suite
+pytestmark = pytest.mark.slow
+
 from repro.core.engine import (TuningCache, Workload, apply_tuned, autotune,
                                make_streams, monte_carlo_policy,
                                resolve_mesh, run_policy_streams, shape_key,
