@@ -355,12 +355,23 @@ def _streaming_mc_throughput():
             _GATE_VIOLATIONS.append(
                 (name, f"streamed trajectory (chunk={chunk}) diverged "
                        "from the one-shot run"))
+        # §14 runtime auditor over the tracked trajectory: conservation,
+        # occupancy <= capacity, preempted-split — a violation here is a
+        # gate failure, not a footnote
+        from repro.core.engine import InvariantViolation, audit_result
+        try:
+            audit_result(streams, res, policy="bfjs", config=dict(cfg))
+            audit = "ok"
+        except InvariantViolation as e:
+            audit = f"VIOLATION:{e.invariant}"
+            _GATE_VIOLATIONS.append((name, f"invariant audit: {e}"))
         meta = (f"ensembles={G};chunk_slots={chunk};"
                 f"chunks={-(-T // chunk)};"
                 f"sustained_slots_per_sec={G * T / (us / 1e6):.0f};"
                 f"chunks_behind={int(res.chunks_behind)};"
                 f"host_stall_us={float(res.host_stall_us):.0f};"
-                f"bitmatch_vs_ref={match};trunc={trunc};devices=1;"
+                f"bitmatch_vs_ref={match};trunc={trunc};"
+                f"audit={audit};devices=1;"
                 + _tuning_fields("bfjs", "scan", dict(cfg)))
         if engine == "pallas":
             meta += ";fallback=scan(streaming-carry-precheck)"

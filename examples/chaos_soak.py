@@ -1,0 +1,304 @@
+"""Chaos soak for the self-healing streaming runtime (DESIGN.md §14).
+
+A fixed-seed fault-injection campaign over the supervised streaming
+stack.  Five scenarios, every one with a hard pass condition:
+
+  1. transient I/O faults — every stateful policy (bfjs, vqs, vqs-bf,
+     bfjs-mr) x {scan, pallas-fallback}: ingestion raises OSError on a
+     fixed schedule, the supervisor retries with backoff, and the
+     recovered trajectory must be BIT-EXACT against the unperturbed run
+     (with the invariant auditor on the whole way);
+  2. SIGKILL + corruption — a child process is SIGKILLed mid-stream,
+     the newest surviving checkpoint is truncated, and the supervised
+     resume must roll back (counting it) and still bit-match;
+  3. delayed host — a chunk source that stalls past the staging
+     watchdog budget must escalate as a typed SupervisorTimeout;
+  4. poison quarantine — a deterministically failing chunk must be
+     quarantined with a manifest and the run must equal the same stream
+     with that chunk absent;
+  5. auditor tamper — a corrupted engine output must raise
+     InvariantViolation naming the chunk and the counter.
+
+Exits nonzero on ANY violation.  The quarantine directory (default
+``./chaos_quarantine``, override with ``CHAOS_QUARANTINE_DIR``) is left
+on disk on failure so CI can upload it as an artifact; it is removed on
+a clean pass.
+"""
+import os
+import shutil
+import signal
+import subprocess
+import sys
+import tempfile
+import time
+import warnings
+
+import jax
+import numpy as np
+
+from repro.checkpoint import ckpt
+from repro.core import trace as trace_mod
+from repro.core.engine import (CheckpointRollbackWarning,
+                               InvariantViolation, RetryPolicy,
+                               Supervisor, SupervisorTimeout,
+                               SupervisorWarning, iter_stream_chunks,
+                               make_streams, stream_policy)
+from repro.core.engine.streams import streams_from_trace
+
+QUARANTINE_DIR = os.environ.get("CHAOS_QUARANTINE_DIR",
+                                os.path.abspath("./chaos_quarantine"))
+
+_TRAJ = ("queue_len", "occupancy", "departed", "dropped", "truncated",
+         "preempted", "requeued", "lost")
+
+FAILURES: list[str] = []
+
+
+def check(ok: bool, what: str) -> None:
+    tag = "ok  " if ok else "FAIL"
+    print(f"  [{tag}] {what}")
+    if not ok:
+        FAILURES.append(what)
+
+
+def bitmatch(a, b) -> bool:
+    for f in _TRAJ:
+        x, y = getattr(a, f), getattr(b, f)
+        if (x is None) != (y is None):
+            return False
+        if x is not None and not np.array_equal(np.asarray(x),
+                                                np.asarray(y)):
+            return False
+    return True
+
+
+def synth_streams():
+    return make_streams(
+        jax.random.PRNGKey(7), lam=1.3, mu=0.08,
+        sampler=lambda k, s: jax.random.uniform(k, s, minval=0.1,
+                                                maxval=0.7),
+        L=4, K=5, A_max=4, horizon=40)
+
+
+def mr_streams():
+    tr = trace_mod.synthesize_google_like_trace(120, 60, seed=3)
+    return streams_from_trace(tr.arrival_slots,
+                              np.stack([tr.cpu, tr.mem], 1),
+                              np.minimum(tr.durations, 20), A_max=8)
+
+
+# (policy, streams builder, config) — every stateful runner in the
+# registry; vqs-family needs J, bfjs-mr needs the 2-resource trace.
+CASES = [
+    ("bfjs", synth_streams, dict(L=4, K=5, Qcap=48, A_max=4)),
+    ("vqs", synth_streams, dict(L=4, K=5, Qcap=48, A_max=4, J=3)),
+    ("vqs-bf", synth_streams, dict(L=4, K=5, Qcap=48, A_max=4, J=3)),
+    ("bfjs-mr", mr_streams, dict(L=4, K=6, Qcap=64)),
+]
+
+
+def sup(**kw):
+    kw.setdefault("retry", RetryPolicy(max_retries=3, base_delay=0.001,
+                                       max_delay=0.01))
+    return Supervisor(**kw)
+
+
+class ChunkSource:
+    """Idempotent-on-failure, index-addressed source with skip()."""
+
+    def __init__(self, chunks, poison=(), transient=None, stall=None):
+        self.chunks = list(chunks)
+        self.i = 0
+        self.poison = set(poison)
+        self.transient = dict(transient or {})
+        self.stall = dict(stall or {})
+
+    def __iter__(self):
+        return self
+
+    def skip(self):
+        self.i += 1
+
+    def __next__(self):
+        if self.i in self.stall:
+            time.sleep(self.stall[self.i])
+        if self.i in self.poison:
+            raise OSError(f"poison chunk {self.i}")
+        n = self.transient.get(self.i, 0)
+        if n:
+            self.transient[self.i] = n - 1
+            raise OSError(f"transient fault on chunk {self.i}")
+        if self.i >= len(self.chunks):
+            raise StopIteration
+        out = self.chunks[self.i]
+        self.i += 1
+        return out
+
+
+def scenario_transient() -> None:
+    print("scenario 1: transient I/O faults, retry/backoff, bit-exact")
+    for policy, build, cfg in CASES:
+        streams = build()
+        chunks = list(iter_stream_chunks(streams, 13))
+        for engine in ("scan", "pallas"):
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore")
+                ref = stream_policy(iter(chunks), policy=policy,
+                                    engine=engine, **cfg)
+                s = sup()
+                res = stream_policy(
+                    ChunkSource(chunks, transient={1: 2, 2: 1}),
+                    policy=policy, engine=engine, supervisor=s,
+                    audit=True, **cfg)
+            check(bitmatch(ref, res) and res.retries == 3
+                  and res.quarantined == 0,
+                  f"{policy}/{engine}: recovered bit-exact "
+                  f"(retries={res.retries})")
+
+
+_CHILD = r"""
+import os, signal, sys
+import jax
+from repro.core.engine import make_streams, stream_policy, \
+    iter_stream_chunks
+from repro.core.engine import streaming as streaming_mod
+
+ckdir, kills_after = sys.argv[1], int(sys.argv[2])
+streams = make_streams(
+    jax.random.PRNGKey(7), lam=1.3, mu=0.08,
+    sampler=lambda k, s: jax.random.uniform(k, s, minval=0.1, maxval=0.7),
+    L=4, K=5, A_max=4, horizon=40)
+saves = [0]
+real = streaming_mod._save_step
+
+def killing_save(checkpoint_dir, step, payload, extra):
+    real(checkpoint_dir, step, payload, extra)
+    saves[0] += 1
+    if saves[0] >= kills_after:
+        os.kill(os.getpid(), signal.SIGKILL)
+
+streaming_mod._save_step = killing_save
+stream_policy(iter_stream_chunks(streams, 7), policy="bfjs",
+              checkpoint_dir=ckdir, L=4, K=5, Qcap=48, A_max=4)
+sys.exit("survived past the kill point — harness broken")
+"""
+
+
+def scenario_sigkill() -> None:
+    print("scenario 2: SIGKILL mid-stream + checkpoint corruption")
+    streams = synth_streams()
+    cfg = dict(L=4, K=5, Qcap=48, A_max=4)
+    ref = stream_policy(iter_stream_chunks(streams, 7), policy="bfjs",
+                        **cfg)
+    env = dict(os.environ)
+    src = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+    env["PYTHONPATH"] = os.path.abspath(src) + os.pathsep \
+        + env.get("PYTHONPATH", "")
+    with tempfile.TemporaryDirectory() as ck:
+        proc = subprocess.run([sys.executable, "-c", _CHILD, ck, "3"],
+                              env=env)
+        check(proc.returncode == -signal.SIGKILL,
+              f"child died by SIGKILL (rc={proc.returncode})")
+        steps = ckpt.list_steps(ck)
+        check(bool(steps), f"checkpoints survived the kill: {steps}")
+        if steps:
+            victim = os.path.join(ck, f"step_{steps[-1]:08d}",
+                                  "arrays.npz")
+            size = os.path.getsize(victim)
+            with open(victim, "r+b") as f:
+                f.truncate(max(size // 2, 1))
+            with warnings.catch_warnings():
+                warnings.simplefilter("ignore")
+                res = stream_policy(iter_stream_chunks(streams, 7),
+                                    policy="bfjs", checkpoint_dir=ck,
+                                    resume=True, supervisor=sup(),
+                                    audit=True, **cfg)
+            check(res.rollbacks == 1,
+                  f"rollback over the corrupt step counted "
+                  f"(rollbacks={res.rollbacks})")
+            check(bitmatch(ref, res),
+                  "post-rollback resume bit-matches the clean run")
+
+
+def scenario_watchdog() -> None:
+    print("scenario 3: delayed host escalates as SupervisorTimeout")
+    streams = synth_streams()
+    chunks = list(iter_stream_chunks(streams, 7))
+    s = Supervisor(stage_timeout=0.2)
+    try:
+        stream_policy(ChunkSource(chunks, stall={2: 5.0}), policy="bfjs",
+                      supervisor=s, L=4, K=5, Qcap=48, A_max=4)
+        check(False, "stalled host escalated (no timeout raised)")
+    except SupervisorTimeout as e:
+        check(e.chunk_index == 2 and s.timeouts == 1,
+              f"stalled host escalated as SupervisorTimeout "
+              f"(chunk {e.chunk_index})")
+
+
+def scenario_quarantine() -> None:
+    print("scenario 4: poison chunk quarantined with manifest")
+    streams = synth_streams()
+    cfg = dict(L=4, K=5, Qcap=48, A_max=4)
+    chunks = list(iter_stream_chunks(streams, 7))
+    ref = stream_policy(iter(chunks[:2] + chunks[3:]), policy="bfjs",
+                        **cfg)
+    s = sup(retry=RetryPolicy(max_retries=2, base_delay=0.001),
+            quarantine_dir=QUARANTINE_DIR)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        res = stream_policy(ChunkSource(chunks, poison={2}),
+                            policy="bfjs", supervisor=s, audit=True,
+                            **cfg)
+    manifest = os.path.join(QUARANTINE_DIR, "chunk_00000002",
+                            "manifest.json")
+    check(res.quarantined == 1 and os.path.exists(manifest),
+          "poison chunk skipped with manifest preserved")
+    check(bitmatch(ref, res),
+          "quarantined run equals the stream minus the poison chunk")
+
+
+def scenario_auditor() -> None:
+    print("scenario 5: invariant auditor catches a corrupted engine")
+    from repro.core.engine import streaming as streaming_mod
+    streams = synth_streams()
+    real = streaming_mod._STATEFUL["bfjs"]
+
+    def tampered(s, st, config):
+        res, new_st = real(s, st, config)
+        return res._replace(queue_len=res.queue_len - 1000), new_st
+
+    streaming_mod._STATEFUL["bfjs"] = tampered
+    try:
+        stream_policy(iter_stream_chunks(streams, 7), policy="bfjs",
+                      audit=True, L=4, K=5, Qcap=48, A_max=4)
+        check(False, "auditor caught the tampered counter (no raise)")
+    except InvariantViolation as e:
+        check(e.invariant == "queue_nonneg" and e.chunk_index == 0,
+              f"auditor raised {e.invariant!r} at chunk {e.chunk_index}")
+    finally:
+        streaming_mod._STATEFUL["bfjs"] = real
+
+
+def main() -> None:
+    shutil.rmtree(QUARANTINE_DIR, ignore_errors=True)
+    t0 = time.time()
+    scenario_transient()
+    scenario_sigkill()
+    scenario_watchdog()
+    scenario_quarantine()
+    scenario_auditor()
+    dt = time.time() - t0
+    if FAILURES:
+        print(f"\nchaos soak FAILED ({len(FAILURES)} violation(s), "
+              f"{dt:.0f}s):")
+        for f in FAILURES:
+            print(f"  - {f}")
+        print(f"quarantine evidence (if any): {QUARANTINE_DIR}")
+        sys.exit(1)
+    shutil.rmtree(QUARANTINE_DIR, ignore_errors=True)
+    print(f"\nchaos soak PASSED (5 scenarios, "
+          f"{len(CASES) * 2} policy/engine cells, {dt:.0f}s)")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,4 +1,4 @@
-"""Checkpointing: atomic, async-capable, elastic.
+"""Checkpointing: atomic, async-capable, elastic, self-verifying.
 
 Layout:  <dir>/step_<N>/arrays.npz  + manifest.json
   * arrays are stored with LOGICAL (unsharded) shapes keyed by pytree path,
@@ -7,21 +7,50 @@ Layout:  <dir>/step_<N>/arrays.npz  + manifest.json
     onto the survivors);
   * writes go to step_<N>.tmp then rename (atomic on POSIX);
   * ``save_async`` runs the host-side write in a thread so the training
-    loop only blocks for the device->host copy.
+    loop only blocks for the device->host copy;
+  * every save records a SHA-256 of ``arrays.npz`` in its manifest
+    (``arrays_sha256``); loads verify it, so a truncated or bit-rotted
+    checkpoint surfaces as a typed :class:`CheckpointCorruptError` naming
+    the offending path — never a raw pickle/zip/numpy error — and
+    :func:`latest_valid_step` finds the newest checkpoint that still
+    verifies (the supervised-streaming rollback hook, DESIGN.md §14).
 """
 from __future__ import annotations
 
+import hashlib
 import json
 import os
 import shutil
 import threading
 import time
+import zipfile
 from typing import Any
 
 import jax
 import numpy as np
 
 SEP = "/"
+
+
+class CheckpointCorruptError(RuntimeError):
+    """A checkpoint on disk is truncated, garbled, or fails its checksum.
+
+    Always names the offending file; raised instead of whatever raw
+    ``zipfile``/``pickle``/``numpy`` error the damage would otherwise
+    surface as, so callers can catch ONE type to trigger rollback."""
+
+    def __init__(self, path: str, why: str):
+        self.path = path
+        self.why = why
+        super().__init__(f"corrupt checkpoint at {path}: {why}")
+
+
+def _sha256_file(path: str) -> str:
+    h = hashlib.sha256()
+    with open(path, "rb") as f:
+        for block in iter(lambda: f.read(1 << 20), b""):
+            h.update(block)
+    return h.hexdigest()
 
 
 def _flatten(tree) -> dict[str, np.ndarray]:
@@ -56,6 +85,7 @@ def save(directory: str, step: int, state: Any, extra: dict | None = None
         "time": time.time(),
         "num_arrays": len(flat),
         "total_bytes": int(sum(a.nbytes for a in flat.values())),
+        "arrays_sha256": _sha256_file(os.path.join(tmp, "arrays.npz")),
         "extra": extra or {},
     }
     with open(os.path.join(tmp, "manifest.json"), "w") as f:
@@ -122,16 +152,69 @@ def latest_step(directory: str) -> int | None:
     return steps[-1] if steps else None
 
 
+def load_arrays(directory: str, step: int, verify: bool = True
+                ) -> dict[str, np.ndarray]:
+    """Read a step's arrays as a ``{pytree path: ndarray}`` dict, fully
+    materialized, raising :class:`CheckpointCorruptError` on truncated or
+    garbled files.  ``verify=True`` (default) additionally checks the
+    manifest's ``arrays_sha256`` when present (checkpoints written before
+    checksumming landed verify structurally only)."""
+    path = os.path.join(directory, f"step_{step:08d}", "arrays.npz")
+    if verify:
+        sha = read_manifest(directory, step).get("arrays_sha256")
+        if sha is not None:
+            try:
+                actual = _sha256_file(path)
+            except OSError as e:
+                raise CheckpointCorruptError(path, f"unreadable: {e}") \
+                    from e
+            if actual != sha:
+                raise CheckpointCorruptError(
+                    path, f"SHA-256 mismatch: manifest says {sha[:12]}…, "
+                          f"file hashes to {actual[:12]}… (truncated write "
+                          "or on-disk corruption)")
+    try:
+        with np.load(path, allow_pickle=False) as data:
+            return {k: np.asarray(data[k]) for k in data.files}
+    except CheckpointCorruptError:
+        raise
+    except Exception as e:
+        # zipfile.BadZipFile, EOFError, OSError, ValueError from a garbage
+        # member, KeyError from a torn index — one typed error, named path
+        raise CheckpointCorruptError(
+            path, f"{type(e).__name__}: {e}") from e
+
+
+def verify_step(directory: str, step: int) -> None:
+    """Raise :class:`CheckpointCorruptError` unless step ``step`` is fully
+    readable (manifest parses, arrays decompress, checksum matches)."""
+    load_arrays(directory, step, verify=True)
+
+
+def latest_valid_step(directory: str) -> tuple[int | None, list[int]]:
+    """Newest step that verifies, plus the (newer) corrupt steps skipped
+    on the way — the rollback primitive: ``(None, [...])`` means no
+    checkpoint survived at all."""
+    corrupt: list[int] = []
+    for step in reversed(list_steps(directory)):
+        try:
+            verify_step(directory, step)
+        except CheckpointCorruptError:
+            corrupt.append(step)
+        else:
+            return step, corrupt
+    return None, corrupt
+
+
 def restore(directory: str, step: int, like: Any, shardings: Any | None = None
             ) -> Any:
     """Restore into the structure of `like` (a pytree of arrays or
     ShapeDtypeStructs).  If `shardings` is given (pytree of NamedSharding),
     arrays are device_put with them — restoring onto a different mesh than
     the one that saved is supported because stored shapes are logical."""
-    path = os.path.join(directory, f"step_{step:08d}", "arrays.npz")
-    data = np.load(path)
+    data = load_arrays(directory, step)
     flat_like = _flatten(like)
-    missing = set(flat_like) - set(data.files)
+    missing = set(flat_like) - set(data)
     if missing:
         raise KeyError(f"checkpoint missing arrays: {sorted(missing)[:5]}...")
     leaves_like, treedef = jax.tree_util.tree_flatten(like)
@@ -147,5 +230,10 @@ def restore(directory: str, step: int, like: Any, shardings: Any | None = None
 
 
 def read_manifest(directory: str, step: int) -> dict:
-    with open(os.path.join(directory, f"step_{step:08d}", "manifest.json")) as f:
-        return json.load(f)
+    path = os.path.join(directory, f"step_{step:08d}", "manifest.json")
+    try:
+        with open(path) as f:
+            return json.load(f)
+    except (OSError, json.JSONDecodeError, UnicodeDecodeError) as e:
+        raise CheckpointCorruptError(
+            path, f"{type(e).__name__}: {e}") from e

@@ -151,11 +151,28 @@ class Cluster:
         self.busy_area += self.total_occupied()
 
     def check_invariants(self) -> None:
+        """Raise on bookkeeping corruption (an ``assert`` would vanish
+        under ``python -O``).  Raises
+        :class:`~repro.core.engine.supervisor.InvariantViolation` — a
+        ``ValueError`` subclass — naming the failed counter and servers."""
+        from repro.core.engine.supervisor import InvariantViolation
         occ = np.zeros(self.L, dtype=np.int64)
         for s in range(self.L):
             occ[s] = sum(j.eff_size for j in self.jobs[s].values())
-        assert np.all(occ + self.residual == self.capacity), "residual mismatch"
-        assert np.all(self.residual >= 0), "negative residual"
+        if not np.all(occ + self.residual == self.capacity):
+            bad = np.flatnonzero(occ + self.residual != self.capacity)
+            raise InvariantViolation(
+                f"residual mismatch on server(s) {bad.tolist()}: "
+                f"occupied {occ[bad].tolist()} + residual "
+                f"{self.residual[bad].tolist()} != capacity "
+                f"{np.broadcast_to(self.capacity, occ.shape)[bad].tolist()}",
+                invariant="occupancy_capacity")
+        if not np.all(self.residual >= 0):
+            bad = np.flatnonzero(self.residual < 0)
+            raise InvariantViolation(
+                f"negative residual on server(s) {bad.tolist()}: "
+                f"{self.residual[bad].tolist()}",
+                invariant="queue_nonneg")
 
 
 class ServiceModel:

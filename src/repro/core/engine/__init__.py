@@ -32,7 +32,13 @@ branch-free programs that run ON the accelerator:
     infinite) arrival iterator through the stateful scan engines with
     carried state, double-buffering host ingestion against device compute
     (backpressure counters on ``PolicyResult``); finite traces replay
-    bit-identically to the one-shot run under any chunking.
+    bit-identically to the one-shot run under any chunking;
+  * ``supervisor`` — the self-healing layer around the streaming loop
+    (``stream_policy(supervisor=Supervisor(...))``): retry with jittered
+    backoff on transient ingestion/staging/checkpoint failures, watchdog
+    timeouts, rollback over corrupt checkpoints, poison-chunk quarantine,
+    and the opt-in jitted runtime invariant auditor (``audit=True``,
+    ``audit_result``) — DESIGN.md §14.
 
 Engine contract (DESIGN.md §1): per policy, ``"scan"`` bit-matches
 ``"reference"`` while ``truncated == 0``, and ``"pallas"`` bit-matches
@@ -51,6 +57,10 @@ from .bfjs_mr import (monte_carlo_bfjs_mr_workload, run_bfjs_mr_streams,
 from .chunked import run_chunked, streams_fingerprint
 from .streaming import (iter_stream_chunks, stream_chunks_from_trace,
                         stream_policy)
+from .supervisor import (INVARIANTS, CheckpointRollbackWarning,
+                         InvariantViolation, RetryPolicy, Supervisor,
+                         SupervisorError, SupervisorTimeout,
+                         SupervisorWarning, audit_result, make_auditor)
 from .sharding import (ENSEMBLE_AXIS, ensemble_streams, monte_carlo_chunked,
                        resolve_mesh, sharded_monte_carlo)
 from .tuning import (TuningCache, apply_tuned, autotune, shape_key,
@@ -76,6 +86,9 @@ __all__ = [
     "run_bfjs_mr_trace", "run_bfjs_mr_workload", "run_chunked",
     "streams_fingerprint", "iter_stream_chunks",
     "stream_chunks_from_trace", "stream_policy",
+    "INVARIANTS", "CheckpointRollbackWarning", "InvariantViolation",
+    "RetryPolicy", "Supervisor", "SupervisorError", "SupervisorTimeout",
+    "SupervisorWarning", "audit_result", "make_auditor",
     "ENSEMBLE_AXIS", "ensemble_streams",
     "monte_carlo_chunked", "resolve_mesh", "sharded_monte_carlo",
     "TuningCache", "apply_tuned", "autotune", "shape_key",

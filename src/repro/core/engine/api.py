@@ -179,7 +179,7 @@ def run_policy_streams(streams: SchedStreams, *, policy: str = "bfjs",
                        checkpoint_dir: str | None = None,
                        chunk: int | None = None, resume: bool = False,
                        stop_after_chunks: int | None = None,
-                       mesh=None, devices=None,
+                       mesh=None, devices=None, audit: bool = False,
                        **config) -> PolicyResult:
     """Replay explicit streams (e.g. ``streams_from_trace``) through a
     policy engine — the trace-driven path of the stack.  Multi-resource
@@ -201,6 +201,12 @@ def run_policy_streams(streams: SchedStreams, *, policy: str = "bfjs",
     ``core.engine.stream_policy``, which threads the same carried state
     through any chunk iterator, double-buffers host ingestion against
     device compute, and bit-matches this function on any finite trace.
+
+    ``audit=True`` runs the runtime invariant auditor over the finished
+    result (``core.engine.supervisor.audit_result`` — job conservation,
+    capacity bounds, fault accounting) and raises a typed
+    ``InvariantViolation`` naming the failed counter; it needs explicit
+    ``L=``/``K=`` in the config.
     """
     _check_engine(engine)
     from .sharding import resolve_mesh
@@ -209,6 +215,14 @@ def run_policy_streams(streams: SchedStreams, *, policy: str = "bfjs",
     n_res = 1 if streams.sizes.ndim == streams.durs.ndim \
         else int(streams.sizes.shape[-1])
     apply_tuned(policy, engine, config, n_res)
+    audit_cfg = dict(config)
+
+    def _audited(res: PolicyResult) -> PolicyResult:
+        if audit:
+            from .supervisor import audit_result
+            audit_result(streams, res, policy=policy, config=audit_cfg)
+        return res
+
     if chunk is not None or checkpoint_dir is not None or resume:
         if engine != "scan":
             raise ValueError(
@@ -221,16 +235,17 @@ def run_policy_streams(streams: SchedStreams, *, policy: str = "bfjs",
         from .chunked import run_chunked
         config.pop("strict", None)
         config.pop("window", None)
-        return run_chunked(streams, policy=policy, chunk=chunk,
-                           checkpoint_dir=checkpoint_dir, resume=resume,
-                           stop_after_chunks=stop_after_chunks, mesh=mesh,
-                           **config)
+        return _audited(run_chunked(
+            streams, policy=policy, chunk=chunk,
+            checkpoint_dir=checkpoint_dir, resume=resume,
+            stop_after_chunks=stop_after_chunks, mesh=mesh, **config))
     if mesh is not None:
         raise ValueError(
             "mesh=/devices= on run_policy_streams needs the chunked path "
             "(chunk=); for straight sharded Monte-Carlo use "
             "monte_carlo_policy(..., mesh=)")
-    return get_policy(policy).run_streams(streams, engine=engine, **config)
+    return _audited(get_policy(policy).run_streams(streams, engine=engine,
+                                                   **config))
 
 
 def monte_carlo_policy(workload, *legacy, policy: str = "bfjs",

@@ -130,21 +130,27 @@ def _load_step(checkpoint_dir: str, step: int
     policy-/config-dependent, so restore by npz key layout rather than a
     ``like`` pytree: ``state/<i>`` leaves in index order and
     ``partial/<field>`` leaves by ``PolicyResult`` field name.
+
+    Reads go through ``ckpt.load_arrays`` — checksum-verified, so a
+    truncated or garbled file raises a typed
+    :class:`~repro.checkpoint.ckpt.CheckpointCorruptError` naming the
+    path (never a raw pickle/zip/numpy error); supervised streaming
+    catches exactly that type to roll back to the last good boundary.
     """
     path = os.path.join(checkpoint_dir, f"step_{step:08d}", "arrays.npz")
-    data = np.load(path)
-    idxs = sorted(int(k.split("/", 1)[1]) for k in data.files
+    data = ckpt.load_arrays(checkpoint_dir, step)
+    idxs = sorted(int(k.split("/", 1)[1]) for k in data
                   if k.startswith("state/"))
     if idxs != list(range(len(idxs))) or not idxs:
-        raise ValueError(f"malformed engine-state checkpoint at {path}: "
-                         f"state indices {idxs}")
+        raise ckpt.CheckpointCorruptError(
+            path, f"state indices {idxs} are not a dense 0..N range")
     state = tuple(jnp.asarray(data[f"state/{i}"]) for i in idxs)
     # Optional fields (fault counters on unfaulted runs, the streaming
-    # backpressure counters always) are None leaves — dropped by
-    # tree_flatten at save time, so absent from the npz.
+    # backpressure/supervision counters always) are None leaves — dropped
+    # by tree_flatten at save time, so absent from the npz.
     partial = PolicyResult(*(
         jnp.asarray(data[f"partial/{f}"])
-        if f"partial/{f}" in data.files else None
+        if f"partial/{f}" in data else None
         for f in PolicyResult._fields))
     return state, partial
 

@@ -46,6 +46,14 @@ atomic tmp-then-rename contract as chunked sweeps); ``resume=True``
 re-iterates the source, skips the chunks already executed — verifying the
 first chunk's fingerprint so a checkpoint never continues a different
 stream — and continues bit-exactly.
+
+``supervisor=`` (a :class:`~repro.core.engine.supervisor.Supervisor`)
+makes the loop self-healing — retry/backoff on transient ingestion,
+staging and checkpoint-write failures, watchdog timeouts on device
+compute and host staging, rollback over corrupt checkpoints on resume,
+poison-chunk quarantine — and ``audit=True`` turns on the per-chunk
+jitted invariant auditor.  Both are opt-in and leave the unsupervised
+fast path byte-for-byte unchanged (DESIGN.md §14).
 """
 from __future__ import annotations
 
@@ -63,6 +71,7 @@ from repro.checkpoint import ckpt
 from .chunked import (_STATEFUL, _append, _load_step, _save_step,
                       _slice_streams, streams_fingerprint)
 from .streams import PolicyResult, SchedStreams
+from .supervisor import Supervisor, SupervisorTimeout, make_auditor
 
 #: jitted ensemble (vmapped) runner pairs keyed by (policy, config items)
 #: — reused across stream_policy calls so repeated streaming runs of the
@@ -133,9 +142,14 @@ def stream_chunks_from_trace(traces: Iterable, *, chunk_slots: int,
     ``collapse=False`` keeps (cpu, mem) requirement vectors
     (``policy="bfjs-mr"``).  ``num_resources`` pins the expected R exactly
     as ``streams_from_trace`` does.
-    """
-    from .streams import streams_from_trace
 
+    The returned iterator is a CLASS, not a generator, on purpose: a
+    failure raised by the inner ``traces`` source propagates without
+    killing the re-bucketing state, so when the source is itself
+    idempotent-on-failure (``core.trace.ResumableTraceReader``) the whole
+    composition is retryable by the streaming supervisor — and a
+    ``skip()`` on the source is forwarded for poison-chunk quarantine.
+    """
     if chunk_slots <= 0:
         raise ValueError(f"chunk_slots must be positive, got {chunk_slots}")
     R = 1 if collapse else 2
@@ -143,49 +157,114 @@ def stream_chunks_from_trace(traces: Iterable, *, chunk_slots: int,
         raise ValueError(
             f"collapse={collapse} yields R={R} resource plane(s) but "
             f"num_resources={num_resources} was requested")
-    empty_sizes = np.empty((0,) if collapse else (0, R), dtype=np.float64)
-    buf_slots = np.empty((0,), dtype=np.int64)
-    buf_sizes = empty_sizes
-    buf_durs = np.empty((0,), dtype=np.int64)
-    win_lo = 0           # first slot of the next window to emit
-    last_slot = -1       # newest slot seen (slots are non-decreasing)
+    return _TraceChunkSource(iter(traces), chunk_slots, A_max, collapse,
+                             num_resources)
 
-    def emit(hi_slots: int) -> SchedStreams:
+
+class _TraceChunkSource:
+    """The re-bucketing iterator behind :func:`stream_chunks_from_trace`.
+
+    State (arrival buffer, window cursor, pending completed windows) only
+    advances on a SUCCESSFUL pull from the inner source, so an exception
+    from ``next(traces)`` leaves this iterator retryable — re-calling
+    ``__next__`` re-attempts the same inner pull (the supervisor's
+    idempotent-source contract, which a plain generator cannot satisfy).
+    """
+
+    def __init__(self, traces, chunk_slots: int, A_max: int,
+                 collapse: bool, num_resources: int | None):
+        self.traces = traces
+        self.chunk_slots = chunk_slots
+        self.A_max = A_max
+        self.collapse = collapse
+        self.num_resources = num_resources
+        R = 1 if collapse else 2
+        self.buf_slots = np.empty((0,), dtype=np.int64)
+        self.buf_sizes = np.empty((0,) if collapse else (0, R),
+                                  dtype=np.float64)
+        self.buf_durs = np.empty((0,), dtype=np.int64)
+        self.win_lo = 0      # first slot of the next window to emit
+        self.last_slot = -1  # newest slot seen (slots are non-decreasing)
+        self._pending: deque = deque()
+        self._exhausted = False
+        self._inner_failed = False
+
+    def __iter__(self):
+        return self
+
+    def skip(self) -> None:
+        """Advance the inner source past a poison chunk (supervised
+        quarantine protocol) when it supports skipping."""
+        skip = getattr(self.traces, "skip", None)
+        if skip is not None:
+            skip()
+
+    def _emit(self, hi_slots: int) -> SchedStreams:
         """Emit the window [win_lo, win_lo + hi_slots) from the buffer."""
-        nonlocal buf_slots, buf_sizes, buf_durs, win_lo
-        take = buf_slots < win_lo + hi_slots
+        from .streams import streams_from_trace
+
+        take = self.buf_slots < self.win_lo + hi_slots
         win = streams_from_trace(
-            buf_slots[take] - win_lo, buf_sizes[take], buf_durs[take],
-            horizon=hi_slots, A_max=A_max, num_resources=num_resources)
-        buf_slots = buf_slots[~take]
-        buf_sizes = buf_sizes[~take]
-        buf_durs = buf_durs[~take]
-        win_lo += hi_slots
+            self.buf_slots[take] - self.win_lo, self.buf_sizes[take],
+            self.buf_durs[take], horizon=hi_slots, A_max=self.A_max,
+            num_resources=self.num_resources)
+        self.buf_slots = self.buf_slots[~take]
+        self.buf_sizes = self.buf_sizes[~take]
+        self.buf_durs = self.buf_durs[~take]
+        self.win_lo += hi_slots
         return win
 
-    for tr in traces:
-        slots = np.asarray(tr.arrival_slots, dtype=np.int64)
-        if len(slots) == 0:
-            continue
-        if slots[0] < last_slot:
-            raise ValueError(
-                f"trace chunks went backwards in time: slot {slots[0]} "
-                f"after {last_slot} (the reader guarantees monotone "
-                "arrivals — did chunks arrive out of order?)")
-        sizes = (np.maximum(tr.cpu, tr.mem) if collapse
-                 else np.stack([tr.cpu, tr.mem], axis=1))
-        buf_slots = np.concatenate([buf_slots, slots])
-        buf_sizes = np.concatenate([buf_sizes, sizes])
-        buf_durs = np.concatenate([buf_durs,
-                                   np.asarray(tr.durations, np.int64)])
-        last_slot = int(slots[-1])
-        # every window whose end has provably passed is complete
-        while last_slot >= win_lo + chunk_slots:
-            yield emit(chunk_slots)
-    if len(buf_slots):
-        # final window: trim to the last arrival so the concatenated
-        # horizon equals the one-shot streams_from_trace horizon
-        yield emit(last_slot - win_lo + 1)
+    def __next__(self) -> SchedStreams:
+        import types
+        while not self._pending and not self._exhausted:
+            try:
+                tr = next(self.traces)
+            except StopIteration:
+                if self._inner_failed \
+                        and isinstance(self.traces, types.GeneratorType):
+                    # a plain generator dies on its first error; its
+                    # post-failure StopIteration is death, not a clean end
+                    from .supervisor import SupervisorError
+                    raise SupervisorError(
+                        "trace source raised StopIteration right after "
+                        "failing: a plain generator dies on its first "
+                        "error and cannot be retried — wrap the source "
+                        "in a resumable reader (e.g. "
+                        "core.trace.ResumableTraceReader)") from None
+                self._exhausted = True
+                if len(self.buf_slots):
+                    # final window: trim to the last arrival so the
+                    # concatenated horizon equals the one-shot
+                    # streams_from_trace horizon
+                    self._pending.append(
+                        self._emit(self.last_slot - self.win_lo + 1))
+                break
+            except BaseException:
+                self._inner_failed = True
+                raise
+            self._inner_failed = False
+            slots = np.asarray(tr.arrival_slots, dtype=np.int64)
+            if len(slots) == 0:
+                continue
+            if slots[0] < self.last_slot:
+                raise ValueError(
+                    f"trace chunks went backwards in time: slot "
+                    f"{slots[0]} after {self.last_slot} (the reader "
+                    "guarantees monotone arrivals — did chunks arrive "
+                    "out of order?)")
+            sizes = (np.maximum(tr.cpu, tr.mem) if self.collapse
+                     else np.stack([tr.cpu, tr.mem], axis=1))
+            self.buf_slots = np.concatenate([self.buf_slots, slots])
+            self.buf_sizes = np.concatenate([self.buf_sizes, sizes])
+            self.buf_durs = np.concatenate(
+                [self.buf_durs, np.asarray(tr.durations, np.int64)])
+            self.last_slot = int(slots[-1])
+            # every window whose end has provably passed is complete
+            while self.last_slot >= self.win_lo + self.chunk_slots:
+                self._pending.append(self._emit(self.chunk_slots))
+        if self._pending:
+            return self._pending.popleft()
+        raise StopIteration
 
 
 def _chunk_shape(streams: SchedStreams) -> tuple:
@@ -214,6 +293,8 @@ def stream_policy(chunks: Iterable, *, policy: str = "bfjs",
                   stop_after_chunks: int | None = None,
                   trajectory: str = "full",
                   strict: bool = False,
+                  supervisor: Supervisor | None = None,
+                  audit: bool = False,
                   **config) -> PolicyResult:
     """Run a (possibly infinite) iterator of ``SchedStreams`` chunks
     through a stateful scan engine with carried state — see the module
@@ -232,6 +313,17 @@ def stream_policy(chunks: Iterable, *, policy: str = "bfjs",
     ``stream_policy(iter_stream_chunks(S, c), policy=p)`` equals
     ``run_policy_streams(S, policy=p)`` bit-for-bit on every trajectory
     field, for every chunk size ``c``.
+
+    ``supervisor=`` turns on the self-healing layer (retry/backoff,
+    watchdogs, checkpoint rollback, poison-chunk quarantine — see
+    ``core.engine.supervisor``); its counters land on the result's
+    ``retries``/``quarantined``/``rollbacks`` fields.  Transient-fault
+    recovery preserves the bit-match contract exactly; only a QUARANTINED
+    chunk (deterministic poison, always counted, never silent) changes
+    the trajectory vs. the unperturbed run.  ``audit=True`` checks the
+    runtime conservation laws after every chunk (jitted margins; the
+    check syncs the pipeline once per chunk) and raises a typed
+    ``InvariantViolation`` naming chunk and counter.
     """
     if policy not in _STATEFUL:
         raise ValueError(
@@ -257,9 +349,45 @@ def stream_policy(chunks: Iterable, *, policy: str = "bfjs",
     if resume and checkpoint_dir is None:
         raise ValueError("resume=True needs checkpoint_dir=")
 
+    sup = supervisor
     it = iter(chunks)
+
+    def pull(index: int):
+        """``next(it)`` — supervised: retried with backoff on transient
+        (retryable) errors, each attempt under the staging watchdog.  A
+        plain generator dies on the FIRST error it raises; detecting its
+        premature ``StopIteration`` on retry turns silent stream
+        truncation into a loud failure."""
+        if sup is None:
+            return next(it)
+        failed = False
+
+        def attempt():
+            nonlocal failed
+            import types
+            try:
+                return next(it)
+            except StopIteration:
+                # a resumable source may legitimately end right after a
+                # recovered failure; a PLAIN generator cannot — it died
+                if failed and isinstance(it, types.GeneratorType):
+                    from .supervisor import SupervisorError
+                    raise SupervisorError(
+                        f"chunk source raised StopIteration while "
+                        f"retrying chunk {index}: a plain generator dies "
+                        "on its first error and cannot be retried — wrap "
+                        "the source in a resumable reader (e.g. "
+                        "core.trace.ResumableTraceReader)") from None
+                raise
+            except BaseException:
+                failed = True
+                raise
+
+        return sup.call("chunk ingestion", attempt, chunk_index=index,
+                        timeout=sup.stage_timeout)
+
     try:
-        first = next(it)
+        first = pull(0)
     except StopIteration:
         raise ValueError("stream_policy: the chunk iterator is empty") \
             from None
@@ -312,14 +440,98 @@ def stream_policy(chunks: Iterable, *, policy: str = "bfjs",
         def runner(streams_chunk, st):
             return base(streams_chunk, st, config)
 
-    staged = prepare(first, 0)
+    def stage(chunk, index: int):
+        """``prepare`` — supervised: retried transients, staging
+        watchdog."""
+        if sup is None:
+            return prepare(chunk, index)
+        return sup.call("chunk staging",
+                        lambda: prepare(chunk, index),
+                        chunk_index=index, timeout=sup.stage_timeout)
+
+    def pull_staged(index: int):
+        """Pull + stage source chunk ``index``.  Under supervision, a
+        chunk that still fails after retries — or fails staging with a
+        non-retryable error (e.g. a mid-stream shape change) — is
+        quarantined (when a quarantine_dir exists) and the next source
+        chunk tried.  Returns ``(staged, source_index)``; raises
+        ``StopIteration`` on exhaustion.
+
+        Retry contract: a supervised source must be IDEMPOTENT on failure
+        — re-calling ``next()`` after an error re-attempts the SAME chunk
+        (``core.trace.ResumableTraceReader`` provides this for CSV
+        readers; a plain generator dies instead, which ``pull`` detects).
+        A source may additionally expose ``skip()`` to advance past a
+        poison chunk after quarantine; without it, a deterministically
+        failing position keeps failing and the consecutive-quarantine
+        limit aborts the stream (a broken source, not isolated poison)."""
+        idx = index
+        while True:
+            try:
+                raw = pull(idx)
+            except (StopIteration, SupervisorTimeout):
+                raise
+            except Exception as e:
+                if sup is None or not isinstance(e, sup.retry.retryable):
+                    raise
+                sup.quarantine(idx, e, policy=policy, config=config)
+                skip = getattr(it, "skip", None)
+                if skip is not None:
+                    skip()
+                idx += 1
+                continue
+            try:
+                staged_chunk = stage(raw, idx)
+            except (StopIteration, SupervisorTimeout):
+                raise
+            except Exception as e:
+                if sup is None:
+                    raise
+                sup.quarantine(idx, e, streams_chunk=raw, policy=policy,
+                               config=config)
+                idx += 1
+                continue
+            if sup is not None:
+                sup.mark_chunk_ok()
+            return staged_chunk, idx
+
+    def finish(result: PolicyResult, behind: int,
+               stall_us: float) -> PolicyResult:
+        extra = dict(chunks_behind=behind, host_stall_us=stall_us)
+        if sup is not None:
+            extra.update(retries=sup.retries, quarantined=sup.quarantined,
+                         rollbacks=sup.rollbacks)
+        return result._replace(**extra)
+
+    staged = stage(first, 0)
+    src = 0  # source index of the newest pulled chunk (quarantines count)
     meta["first_chunk_sha256"] = streams_fingerprint(staged)
+
+    auditor = None
+    if audit:
+        auditor = make_auditor(policy=policy, config=config,
+                               num_resources=max(n_res, 1))
+
+        def arr_sum(s: SchedStreams):
+            return jnp.asarray(s.n).sum(axis=-1)
+
+        arr_cum = jnp.zeros_like(arr_sum(staged))
+        audit_zero = arr_cum
 
     start = 0
     state: tuple | None = None
     partial: PolicyResult | None = None
     if resume:
-        latest = ckpt.latest_step(checkpoint_dir)
+        if sup is not None:
+            # rollback: walk back over corrupt boundaries (counted on
+            # PolicyResult.rollbacks + CheckpointRollbackWarning) to the
+            # newest checkpoint that still verifies
+            latest, corrupt = ckpt.latest_valid_step(checkpoint_dir)
+            sup.note_rollback(corrupt, checkpoint_dir)
+        else:
+            # unsupervised: a corrupt newest checkpoint surfaces as a
+            # typed CheckpointCorruptError from read_manifest/_load_step
+            latest = ckpt.latest_step(checkpoint_dir)
         if latest is not None:
             extra = ckpt.read_manifest(checkpoint_dir, latest)["extra"]
             stale = {k: (extra.get(k), v) for k, v in meta.items()
@@ -332,25 +544,29 @@ def stream_policy(chunks: Iterable, *, policy: str = "bfjs",
             state, partial = _load_step(checkpoint_dir, latest)
             start = latest
             # skip the chunks already executed (the source re-iterates
-            # deterministically; chunk 0's fingerprint was checked above)
-            skipped = 1  # `first` is chunk 0
+            # deterministically — poison chunks quarantine again under
+            # supervision, keeping the alignment; chunk 0's fingerprint
+            # was checked above)
+            if audit:
+                arr_cum = arr_cum + arr_sum(staged)
+            skipped = 1  # `first` is executed chunk 0
             while skipped < start:
                 try:
-                    nxt = next(it)
+                    done, src = pull_staged(src + 1)
                 except StopIteration:
                     raise ValueError(
                         f"checkpoint says {start} chunks were executed "
                         f"but the iterator ran out after {skipped} — "
                         "resuming a DIFFERENT (shorter) stream?") from None
-                prepare(nxt, skipped)  # shape check only; result dropped
+                if audit:
+                    arr_cum = arr_cum + arr_sum(done)
                 skipped += 1
             if start >= 1:
                 try:
-                    staged = prepare(next(it), start)
+                    staged, src = pull_staged(src + 1)
                 except StopIteration:
                     # stream fully executed already: return the checkpoint
-                    return partial._replace(chunks_behind=0,
-                                            host_stall_us=0.0)
+                    return finish(partial, 0, 0.0)
 
     concat_axis = 1 if ensemble else 0
     dep_off = (lambda p: p.departed[..., -1:]) if ensemble \
@@ -366,9 +582,19 @@ def stream_policy(chunks: Iterable, *, policy: str = "bfjs",
     executed = 0
     chunks_behind = 0
     host_stall = 0.0
-    inflight: deque = deque()  # one representative leaf per dispatch
+    inflight: deque = deque()  # (chunk index, representative leaf)
     i = start
     exhausted = False
+
+    def drain_one() -> None:
+        ck, leaf = inflight.popleft()
+        if sup is not None and sup.compute_timeout is not None:
+            sup.watch("device compute",
+                      lambda: jax.block_until_ready(leaf),
+                      sup.compute_timeout, chunk_index=ck)
+        else:
+            jax.block_until_ready(leaf)
+
     while not exhausted:
         if stop_after_chunks is not None and executed >= stop_after_chunks:
             break
@@ -377,32 +603,51 @@ def stream_policy(chunks: Iterable, *, policy: str = "bfjs",
         # time — the healthy direction of backpressure.
         while len(inflight) > 1:
             t0 = time.perf_counter()
-            jax.block_until_ready(inflight.popleft())
+            drain_one()
             host_stall += time.perf_counter() - t0
+        if audit:
+            chunk_arr = arr_sum(staged)
         res, state = runner(staged, state)
-        inflight.append(res.queue_len)
+        inflight.append((i, res.queue_len))
+        ready_leaf = res.queue_len
         # host-side work overlapped against the device: pull + stage the
         # NEXT chunk while this one computes
         try:
-            nxt = next(it)
+            staged, src = pull_staged(src + 1)
         except StopIteration:
             exhausted = True
-        else:
-            staged = prepare(nxt, i + 1)
-        if not _is_ready(res.queue_len):
+        if not _is_ready(ready_leaf):
             pass  # device still busy: ingestion kept up
         elif not exhausted:
             chunks_behind += 1  # device idle before the host had chunk N+1
+        if audit:
+            dep_base = audit_zero if partial is None \
+                else partial.departed[..., -1]
         partial = fold(partial, res)
+        if audit:
+            arr_cum = arr_cum + chunk_arr
+            # the margins check syncs on this chunk's outputs — the price
+            # of per-chunk auditing is one pipeline sync per chunk
+            auditor(arr_cum, res, dep_base, chunk_index=i)
         executed += 1
         i += 1
         if checkpoint_dir is not None:
             # ckpt pulls arrays to host — synchronizes, trading pipeline
             # overlap for crash-safety at every boundary
-            _save_step(checkpoint_dir, i, {"state": state,
-                                           "partial": partial}, meta)
+            payload = {"state": state, "partial": partial}
+            if sup is None:
+                _save_step(checkpoint_dir, i, payload, meta)
+            else:
+                step = i
+                sup.call(
+                    "checkpoint write",
+                    lambda: _save_step(checkpoint_dir, step, payload, meta),
+                    chunk_index=step - 1)
+    # drain the tail of the pipeline so a compute watchdog covers the
+    # final dispatch too
+    while inflight:
+        drain_one()
     if partial is None:
         raise ValueError("nothing to run: stop_after_chunks=0 with no "
                          "checkpoint to return")
-    return partial._replace(chunks_behind=chunks_behind,
-                            host_stall_us=host_stall * 1e6)
+    return finish(partial, chunks_behind, host_stall * 1e6)

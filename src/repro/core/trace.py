@@ -422,6 +422,72 @@ def iter_trace_csv(path, *, chunk_rows: int,
         raise ValueError(f"{path}: no usable rows{detail}")
 
 
+class ResumableTraceReader:
+    """Re-openable :func:`iter_trace_csv` for supervised streaming.
+
+    A plain generator dies on the first exception it raises — a retried
+    ``next()`` then yields ``StopIteration``, which reads as end-of-stream
+    and would silently truncate the trace.  This wrapper makes the reader
+    actually retryable: after an attempt fails, the NEXT ``next()`` call
+    re-opens the file from scratch and fast-forwards past the chunks
+    already emitted, so the supervisor's retry-with-backoff
+    (``core.engine.supervisor``) sees each chunk until it either parses or
+    exhausts its retries.  ``reopens`` counts the recoveries.
+
+    Fast-forwarding re-parses the file head — O(file) per recovery, the
+    price of supporting plain (non-seekable-safe) CSV sources.  Determinism
+    holds because :func:`iter_trace_csv` is a pure function of the file
+    contents: the re-read emits bit-identical chunks.
+
+    ``_open`` is the injection seam the chaos harness uses to interpose
+    flaky transports; production code never overrides it.
+    """
+
+    def __init__(self, path, **kwargs):
+        self.path = path
+        self.kwargs = kwargs
+        self.reopens = 0
+        self._emitted = 0
+        self._gen = None
+
+    def _open(self):
+        return iter_trace_csv(self.path, **self.kwargs)
+
+    def __iter__(self):
+        return self
+
+    def __next__(self) -> Trace:
+        if self._gen is None:
+            gen = self._open()
+            if self._emitted:
+                self.reopens += 1
+                with warnings.catch_warnings():
+                    # the skipped-rows summary already fired on the first
+                    # pass; don't duplicate it while fast-forwarding
+                    warnings.simplefilter("ignore")
+                    for k in range(self._emitted):
+                        try:
+                            next(gen)
+                        except StopIteration:
+                            raise OSError(
+                                f"{self.path}: shrank between reopens — "
+                                f"only {k} chunk(s) left of the "
+                                f"{self._emitted} already emitted; the "
+                                "file changed underneath the stream"
+                            ) from None
+            self._gen = gen
+        try:
+            out = next(self._gen)
+        except StopIteration:
+            raise
+        except BaseException:
+            # drop the dead generator; the retry re-opens + fast-forwards
+            self._gen = None
+            raise
+        self._emitted += 1
+        return out
+
+
 # ---------------------------------------------------------------------------
 # Google-2019 machine-events schema adapter
 # ---------------------------------------------------------------------------

@@ -214,8 +214,12 @@ class ServingEngine:
 
     def __init__(self, cfg: ModelConfig, params, num_replicas: int = 2,
                  b_slots: int = 4, c_max: int = 128, policy: str = "bf",
-                 admission: str = "host"):
+                 admission: str = "host", audit: bool = False):
         self.cfg = cfg
+        #: opt-in runtime invariant auditor (DESIGN.md §14): every tick
+        #: checks request conservation + slot-map consistency and raises a
+        #: typed InvariantViolation instead of serving on corrupt state
+        self.audit = audit
         self.replicas = [Replica(cfg, params, b_slots, c_max)
                          for _ in range(num_replicas)]
         if admission == "host":
@@ -295,7 +299,62 @@ class ServingEngine:
         self.stats["queue_len"].append(self.admission.queue_len())
         self.stats["active"].append(
             sum(len(rep.active()) for rep in self.replicas))
+        if self.audit:
+            self.check_invariants()
         return finished_all
+
+    def check_invariants(self) -> None:
+        """Audit the engine's conservation laws (``audit=True`` runs this
+        every tick; callable directly for forensics):
+
+        * request conservation — every submitted request is exactly one
+          of queued / active-in-a-slot / completed;
+        * slot-map consistency — each resident request's recorded
+          ``(replica, slot)`` matches where it actually sits;
+        * admission residuals — nonnegative and within replica capacity
+          (``admission="live"`` additionally syncs its device-side
+          invalid-release counter via ``queue_len`` above).
+
+        Raises :class:`~repro.core.engine.supervisor.InvariantViolation`
+        (a ``ValueError``) naming the failed counter.
+        """
+        from repro.core.engine.supervisor import InvariantViolation
+        active = 0
+        for idx, rep in enumerate(self.replicas):
+            for slot, r in enumerate(rep.slots):
+                if r is None:
+                    continue
+                active += 1
+                if r.replica != idx or r.slot != slot:
+                    raise InvariantViolation(
+                        f"slot map corrupt: request {r.rid} sits in "
+                        f"replica {idx} slot {slot} but records "
+                        f"(replica={r.replica}, slot={r.slot})",
+                        invariant="slot_map")
+                if r.done:
+                    raise InvariantViolation(
+                        f"request {r.rid} is done but still occupies "
+                        f"replica {idx} slot {slot}",
+                        invariant="slot_map")
+        queued = self.admission.queue_len()
+        done = len(self.completed)
+        submitted = len(self._by_rid)
+        if queued + active + done != submitted:
+            raise InvariantViolation(
+                f"request conservation failed: queued {queued} + active "
+                f"{active} + completed {done} != submitted {submitted}",
+                invariant="request_conservation")
+        residual = np.asarray(self.admission.residual)
+        if (residual < 0).any():
+            raise InvariantViolation(
+                f"negative admission residual(s): {residual.tolist()}",
+                invariant="queue_nonneg")
+        from repro.core.quantize import RES
+        if (residual > RES).any():
+            raise InvariantViolation(
+                f"admission residual(s) exceed replica capacity {RES}: "
+                f"{residual.tolist()}",
+                invariant="occupancy_capacity")
 
     def run(self, max_steps: int = 1000) -> list[Request]:
         for _ in range(max_steps):

@@ -268,11 +268,13 @@ class LiveAdmission:
     def _check(self) -> None:
         inv = int(self.state.invalid)
         if inv:
-            raise ValueError(
+            from repro.core.engine.supervisor import InvariantViolation
+            raise InvariantViolation(
                 f"{inv} invalid release(s) since the last sync — "
                 "double release, unknown replica, or size mismatch "
                 "(the host controller raises eagerly; the device step "
-                "counts and raises on sync)")
+                "counts and raises on sync)",
+                invariant="occupancy_capacity")
 
     def queue_len(self) -> int:
         self._check()

@@ -1,0 +1,737 @@
+"""Supervised streaming (core/engine/supervisor.py): retry/backoff,
+watchdog timeouts, checkpoint rollback, poison-chunk quarantine and the
+runtime invariant auditor — plus the checkpoint-integrity layer in
+repro/checkpoint/ckpt.py and the ResumableTraceReader retry seam.
+
+The load-bearing contract: transient-fault recovery is BIT-EXACT — a
+supervised run through flaky ingestion/staging/checkpoint paths produces
+the same trajectory as the unperturbed run; only a QUARANTINED chunk
+(deterministic poison, always counted) changes the trajectory, and then
+exactly by that chunk's absence.
+"""
+import json
+import os
+import signal
+import subprocess
+import sys
+import time
+import warnings
+
+import jax
+import numpy as np
+import pytest
+
+from repro.checkpoint import ckpt
+from repro.core import trace as trace_mod
+from repro.core.engine import (CheckpointRollbackWarning, InvariantViolation,
+                               RetryPolicy, Supervisor, SupervisorError,
+                               SupervisorTimeout, SupervisorWarning,
+                               audit_result, iter_stream_chunks,
+                               make_streams, run_policy_streams,
+                               stream_chunks_from_trace, stream_policy)
+from repro.core.engine.streams import streams_from_trace
+
+FIXTURE = os.path.join(os.path.dirname(__file__), "data",
+                       "google_like_50.csv")
+
+_TRAJ = ("queue_len", "occupancy", "departed", "dropped", "truncated",
+         "preempted", "requeued", "lost")
+
+_CFG = dict(L=4, K=5, Qcap=48)
+
+
+def assert_bitmatch(a, b, ctx=""):
+    for f in _TRAJ:
+        x, y = getattr(a, f), getattr(b, f)
+        assert (x is None) == (y is None), (ctx, f)
+        if x is not None:
+            np.testing.assert_array_equal(np.asarray(x), np.asarray(y),
+                                          err_msg=f"{ctx}: {f}")
+
+
+def _synth_streams(horizon=40, fault_rate=0.0):
+    return make_streams(
+        jax.random.PRNGKey(7), lam=1.3, mu=0.08,
+        sampler=lambda k, s: jax.random.uniform(k, s, minval=0.1,
+                                                maxval=0.7),
+        L=4, K=5, A_max=4, horizon=horizon,
+        **({"fault_rate": fault_rate, "repair_rate": 0.3}
+           if fault_rate else {}))
+
+
+def _sup(**kw):
+    kw.setdefault("sleep", lambda s: None)  # no wall-clock in tests
+    return Supervisor(**kw)
+
+
+class ChunkSource:
+    """Index-addressed, idempotent-on-failure chunk source with the
+    optional ``skip()`` quarantine protocol — the supervised-source
+    contract ``ResumableTraceReader`` implements for CSV files."""
+
+    def __init__(self, chunks, poison=(), transient=None):
+        self.chunks = list(chunks)
+        self.i = 0
+        self.poison = set(poison)                # fail forever
+        self.transient = dict(transient or {})   # fail n times, then work
+
+    def __iter__(self):
+        return self
+
+    def skip(self):
+        self.i += 1
+
+    def __next__(self):
+        if self.i in self.poison:
+            raise OSError(f"poison chunk {self.i}")
+        n = self.transient.get(self.i, 0)
+        if n:
+            self.transient[self.i] = n - 1
+            raise OSError(f"transient fault on chunk {self.i}")
+        if self.i >= len(self.chunks):
+            raise StopIteration
+        out = self.chunks[self.i]
+        self.i += 1
+        return out
+
+
+# ---------------------------------------------------------------------------
+# RetryPolicy / Supervisor.call mechanics
+# ---------------------------------------------------------------------------
+
+def test_backoff_schedule_is_seeded_capped_and_jittered():
+    import random
+    p = RetryPolicy(base_delay=0.1, max_delay=0.5, jitter=0.5, seed=3)
+    d1 = [p.delay(k, random.Random(3)) for k in range(1, 7)][0]
+    d2 = [p.delay(k, random.Random(3)) for k in range(1, 7)][0]
+    assert d1 == d2  # seeded => reproducible
+    rng = random.Random(3)
+    delays = [p.delay(k, rng) for k in range(1, 8)]
+    for k, d in enumerate(delays, start=1):
+        base = min(0.5, 0.1 * 2.0 ** (k - 1))
+        assert base * 0.5 <= d <= base  # jitter shrinks, never grows
+    assert max(delays) <= 0.5  # capped
+
+
+def test_call_retries_then_reraises_and_counts():
+    sup = _sup(retry=RetryPolicy(max_retries=3))
+    calls = []
+
+    def flaky():
+        calls.append(1)
+        raise OSError("always")
+
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", SupervisorWarning)
+        with pytest.raises(OSError):
+            sup.call("ingest", flaky)
+    assert len(calls) == 4          # 1 attempt + 3 retries
+    assert sup.retries == 3
+
+
+def test_call_does_not_retry_non_retryable():
+    sup = _sup(retry=RetryPolicy(max_retries=3))
+    calls = []
+
+    def broken():
+        calls.append(1)
+        raise ValueError("logic bug")
+
+    with pytest.raises(ValueError):
+        sup.call("stage", broken)
+    assert len(calls) == 1 and sup.retries == 0
+
+
+def test_call_warns_loudly_per_retry():
+    attempts = [2]
+    sup = _sup(retry=RetryPolicy(max_retries=5))
+
+    def flaky():
+        if attempts[0]:
+            attempts[0] -= 1
+            raise OSError("transient")
+        return "ok"
+
+    with pytest.warns(SupervisorWarning, match="retry"):
+        assert sup.call("ingest", flaky, chunk_index=7) == "ok"
+    assert sup.retries == 2
+
+
+def test_watchdog_times_out_with_typed_escalation():
+    sup = Supervisor(compute_timeout=0.05)
+    with pytest.raises(SupervisorTimeout) as e:
+        sup.watch("device compute", lambda: time.sleep(1.0), 0.05,
+                  chunk_index=3)
+    assert e.value.phase == "device compute"
+    assert e.value.chunk_index == 3
+    assert sup.timeouts == 1
+
+
+def test_watchdog_timeout_is_not_retried():
+    sup = _sup(retry=RetryPolicy(max_retries=5))
+    with pytest.raises(SupervisorTimeout):
+        sup.call("stage", lambda: time.sleep(1.0), timeout=0.05)
+    assert sup.retries == 0
+
+
+# ---------------------------------------------------------------------------
+# Supervised streaming: transient recovery is bit-exact
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy,extra", [("bfjs", {}), ("vqs", {"J": 3})])
+def test_transient_ingestion_faults_recover_bit_exact(policy, extra):
+    streams = _synth_streams()
+    cfg = dict(_CFG, A_max=4, **extra)
+    chunks = list(iter_stream_chunks(streams, 7))
+    ref = stream_policy(iter(chunks), policy=policy, **cfg)
+    sup = _sup(retry=RetryPolicy(max_retries=3))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", SupervisorWarning)
+        res = stream_policy(ChunkSource(chunks, transient={1: 2, 3: 1}),
+                            policy=policy, supervisor=sup, audit=True,
+                            **cfg)
+    assert_bitmatch(ref, res, f"{policy}-transient")
+    assert res.retries == 3
+    assert res.quarantined == 0 and res.rollbacks == 0
+
+
+def test_unsupervised_result_has_no_supervision_counters():
+    streams = _synth_streams()
+    res = stream_policy(iter_stream_chunks(streams, 7), policy="bfjs",
+                        **dict(_CFG, A_max=4))
+    assert res.retries is None
+    assert res.quarantined is None
+    assert res.rollbacks is None
+
+
+def test_dead_plain_generator_is_detected_not_truncated():
+    streams = _synth_streams()
+    chunks = list(iter_stream_chunks(streams, 7))
+
+    def dying():
+        for i, c in enumerate(chunks):
+            if i == 2:
+                raise OSError("die once")
+            yield c
+
+    sup = _sup(retry=RetryPolicy(max_retries=2))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", SupervisorWarning)
+        with pytest.raises(SupervisorError, match="ResumableTraceReader"):
+            stream_policy(dying(), policy="bfjs", supervisor=sup,
+                          **dict(_CFG, A_max=4))
+
+
+# ---------------------------------------------------------------------------
+# Poison-chunk quarantine
+# ---------------------------------------------------------------------------
+
+def test_quarantine_skips_with_manifest_and_exact_accounting(tmp_path):
+    streams = _synth_streams()
+    cfg = dict(_CFG, A_max=4)
+    chunks = list(iter_stream_chunks(streams, 7))
+    # ground truth: the same stream with the poison chunk simply absent
+    ref = stream_policy(iter(chunks[:2] + chunks[3:]), policy="bfjs", **cfg)
+    qdir = tmp_path / "quarantine"
+    sup = _sup(retry=RetryPolicy(max_retries=2), quarantine_dir=str(qdir))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", SupervisorWarning)
+        res = stream_policy(ChunkSource(chunks, poison={2}), policy="bfjs",
+                            supervisor=sup, **cfg)
+    assert res.quarantined == 1
+    assert res.retries == 2           # the poison exhausted its retries
+    assert_bitmatch(ref, res, "poison-minus-chunk")
+    man = json.loads((qdir / "chunk_00000002" / "manifest.json")
+                     .read_text())
+    assert man["chunk_index"] == 2
+    assert man["error_type"] == "OSError"
+    assert man["policy"] == "bfjs"
+    assert "poison" in man["error"]
+
+
+def test_quarantine_refused_without_a_quarantine_dir():
+    streams = _synth_streams()
+    chunks = list(iter_stream_chunks(streams, 7))
+    sup = _sup(retry=RetryPolicy(max_retries=1))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", SupervisorWarning)
+        with pytest.raises(SupervisorError, match="quarantine_dir"):
+            stream_policy(ChunkSource(chunks, poison={2}), policy="bfjs",
+                          supervisor=sup, **dict(_CFG, A_max=4))
+
+
+def test_consecutive_quarantines_abort_a_broken_source(tmp_path):
+    streams = _synth_streams()
+    chunks = list(iter_stream_chunks(streams, 7))
+    sup = _sup(retry=RetryPolicy(max_retries=0),
+               quarantine_dir=str(tmp_path / "q"),
+               max_consecutive_quarantines=2)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", SupervisorWarning)
+        with pytest.raises(SupervisorError, match="consecutive"):
+            stream_policy(ChunkSource(chunks, poison={1, 2, 3}),
+                          policy="bfjs", supervisor=sup,
+                          **dict(_CFG, A_max=4))
+    assert sup.quarantined == 3
+
+
+def test_staging_poison_preserves_planes(tmp_path):
+    """A chunk that ingests but fails staging (mid-stream shape change) is
+    quarantined WITH its stream planes for forensics."""
+    streams = _synth_streams()
+    chunks = list(iter_stream_chunks(streams, 7))
+    # widen the arrival lanes of chunk 2: staging rejects the shape change
+    bad = chunks[2]._replace(
+        sizes=np.concatenate([np.asarray(chunks[2].sizes)] * 2, axis=1))
+    seq = chunks[:2] + [bad] + chunks[3:]
+    ref = stream_policy(iter(chunks[:2] + chunks[3:]), policy="bfjs",
+                        **dict(_CFG, A_max=4))
+    qdir = tmp_path / "q"
+    sup = _sup(quarantine_dir=str(qdir))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", SupervisorWarning)
+        res = stream_policy(iter(seq), policy="bfjs", supervisor=sup,
+                            **dict(_CFG, A_max=4))
+    assert res.quarantined == 1
+    assert_bitmatch(ref, res, "staging-poison")
+    man = json.loads((qdir / "chunk_00000002" / "manifest.json")
+                     .read_text())
+    assert man["has_planes"] is True
+    saved = np.load(qdir / "chunk_00000002" / "chunk.npz")
+    assert saved["sizes"].shape[1] == 8  # the corrupt width, preserved
+
+
+# ---------------------------------------------------------------------------
+# Checkpoint integrity + rollback
+# ---------------------------------------------------------------------------
+
+def _corrupt(path, mode):
+    if mode == "garbage":
+        with open(path, "r+b") as f:
+            f.seek(0)
+            f.write(b"\x00garbage\x00garbage\x00")
+    elif mode == "truncate":
+        size = os.path.getsize(path)
+        with open(path, "r+b") as f:
+            f.truncate(max(size // 2, 1))
+    else:
+        raise AssertionError(mode)
+
+
+@pytest.mark.parametrize("mode", ["garbage", "truncate"])
+def test_load_arrays_raises_typed_error_naming_path(tmp_path, mode):
+    ckpt.save(str(tmp_path), 1, {"x": np.arange(5)})
+    victim = tmp_path / "step_00000001" / "arrays.npz"
+    _corrupt(victim, mode)
+    with pytest.raises(ckpt.CheckpointCorruptError) as e:
+        ckpt.load_arrays(str(tmp_path), 1)
+    assert str(victim) in str(e.value)
+
+
+def test_corrupt_manifest_raises_typed_error(tmp_path):
+    ckpt.save(str(tmp_path), 1, {"x": np.arange(5)})
+    (tmp_path / "step_00000001" / "manifest.json").write_text("{not json")
+    with pytest.raises(ckpt.CheckpointCorruptError):
+        ckpt.read_manifest(str(tmp_path), 1)
+
+
+def test_latest_valid_step_walks_back_over_corruption(tmp_path):
+    for step in (1, 2, 3):
+        ckpt.save(str(tmp_path), step, {"x": np.arange(step)})
+    _corrupt(tmp_path / "step_00000003" / "arrays.npz", "garbage")
+    _corrupt(tmp_path / "step_00000002" / "arrays.npz", "truncate")
+    latest, corrupt = ckpt.latest_valid_step(str(tmp_path))
+    assert latest == 1
+    assert sorted(corrupt) == [2, 3]
+
+
+def test_no_checkpoint_survives(tmp_path):
+    ckpt.save(str(tmp_path), 1, {"x": np.arange(3)})
+    _corrupt(tmp_path / "step_00000001" / "arrays.npz", "garbage")
+    latest, corrupt = ckpt.latest_valid_step(str(tmp_path))
+    assert latest is None and corrupt == [1]
+
+
+@pytest.mark.parametrize("mode", ["garbage", "truncate"])
+def test_rollback_resume_is_bit_exact(tmp_path, mode):
+    streams = _synth_streams()
+    cfg = dict(_CFG, A_max=4)
+    ck = tmp_path / "ck"
+    ref = stream_policy(iter_stream_chunks(streams, 7), policy="bfjs",
+                        **cfg)
+    stream_policy(iter_stream_chunks(streams, 7), policy="bfjs",
+                  checkpoint_dir=str(ck), **cfg)
+    steps = ckpt.list_steps(str(ck))
+    _corrupt(ck / f"step_{steps[-1]:08d}" / "arrays.npz", mode)
+
+    # unsupervised resume surfaces the damage as a typed error (satellite:
+    # never a raw zipfile/numpy error)
+    with pytest.raises(ckpt.CheckpointCorruptError):
+        stream_policy(iter_stream_chunks(streams, 7), policy="bfjs",
+                      checkpoint_dir=str(ck), resume=True, **cfg)
+
+    # supervised resume rolls back to the last good boundary, warns,
+    # counts — and the result is bit-identical to the unperturbed run
+    sup = _sup()
+    with pytest.warns(CheckpointRollbackWarning, match="corrupt"):
+        res = stream_policy(iter_stream_chunks(streams, 7), policy="bfjs",
+                            checkpoint_dir=str(ck), resume=True,
+                            supervisor=sup, **cfg)
+    assert res.rollbacks == 1
+    assert_bitmatch(ref, res, f"rollback-{mode}")
+
+
+def test_rollback_to_nothing_restarts_from_scratch(tmp_path):
+    streams = _synth_streams()
+    cfg = dict(_CFG, A_max=4)
+    ck = tmp_path / "ck"
+    ref = stream_policy(iter_stream_chunks(streams, 7), policy="bfjs",
+                        **cfg)
+    stream_policy(iter_stream_chunks(streams, 7), policy="bfjs",
+                  checkpoint_dir=str(ck), stop_after_chunks=2, **cfg)
+    for step in ckpt.list_steps(str(ck)):
+        _corrupt(ck / f"step_{step:08d}" / "arrays.npz", "garbage")
+    sup = _sup()
+    with pytest.warns(CheckpointRollbackWarning):
+        res = stream_policy(iter_stream_chunks(streams, 7), policy="bfjs",
+                            checkpoint_dir=str(ck), resume=True,
+                            supervisor=sup, **cfg)
+    assert res.rollbacks == 2
+    assert_bitmatch(ref, res, "rollback-all")
+
+
+def test_fully_cached_supervised_resume_reports_counters(tmp_path):
+    """Satellite pin: a fully-cached resume returns the checkpointed
+    result with the BACKPRESSURE COUNTERS RESET TO ZERO — they measure
+    this call's host/device overlap, and this call did no pipelining —
+    and, under supervision, the supervision counters attached."""
+    streams = _synth_streams()
+    cfg = dict(_CFG, A_max=4)
+    ck = tmp_path / "ck"
+    stream_policy(iter_stream_chunks(streams, 7), policy="bfjs",
+                  checkpoint_dir=str(ck), **cfg)
+    # unsupervised: counters reset, supervision fields stay None
+    res = stream_policy(iter_stream_chunks(streams, 7), policy="bfjs",
+                        checkpoint_dir=str(ck), resume=True, **cfg)
+    assert int(res.chunks_behind) == 0
+    assert float(res.host_stall_us) == 0.0
+    assert res.retries is None and res.quarantined is None \
+        and res.rollbacks is None
+    # supervised: same reset plus zeroed supervision accounting
+    res2 = stream_policy(iter_stream_chunks(streams, 7), policy="bfjs",
+                         checkpoint_dir=str(ck), resume=True,
+                         supervisor=_sup(), **cfg)
+    assert int(res2.chunks_behind) == 0
+    assert float(res2.host_stall_us) == 0.0
+    assert (res2.retries, res2.quarantined, res2.rollbacks) == (0, 0, 0)
+
+
+def test_supervised_checkpoint_write_retries(tmp_path, monkeypatch):
+    from repro.core.engine import streaming as streaming_mod
+    streams = _synth_streams()
+    cfg = dict(_CFG, A_max=4)
+    ref = stream_policy(iter_stream_chunks(streams, 7), policy="bfjs",
+                        **cfg)
+    real = streaming_mod._save_step
+    fails = {2: 2}  # step 2's save fails twice, then lands
+
+    def flaky_save(checkpoint_dir, step, payload, extra):
+        if fails.get(step, 0):
+            fails[step] -= 1
+            raise OSError(f"disk hiccup at step {step}")
+        return real(checkpoint_dir, step, payload, extra)
+
+    monkeypatch.setattr(streaming_mod, "_save_step", flaky_save)
+    sup = _sup(retry=RetryPolicy(max_retries=3))
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore", SupervisorWarning)
+        res = stream_policy(iter_stream_chunks(streams, 7), policy="bfjs",
+                            checkpoint_dir=str(tmp_path / "ck"),
+                            supervisor=sup, **cfg)
+    assert res.retries == 2
+    assert_bitmatch(ref, res, "flaky-ckpt-write")
+
+
+# ---------------------------------------------------------------------------
+# Runtime invariant auditor
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("policy,extra", [
+    ("bfjs", {}), ("vqs", {"J": 3}), ("vqs-bf", {"J": 3}),
+])
+def test_audit_passes_on_healthy_runs(policy, extra):
+    streams = _synth_streams(fault_rate=0.05 if policy == "bfjs" else 0.0)
+    cfg = dict(_CFG, A_max=4, **extra)
+    res = stream_policy(iter_stream_chunks(streams, 7), policy=policy,
+                        audit=True, **cfg)
+    assert res.truncated is not None  # ran to completion
+
+
+def test_audit_passes_on_bfjs_mr_multi_resource():
+    tr = trace_mod.synthesize_google_like_trace(120, 60, seed=3)
+    st = streams_from_trace(tr.arrival_slots,
+                            np.stack([tr.cpu, tr.mem], 1),
+                            np.minimum(tr.durations, 20), A_max=8)
+    stream_policy(iter_stream_chunks(st, 13), policy="bfjs-mr",
+                  audit=True, L=4, K=6, Qcap=64)
+
+
+def test_audit_result_detects_tampered_occupancy():
+    streams = _synth_streams()
+    cfg = dict(_CFG, A_max=4)
+    res = run_policy_streams(streams, policy="bfjs", engine="scan", **cfg)
+    audit_result(streams, res, policy="bfjs", config=_CFG)  # healthy
+    evil = res._replace(occupancy=np.asarray(res.occupancy) + 100.0)
+    with pytest.raises(InvariantViolation, match="occupancy_capacity"):
+        audit_result(streams, evil, policy="bfjs", config=_CFG)
+
+
+def test_audit_result_detects_conservation_break():
+    streams = _synth_streams()
+    cfg = dict(_CFG, A_max=4)
+    res = run_policy_streams(streams, policy="bfjs", engine="scan", **cfg)
+    evil = res._replace(departed=np.asarray(res.departed) + 50)
+    with pytest.raises(InvariantViolation, match="in_flight_nonneg"):
+        audit_result(streams, evil, policy="bfjs", config=_CFG)
+
+
+def test_audit_names_chunk_and_invariant(monkeypatch):
+    """Tamper with the engine output mid-stream: the violation names the
+    chunk index and the failed counter."""
+    from repro.core.engine import chunked as chunked_mod
+    from repro.core.engine import streaming as streaming_mod
+    streams = _synth_streams()
+    real = chunked_mod._STATEFUL["bfjs"]
+
+    def tampered(s, st, config):
+        res, new_st = real(s, st, config)
+        return res._replace(queue_len=res.queue_len - 1000), new_st
+
+    monkeypatch.setitem(streaming_mod._STATEFUL, "bfjs", tampered)
+    with pytest.raises(InvariantViolation) as e:
+        stream_policy(iter_stream_chunks(streams, 7), policy="bfjs",
+                      audit=True, **dict(_CFG, A_max=4))
+    assert e.value.invariant == "queue_nonneg"
+    assert e.value.chunk_index == 0
+    assert isinstance(e.value, ValueError)
+
+
+def test_audit_requires_explicit_L_and_K():
+    streams = _synth_streams()
+    with pytest.raises(ValueError, match="L= and K="):
+        stream_policy(iter_stream_chunks(streams, 7), policy="bfjs",
+                      audit=True, A_max=4, Qcap=48)
+
+
+def test_api_audit_knob():
+    streams = _synth_streams()
+    cfg = dict(_CFG, A_max=4)
+    run_policy_streams(streams, policy="bfjs", engine="scan", audit=True,
+                      **cfg)
+    run_policy_streams(streams, policy="bfjs", engine="scan", chunk=13,
+                       audit=True, **cfg)
+
+
+# ---------------------------------------------------------------------------
+# Host-side invariant raises (satellite: asserts -> typed raises)
+# ---------------------------------------------------------------------------
+
+def test_cluster_state_invariants_raise_not_assert():
+    from repro.core.cluster_state import Cluster
+    cs = Cluster(L=3)
+    cs.check_invariants()  # healthy
+    cs.residual[1] -= 5    # corrupt the books
+    with pytest.raises(InvariantViolation, match="residual mismatch"):
+        cs.check_invariants()
+    cs.residual[1] -= cs.capacity[1] * 2  # now negative too
+    with pytest.raises(ValueError):       # documented base type preserved
+        cs.check_invariants()
+    # and the checks survive python -O (no assert statements left)
+    import inspect
+    src = inspect.getsource(Cluster.check_invariants)
+    assert "assert " not in src
+
+
+def test_serving_engine_audit_catches_corruption():
+    from repro.configs import get_smoke_config
+    from repro.models import model as M
+    from repro.serving.engine import Request, ServingEngine
+
+    cfg = get_smoke_config("llama3-8b")
+    params = M.init_params(cfg, jax.random.PRNGKey(0))
+    eng = ServingEngine(cfg, params, num_replicas=2, b_slots=2, c_max=64,
+                        audit=True)
+    rng = np.random.default_rng(0)
+    reqs = [Request(rid=i,
+                    prompt=rng.integers(0, 100, size=4).astype(np.int32),
+                    max_new=3) for i in range(4)]
+    eng.submit(reqs)
+    for _ in range(12):
+        eng.step()  # audited every tick
+    eng.check_invariants()
+    # corrupt the books: lose a completed request from the ledger
+    if eng.completed:
+        eng.completed.pop()
+        with pytest.raises(InvariantViolation,
+                           match="request conservation"):
+            eng.check_invariants()
+
+
+# ---------------------------------------------------------------------------
+# ResumableTraceReader
+# ---------------------------------------------------------------------------
+
+def _reader_kwargs():
+    cc, mc = trace_mod.scan_trace_maxima(FIXTURE)
+    return dict(chunk_rows=13, slot_seconds=10.0, cpu_capacity=cc,
+                mem_capacity=mc)
+
+
+def test_resumable_reader_matches_plain_reader():
+    kw = _reader_kwargs()
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        plain = list(trace_mod.iter_trace_csv(FIXTURE, **kw))
+        resum = list(trace_mod.ResumableTraceReader(FIXTURE, **kw))
+    assert len(plain) == len(resum) > 0
+    for a, b in zip(plain, resum):
+        for f in ("arrival_slots", "cpu", "mem", "durations"):
+            np.testing.assert_array_equal(getattr(a, f), getattr(b, f))
+
+
+class _FlakyReader(trace_mod.ResumableTraceReader):
+    """Transport that dies on its 3rd chunk for the first two passes."""
+
+    def __init__(self, *a, **k):
+        super().__init__(*a, **k)
+        self.passes = 0
+
+    def _open(self):
+        self.passes += 1
+        gen = super()._open()
+        if self.passes <= 2:
+            def wrap(g=gen):
+                for i, c in enumerate(g):
+                    if i == 2:
+                        raise OSError("flaky NFS")
+                    yield c
+            return wrap()
+        return gen
+
+
+def test_resumable_reader_recovers_bit_identical_chunks():
+    kw = _reader_kwargs()
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        plain = list(trace_mod.iter_trace_csv(FIXTURE, **kw))
+        fl = _FlakyReader(FIXTURE, **kw)
+        got = []
+        while True:
+            try:
+                got.append(next(fl))
+            except StopIteration:
+                break
+            except OSError:
+                continue  # the supervisor's retry, minimally
+    assert fl.reopens == 2
+    assert len(got) == len(plain)
+    for a, b in zip(plain, got):
+        np.testing.assert_array_equal(a.arrival_slots, b.arrival_slots)
+
+
+def test_supervised_trace_stream_end_to_end_bit_exact():
+    kw = _reader_kwargs()
+    cfg = dict(L=4, K=5, Qcap=48, J=3)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        clean = stream_policy(
+            stream_chunks_from_trace(trace_mod.iter_trace_csv(FIXTURE,
+                                                              **kw),
+                                     chunk_slots=16, A_max=12),
+            policy="vqs", **cfg)
+        res = stream_policy(
+            stream_chunks_from_trace(_FlakyReader(FIXTURE, **kw),
+                                     chunk_slots=16, A_max=12),
+            policy="vqs", supervisor=_sup(), audit=True, **cfg)
+    assert_bitmatch(clean, res, "flaky-trace-e2e")
+    assert res.retries == 2 and res.quarantined == 0
+
+
+def test_resumable_reader_detects_shrinking_file(tmp_path):
+    src = open(FIXTURE).read()
+    p = tmp_path / "t.csv"
+    p.write_text(src)
+    kw = _reader_kwargs()
+    r = trace_mod.ResumableTraceReader(str(p), **kw)
+    with warnings.catch_warnings():
+        warnings.simplefilter("ignore")
+        next(r)
+        next(r)
+        # fail the live generator, then shrink the file under it
+        r._gen = None
+        lines = src.splitlines()
+        p.write_text("\n".join(lines[:3]) + "\n")
+        with pytest.raises(OSError, match="shrank"):
+            next(r)
+
+
+# ---------------------------------------------------------------------------
+# SIGKILL + corruption end-to-end (subprocess)
+# ---------------------------------------------------------------------------
+
+_CHILD = r"""
+import sys
+import jax
+from repro.core.engine import make_streams, stream_policy, \
+    iter_stream_chunks
+from repro.core.engine import streaming as streaming_mod
+
+ckdir = sys.argv[1]
+kills_after = int(sys.argv[2])
+
+streams = make_streams(
+    jax.random.PRNGKey(7), lam=1.3, mu=0.08,
+    sampler=lambda k, s: jax.random.uniform(k, s, minval=0.1, maxval=0.7),
+    L=4, K=5, A_max=4, horizon=40)
+
+saves = [0]
+real = streaming_mod._save_step
+
+def killing_save(checkpoint_dir, step, payload, extra):
+    real(checkpoint_dir, step, payload, extra)
+    saves[0] += 1
+    if saves[0] >= kills_after:
+        import os, signal
+        os.kill(os.getpid(), signal.SIGKILL)
+
+streaming_mod._save_step = killing_save
+stream_policy(iter_stream_chunks(streams, 7), policy="bfjs",
+              checkpoint_dir=ckdir, L=4, K=5, Qcap=48, A_max=4)
+"""
+
+
+@pytest.mark.slow
+def test_sigkill_then_corruption_then_supervised_resume(tmp_path):
+    """The full chaos sequence: SIGKILL mid-stream, corrupt the newest
+    surviving checkpoint, supervised resume — bit-exact recovery."""
+    ck = tmp_path / "ck"
+    env = dict(os.environ, PYTHONPATH="src")
+    proc = subprocess.run(
+        [sys.executable, "-c", _CHILD, str(ck), "3"],
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+        env=env, capture_output=True, timeout=600)
+    assert proc.returncode == -signal.SIGKILL, proc.stderr.decode()
+    steps = ckpt.list_steps(str(ck))
+    assert steps, "no checkpoint survived the kill"
+    _corrupt(ck / f"step_{steps[-1]:08d}" / "arrays.npz", "truncate")
+
+    streams = _synth_streams()
+    cfg = dict(_CFG, A_max=4)
+    ref = stream_policy(iter_stream_chunks(streams, 7), policy="bfjs",
+                        **cfg)
+    with pytest.warns(CheckpointRollbackWarning):
+        res = stream_policy(iter_stream_chunks(streams, 7), policy="bfjs",
+                            checkpoint_dir=str(ck), resume=True,
+                            supervisor=_sup(), audit=True, **cfg)
+    assert res.rollbacks == 1
+    assert_bitmatch(ref, res, "sigkill-corrupt-resume")
